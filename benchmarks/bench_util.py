@@ -1,0 +1,86 @@
+"""Shared benchmark plumbing: timers, dataset cache, method registry."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.baselines import lsh, pq, tree
+from repro.core import beam_search, bruteforce, diversify, hnsw, nndescent
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> tuple[float, object]:
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+class AnnWorld:
+    """One dataset + every index the experiments need, built once."""
+
+    def __init__(self, base, queries, metric="l2", k_graph=20, key=None):
+        self.base, self.queries, self.metric = base, queries, metric
+        self.n = base.shape[0]
+        key = key or jax.random.PRNGKey(0)
+        self.gt = bruteforce.ground_truth(queries, base, 1, metric)
+        self.exh_time, _ = timeit(
+            lambda: bruteforce.exact_search(queries, base, 1, metric), iters=2
+        )
+        self.kgraph = nndescent.build_knn_graph(
+            base, nndescent.NNDescentConfig(k=k_graph), metric=metric, key=key
+        )
+        self.gd = diversify.build_gd_graph(base, self.kgraph, metric=metric)
+        self.dpg = diversify.build_dpg_graph(base, self.kgraph)
+        self.hnsw = hnsw.build_hnsw(
+            base,
+            hnsw.HnswConfig(M=max(8, k_graph // 2), knn_k=k_graph,
+                            brute_threshold=2048),
+            metric=metric, key=key,
+            bottom_graph=self.kgraph,
+        )
+        self.key = key
+
+    def recall_curve(self, graph_or_index, efs=(8, 16, 32, 64, 128),
+                     hierarchical=False):
+        """[(ef, recall@1, mean comps, wall time, speedup_time, speedup_comps)]"""
+        rows = []
+        q = self.queries
+        for ef in efs:
+            if hierarchical:
+                fn = lambda: hnsw.hnsw_search(q, self.base, graph_or_index, ef=ef,
+                                              metric=self.metric)
+            else:
+                nbrs = (
+                    graph_or_index.layers_neighbors[0]
+                    if isinstance(graph_or_index, hnsw.HnswIndex)
+                    else graph_or_index.neighbors
+                )
+                ent = beam_search.random_entries(self.key, self.n, q.shape[0],
+                                                 min(8, ef))
+                fn = lambda: beam_search.beam_search(
+                    q, self.base, nbrs, ent, ef=ef, k=1, metric=self.metric
+                )
+            wall, res = timeit(fn, iters=2)
+            recall = float((res.ids[:, 0] == self.gt[:, 0]).mean())
+            comps = float(res.n_comps.mean())
+            rows.append(
+                dict(ef=ef, recall=recall, comps=comps, wall=wall,
+                     speedup_time=self.exh_time / max(wall, 1e-9),
+                     speedup_comps=self.n / max(comps, 1.0))
+            )
+        return rows
+
+
+def speedup_at_recall(rows, target):
+    """Paper Fig. 3 metric: best speedup among settings reaching the target."""
+    ok = [r for r in rows if r["recall"] >= target]
+    if not ok:
+        return None
+    return max(ok, key=lambda r: r["speedup_comps"])

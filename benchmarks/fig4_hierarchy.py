@@ -1,0 +1,18 @@
+"""Paper Fig. 4: HNSW vs flat-HNSW (same bottom layer, random seeds) across
+dimensionality (claim C2: hierarchy helps at d<=8, fades by d~32)."""
+from __future__ import annotations
+
+
+from .bench_util import AnnWorld
+
+
+def run(world: AnnWorld, name: str, out=print):
+    hier = world.recall_curve(world.hnsw, hierarchical=True)
+    flat = world.recall_curve(world.hnsw, hierarchical=False)
+    for h, f in zip(hier, flat):
+        out(
+            f"fig4/{name}/ef={h['ef']},hnsw_recall={h['recall']:.3f},"
+            f"hnsw_comps={h['comps']:.0f},flat_recall={f['recall']:.3f},"
+            f"flat_comps={f['comps']:.0f}"
+        )
+    return {"hnsw": hier, "flat": flat}

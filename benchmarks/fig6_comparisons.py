@@ -1,0 +1,55 @@
+"""Paper Fig. 6: number of comparisons spent per distance range reached —
+the curse-of-dimensionality anatomy (claim C4: high-d search spends nearly
+all comparisons in the 'close neighborhood')."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import beam_search, hnsw
+from repro.core.distances import report_scale
+
+from .bench_util import AnnWorld
+
+
+def run(world: AnnWorld, name: str, n_queries: int = 50, ef: int = 64, out=print):
+    q = world.queries[:n_queries]
+    rows = {}
+    for method in ("HNSW", "flat-HNSW", "KGraph+GD"):
+        if method == "HNSW":
+            # trace the bottom-layer phase after the hierarchical descent
+            ids0 = None
+            res = hnsw.hnsw_search(q, world.base, world.hnsw, ef=ef,
+                                   metric=world.metric)
+            nbrs = world.hnsw.layers_neighbors[0]
+            ent = res.ids[:, :1]
+            _, td, tc = beam_search.search_with_trace(
+                q, world.base, nbrs, ent, ef=ef, metric=world.metric,
+                max_steps=3 * ef,
+            )
+        else:
+            nbrs = (
+                world.hnsw.layers_neighbors[0]
+                if method == "flat-HNSW"
+                else world.gd.neighbors
+            )
+            ent = beam_search.random_entries(world.key, world.n, q.shape[0], 8)
+            _, td, tc = beam_search.search_with_trace(
+                q, world.base, nbrs, ent, ef=ef, metric=world.metric,
+                max_steps=3 * ef,
+            )
+        td = np.asarray(report_scale(td, world.metric))   # (steps, Q)
+        tc = np.asarray(tc, dtype=np.float64)
+        # histogram: comparisons spent while best-distance is in each decade
+        edges = np.quantile(td[np.isfinite(td)], [1.0, 0.75, 0.5, 0.25, 0.1, 0.0])
+        spent = []
+        for i in range(len(edges) - 1):
+            hi, lo = edges[i], edges[i + 1]
+            in_range = (td <= hi) & (td >= lo)
+            dcomps = np.diff(tc, axis=0, prepend=tc[:1])
+            spent.append(float((dcomps * in_range).sum() / q.shape[0]))
+        rows[method] = dict(edges=edges.tolist(), spent=spent)
+        out(
+            f"fig6/{name}/{method},range_edges={np.round(edges, 4).tolist()},"
+            f"comps_per_range={np.round(spent, 1).tolist()}"
+        )
+    return rows

@@ -1,0 +1,92 @@
+"""Roofline report: consumes dryrun_results.json, adds MODEL_FLOPS and the
+useful-compute ratio, prints the per-(arch x shape x mesh) table."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro import configs
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
+
+TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def lm_param_counts(cfg) -> tuple[int, int]:
+    """(total, active-per-token) parameter counts, embeddings excluded from
+    the active count's MoE terms per standard practice."""
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    embed = V * D * 2  # embed + lm_head
+    if cfg.attention == "mla":
+        m = cfg.mla
+        attn = (D * m.q_lora_rank + m.q_lora_rank * m.n_heads *
+                (m.qk_nope_dim + m.qk_rope_dim) + D * m.kv_lora_rank +
+                D * m.qk_rope_dim + m.kv_lora_rank * m.n_heads *
+                (m.qk_nope_dim + m.v_head_dim) + m.n_heads * m.v_head_dim * D)
+    else:
+        attn = D * cfg.n_heads * cfg.d_head * 2 + D * cfg.n_kv * cfg.d_head * 2
+    dense_ffn = 3 * D * cfg.d_ff
+    total = embed + L * attn
+    active = embed + L * attn
+    if cfg.moe is not None:
+        moe = cfg.moe
+        expert = 3 * D * moe.d_ff
+        shared = 3 * D * moe.shared_d_ff * moe.n_shared
+        n_moe = L - cfg.n_dense_prefix
+        total += cfg.n_dense_prefix * dense_ffn + n_moe * (
+            moe.n_experts * expert + shared + D * moe.n_experts
+        )
+        active += cfg.n_dense_prefix * dense_ffn + n_moe * (
+            moe.top_k * expert + shared + D * moe.n_experts
+        )
+    else:
+        total += L * dense_ffn
+        active += L * dense_ffn
+    return total, active
+
+
+def model_flops(arch_id: str, shape: str, kind: str) -> float | None:
+    ad = configs.get_arch(arch_id)
+    if ad.family != "lm":
+        return None
+    total, active = lm_param_counts(ad.model_cfg)
+    toks = TOKENS[shape]
+    if kind == "train":
+        return 6.0 * active * toks
+    return 2.0 * active * toks  # inference forward
+
+
+def report(path: str = "dryrun_results.json", out=print):
+    with open(path) as f:
+        recs = json.load(f)
+    rows = []
+    out("arch,shape,mesh,status,bottleneck,t_compute_s,t_memory_s,"
+        "t_collective_s,hlo_flops,model_flops,useful_ratio,roofline_frac")
+    for r in recs:
+        if r["status"] != "ok":
+            out(f"{r['arch']},{r['shape']},{r['mesh']},{r['status']},,,,,,,,")
+            continue
+        n_chips = 512 if r["mesh"] == "2x16x16" else 256
+        mf = model_flops(r["arch"], r["shape"], r["kind"])
+        mf_dev = mf / n_chips if mf else None
+        ratio = (mf_dev / r["hlo_flops"]) if mf_dev and r["hlo_flops"] else None
+        # roofline fraction: useful-compute time / achievable step time (the
+        # max of the three terms — how close the dominant term lets us get)
+        t_star = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        frac = (mf_dev / PEAK_FLOPS) / t_star if mf_dev and t_star > 0 else None
+        rows.append({**r, "model_flops": mf, "useful_ratio": ratio,
+                     "roofline_frac": frac})
+        out(
+            f"{r['arch']},{r['shape']},{r['mesh']},ok,{r['bottleneck']},"
+            f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+            f"{r['t_collective_s']:.3e},{r['hlo_flops']:.3e},"
+            f"{mf or 0:.3e},{ratio or 0:.3f},{frac if frac is not None else 0:.4f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    report(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json")

@@ -1,0 +1,67 @@
+"""Distributed shard-and-merge ANN serving (DESIGN.md §4) with failure
+simulation: the same shard_map program that runs on a 512-chip mesh runs here
+on the CPU flat mesh; a 'failed' shard degrades recall, never the service.
+
+    PYTHONPATH=src python examples/distributed_ann.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import bruteforce  # noqa: E402
+from repro.core.diversify import build_gd_graph  # noqa: E402
+from repro.core.nndescent import NNDescentConfig, build_knn_graph  # noqa: E402
+from repro.distributed.sharded_ann import distributed_search, shard_graph  # noqa: E402
+from repro.launch.mesh import make_flat_mesh  # noqa: E402
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    n, d, Q = 20_000, 32, 100
+    base = jax.random.uniform(key, (n, d))
+    queries = jax.random.uniform(jax.random.fold_in(key, 1), (Q, d))
+    gt = bruteforce.ground_truth(queries, base, 1)
+
+    mesh = make_flat_mesh()
+    P = mesh.devices.size
+    n_shards = max(P, 4)  # logical shards even on one CPU device
+    # per-shard index builds (production layout: each node owns + indexes
+    # its slice; a global graph would orphan cross-shard edges)
+    bs, ns = shard_graph(base, None, n_shards, rebuild=True, key=key)
+    ent = jax.random.randint(key, (n_shards, Q, 8), 0, bs.shape[1], dtype=jnp.int32)
+
+    for dead in (0, 1):
+        live = jnp.ones((n_shards,), bool)
+        if dead:
+            live = live.at[0].set(False)  # simulated node loss / straggler
+        if P == n_shards:
+            dists, ids, comps = distributed_search(
+                queries, bs, ns, ent, live, ef=48, k=1, mesh=mesh,
+                axis=mesh.axis_names[0],
+            )
+        else:
+            # CPU fallback: emulate shards sequentially with the same merge
+            from repro.core.beam_search import beam_search
+            from repro.core.topk import topk_smallest
+
+            all_d, all_i = [], []
+            per = bs.shape[1]
+            for s in range(n_shards):
+                res = beam_search(queries, bs[s], ns[s], ent[s], ef=48, k=1)
+                gd_ids = jnp.where(res.ids >= 0, res.ids + s * per, -1)
+                all_d.append(jnp.where(live[s], res.dists, jnp.inf))
+                all_i.append(jnp.where(live[s], gd_ids, -1))
+            flat_d = jnp.concatenate(all_d, 1)
+            flat_i = jnp.concatenate(all_i, 1)
+            dists, sel = topk_smallest(flat_d, 1)
+            ids = jnp.take_along_axis(flat_i, sel, 1)
+        recall = float((ids[:, 0] == gt[:, 0]).mean())
+        print(f"shards={n_shards} dead={dead}: recall@1={recall:.3f} "
+              f"(graceful degradation, no failure)")
+
+
+if __name__ == "__main__":
+    main()

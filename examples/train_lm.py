@@ -1,0 +1,56 @@
+"""End-to-end training driver: a ~100M-param TinyLlama-family model trained
+for a few hundred steps on the synthetic token stream, with checkpoints and
+deterministic resume.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200 [--params-100m]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.data.synthetic import lm_batch_for_step  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.train.train_loop import fit  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--params-100m", action="store_true",
+                    help="~100M params (slow on CPU; default is a 4M model)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    if args.params_100m:
+        cfg = T.LMConfig(name="demo-100m", n_layers=12, d_model=768, n_heads=12,
+                         n_kv=4, d_head=64, d_ff=2048, vocab=32000,
+                         dtype=jnp.float32)
+        batch, seq = 8, 512
+    else:
+        cfg = T.LMConfig(name="demo-4m", n_layers=4, d_model=256, n_heads=4,
+                         n_kv=2, d_head=64, d_ff=512, vocab=512,
+                         dtype=jnp.float32)
+        batch, seq = 16, 64
+
+    out = fit(
+        init_params_fn=lambda k: T.init_params(k, cfg),
+        loss_fn=lambda p, b: T.loss_fn(p, b, cfg),
+        batch_fn=lambda s: lm_batch_for_step(0, s, batch, seq, cfg.vocab),
+        steps=args.steps,
+        optimizer="adamw",
+        opt_hp={"lr": 1e-3},
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=50,
+        log_every=20,
+    )
+    hist = out["history"]
+    print(f"loss: {hist[0][1]:.3f} -> {hist[-1][1]:.3f} "
+          f"(expect well below ln(vocab)={jnp.log(cfg.vocab):.2f})")
+    assert hist[-1][1] < hist[0][1], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

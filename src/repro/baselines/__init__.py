@@ -1,0 +1,1 @@
+from . import lsh, pq, tree  # noqa: F401

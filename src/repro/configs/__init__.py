@@ -1,0 +1,55 @@
+"""Architecture registry: ``get_arch(id)`` / ``list_archs()`` / paper configs."""
+from __future__ import annotations
+
+from . import (
+    autoint,
+    bert4rec,
+    deepfm,
+    deepseek_v3_671b,
+    dlrm_mlperf,
+    gemma3_12b,
+    graphsage_reddit,
+    h2o_danube_1_8b,
+    qwen3_moe_30b_a3b,
+    tinyllama_1_1b,
+)
+from .common import (  # noqa: F401
+    ArchDef,
+    Cell,
+    GNN_SHAPES,
+    LM_SHAPES,
+    Lowerable,
+    RECSYS_SHAPES,
+    build_lowerable,
+)
+
+_ARCHS = {
+    m.ARCH.arch_id: m.ARCH
+    for m in (
+        deepseek_v3_671b,
+        qwen3_moe_30b_a3b,
+        tinyllama_1_1b,
+        h2o_danube_1_8b,
+        gemma3_12b,
+        graphsage_reddit,
+        bert4rec,
+        dlrm_mlperf,
+        autoint,
+        deepfm,
+    )
+}
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    return _ARCHS[arch_id]
+
+
+def list_archs() -> list[str]:
+    return list(_ARCHS)
+
+
+def all_cells() -> list[Cell]:
+    out = []
+    for a in _ARCHS.values():
+        out.extend(a.cells())
+    return out

@@ -1,0 +1,28 @@
+"""AutoInt [arXiv:1810.11921]: 39 sparse fields, embed_dim=16, 3 self-attn
+layers, 2 heads, d_attn=32."""
+import jax.numpy as jnp
+
+from repro.models import recsys
+
+from .common import ArchDef
+
+_VOCABS = tuple([1024] * 13 + [
+    1461504, 583680, 10131968, 2202624, 512, 512, 12544, 1024, 512, 93312,
+    5683712, 8351744, 3194880, 512, 14336, 5461504, 512, 4864, 2048, 512,
+    7046656, 512, 512, 286720, 512, 142336,
+])
+
+CONFIG = recsys.AutoIntConfig(
+    name="autoint", vocab_sizes=_VOCABS, embed_dim=16,
+    n_attn_layers=3, n_heads=2, d_attn=32, dtype=jnp.float32,
+)
+
+SMOKE = recsys.AutoIntConfig(
+    name="autoint-smoke", vocab_sizes=tuple([128] * 39), embed_dim=8,
+    n_attn_layers=2, n_heads=2, d_attn=8,
+)
+
+ARCH = ArchDef(
+    arch_id="autoint", family="recsys", model_cfg=CONFIG,
+    optimizer="adamw", smoke_cfg=SMOKE,
+)

@@ -1,0 +1,22 @@
+"""BERT4Rec [arXiv:1904.06690]: embed_dim=64, 2 blocks, 2 heads, seq_len=200,
+bidirectional masked-item modeling (ML-20M item universe)."""
+import jax.numpy as jnp
+
+from repro.models import recsys
+
+from .common import ArchDef
+
+CONFIG = recsys.Bert4RecConfig(
+    name="bert4rec", n_items=54546, embed_dim=64, n_blocks=2, n_heads=2,
+    seq_len=200, dtype=jnp.float32,
+)
+
+SMOKE = recsys.Bert4RecConfig(
+    name="bert4rec-smoke", n_items=512, embed_dim=16, n_blocks=2, n_heads=2,
+    seq_len=16,
+)
+
+ARCH = ArchDef(
+    arch_id="bert4rec", family="recsys", model_cfg=CONFIG,
+    optimizer="adamw", smoke_cfg=SMOKE,
+)

@@ -1,0 +1,659 @@
+"""Shared machinery for the architecture configs.
+
+Each arch file instantiates an ArchDef; this module turns (arch x shape x
+mesh) into a lowerable (fn, example ShapeDtypeStructs, in_shardings) triple —
+used identically by the dry-run, the roofline harness and the launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import gnn, recsys
+from repro.models import transformer as tf
+from repro.train import optimizer as opt_lib
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    kind: str                 # train | prefill | decode | serve
+    skip: str | None = None   # reason, if the cell is skipped by assignment
+
+
+@dataclasses.dataclass
+class ArchDef:
+    arch_id: str
+    family: str               # lm | gnn | recsys
+    model_cfg: Any
+    optimizer: str = "adamw"
+    fsdp: bool = False        # shard big weights over the data axis too
+    parallel_mode: str = "tp"  # 'tp' (TP over 'model') | 'dp' (batch over
+    #                            every axis, params replicated — the right
+    #                            layout for ~1B models, §Perf T2) | 'fsdp'
+    #                            (batch over every axis, params ZeRO-3-sharded
+    #                            over every axis — the 10-30B layout, §Perf Q1)
+    smoke_cfg: Any = None     # reduced config for CPU tests
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    def cells(self) -> list[Cell]:
+        if self.family == "lm":
+            out = [
+                Cell(self.arch_id, "train_4k", "train"),
+                Cell(self.arch_id, "prefill_32k", "prefill"),
+                Cell(self.arch_id, "decode_32k", "decode"),
+            ]
+            cfg = self.model_cfg
+            subquad = cfg.window is not None or cfg.local_global is not None
+            out.append(
+                Cell(
+                    self.arch_id, "long_500k", "decode",
+                    skip=None if subquad else
+                    "pure full-attention arch — long_500k needs sub-quadratic "
+                    "attention (DESIGN.md §5)",
+                )
+            )
+            return out
+        if self.family == "gnn":
+            return [
+                Cell(self.arch_id, "full_graph_sm", "train"),
+                Cell(self.arch_id, "minibatch_lg", "train"),
+                Cell(self.arch_id, "ogb_products", "train"),
+                Cell(self.arch_id, "molecule", "train"),
+            ]
+        return [
+            Cell(self.arch_id, "train_batch", "train"),
+            Cell(self.arch_id, "serve_p99", "serve"),
+            Cell(self.arch_id, "serve_bulk", "serve"),
+            Cell(self.arch_id, "retrieval_cand", "serve"),
+        ]
+
+
+LM_SHAPES = {
+    "train_4k": dict(seq=4096, batch=256),
+    "prefill_32k": dict(seq=32768, batch=32),
+    "decode_32k": dict(seq=32768, batch=128),
+    "long_500k": dict(seq=524288, batch=1),
+}
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433),
+    "minibatch_lg": dict(n_nodes=232965, n_edges=114_615_892, batch_nodes=1024,
+                         fanout=(15, 10), d_feat=602),
+    "ogb_products": dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=16),
+}
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65536),
+    "serve_p99": dict(batch=512),
+    "serve_bulk": dict(batch=262144),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000),
+}
+
+
+# -- sharding rules ---------------------------------------------------------------
+
+
+def _axis_ok(mesh, axis, dim_size) -> bool:
+    if axis is None:
+        return True
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axis, tuple):
+        total = 1
+        for a in axis:
+            if a not in sizes:
+                return False
+            total *= sizes[a]
+        return dim_size % total == 0
+    return axis in sizes and dim_size % sizes[axis] == 0
+
+
+def _spec(mesh, shape, assignment) -> P:
+    """assignment: list of axis names (or None/tuple) per dim; axes failing
+    the divisibility check degrade to None."""
+    cleaned = []
+    for dim, axis in zip(shape, assignment):
+        cleaned.append(axis if _axis_ok(mesh, axis, dim) else None)
+    return P(*cleaned)
+
+
+def dp_axes(mesh) -> tuple[str, ...] | str:
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes if len(axes) > 1 else axes[0]
+
+
+def fsdp_param_specs(params_tree, mesh):
+    """ZeRO-3: shard each parameter's largest divisible dim over EVERY mesh
+    axis; replicate what cannot split. GSPMD then all-gathers per-layer
+    weights inside the scan (overlappable) and reduce-scatters gradients."""
+    axes = tuple(mesh.axis_names)
+    total = 1
+    for a, n in zip(mesh.axis_names, mesh.devices.shape):
+        total *= n
+
+    def rule(leaf):
+        dims = list(leaf.shape)
+        order = sorted(range(len(dims)), key=lambda i: -dims[i])
+        for i in order:
+            if dims[i] % total == 0:
+                spec = [None] * len(dims)
+                spec[i] = axes
+                return P(*spec)
+        return P(*([None] * len(dims)))
+
+    return jax.tree.map(rule, params_tree)
+
+
+def lm_param_specs(params_tree, mesh, fsdp: bool,
+                   mla_replicated_latents: bool = False):
+    """Path-based tensor-parallel (+ optional FSDP) specs for the LM pytree.
+
+    mla_replicated_latents (§Perf D4): MLA's down-projections produce tiny
+    latents (r=512/1536) — sharding them buys nothing and costs a collective
+    per projection; computing them redundantly on every TP rank is free."""
+    fs = "data" if fsdp else None
+
+    def rule(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(leaf.shape)
+        sh = leaf.shape
+        lead = [None] * (nd - 2)  # stacked layer dims etc.
+        if name in ("embed", "item_emb"):
+            return _spec(mesh, sh, ["model", None])
+        if name == "lm_head":
+            return _spec(mesh, sh, [None, "model"])
+        if name == "proj":  # mtp projection (2D, D)
+            return _spec(mesh, sh, [None, "model"][: nd])
+        if name in ("w_dq", "w_dkv", "w_kr") and mla_replicated_latents:
+            return P(*([None] * nd))  # replicated latent projections
+        if name in ("wq", "wk", "wv", "w_uq", "w_uk", "w_uv", "w_dq", "w_dkv", "w_kr"):
+            return _spec(mesh, sh, lead + [fs, "model"])
+        if name in ("wo",):
+            return _spec(mesh, sh, lead + ["model", fs])
+        if name in ("w_gate", "w_up"):
+            if nd == 4:   # (L, E, D, F) stacked MoE
+                return _spec(mesh, sh, [None, "model", None, fs])
+            if nd == 3 and "mlp" in str(path) and leaf.shape[0] != sh[-2]:
+                # could be stacked dense (L, D, F) or unstacked MoE (E, D, F):
+                # MoE expert count is in extra leading dim only when nd==4 for
+                # stacked params; unstacked prefix layers are dense -> treat as
+                # dense: (L|E, D, F)
+                return _spec(mesh, sh, [None, fs, "model"])
+            return _spec(mesh, sh, lead + [fs, "model"])
+        if name == "w_down":
+            if nd == 4:   # (L, E, F, D)
+                return _spec(mesh, sh, [None, "model", fs, None])
+            return _spec(mesh, sh, lead + ["model", fs])
+        if name == "w1":
+            return _spec(mesh, sh, lead + [fs, "model"])
+        if name == "w2":
+            return _spec(mesh, sh, lead + ["model", fs])
+        if name == "router":
+            return P(*([None] * nd))
+        return P(*([None] * nd))  # norms, biases, scalars
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def opt_state_specs(opt_template, param_specs, params_template):
+    """Optimizer state shadows the parameter shardings (factored Adafactor
+    stats drop the corresponding trailing axis)."""
+
+    def drop_last(spec, p_shape, keep=-1):
+        parts = list(spec) + [None] * (len(p_shape) - len(list(spec)))
+        if keep == -1:
+            return P(*parts[:-1]) if len(p_shape) >= 2 else P(*parts)
+        return P(*(parts[:-2] + parts[-1:])) if len(p_shape) >= 2 else P(None)
+
+    if isinstance(opt_template, opt_lib.AdamWState):
+        return opt_lib.AdamWState(step=P(), m=param_specs, v=param_specs)
+    if isinstance(opt_template, opt_lib.AdafactorState):
+        vr = jax.tree.map(lambda s, p: drop_last(s, p.shape, -1), param_specs,
+                          params_template)
+        vc = jax.tree.map(lambda s, p: drop_last(s, p.shape, -2), param_specs,
+                          params_template)
+        return opt_lib.AdafactorState(step=P(), vr=vr, vc=vc)
+    raise TypeError(type(opt_template))
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# -- lowerables --------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Lowerable:
+    fn: Callable
+    args: tuple           # ShapeDtypeStructs (pytrees)
+    in_shardings: tuple   # NamedSharding pytrees (or None entries)
+    donate: tuple = ()
+    name: str = ""
+
+
+def _eval_shape(f, *a):
+    return jax.eval_shape(f, *a)
+
+
+def build_lm_lowerable(ad: ArchDef, shape_name: str, mesh) -> Lowerable:
+    import dataclasses as dc
+
+    cfg: tf.LMConfig = ad.model_cfg
+    sh = LM_SHAPES[shape_name]
+    dp = dp_axes(mesh)
+    if ad.parallel_mode in ("dp", "fsdp"):
+        # batch over every mesh axis; params replicated (dp) or ZeRO-3 (fsdp)
+        dp = tuple(mesh.axis_names)
+    # pin activation/logit/expert shardings so GSPMD propagation is stable
+    # (the dry-run's linear-in-depth cost extraction depends on it)
+    tp_axis = None if ad.parallel_mode in ("dp", "fsdp") else "model"
+    act = NamedSharding(mesh, _spec(mesh, (sh["batch"], sh["seq"], cfg.d_model),
+                                    [dp, None, None]))
+    logit = NamedSharding(mesh, _spec(mesh, (sh["batch"], sh["seq"], cfg.vocab),
+                                      [dp, None, tp_axis]))
+    if cfg.moe is not None:
+        moe_seq = sh["seq"] if shape_name in ("train_4k", "prefill_32k") else 1
+        C = max(int(cfg.moe.capacity_factor * moe_seq * cfg.moe.top_k
+                    / cfg.moe.n_experts), 1)
+        xin_spec = NamedSharding(
+            mesh,
+            _spec(mesh, (sh["batch"], cfg.moe.n_experts, C, cfg.d_model),
+                  [dp, tp_axis, None, None]),
+        )
+        cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, expert_in_spec=xin_spec))
+    cfg = dc.replace(cfg, act_spec=act, logit_spec=logit)
+    ad = dc.replace(ad, model_cfg=cfg)
+    params_t = _eval_shape(lambda k: tf.init_params(k, cfg), jax.random.PRNGKey(0))
+    if ad.parallel_mode == "dp":
+        p_specs = jax.tree.map(lambda l: P(*([None] * len(l.shape))), params_t)
+    elif ad.parallel_mode == "fsdp":
+        p_specs = fsdp_param_specs(params_t, mesh)
+    else:
+        p_specs = lm_param_specs(
+            params_t, mesh, ad.fsdp,
+            mla_replicated_latents=ad.extra.get("mla_replicated_latents", False),
+        )
+
+    if shape_name == "train_4k":
+        opt_init, opt_update = opt_lib.make_optimizer(ad.optimizer)
+        opt_t = _eval_shape(opt_init, params_t)
+        o_specs = opt_state_specs(opt_t, p_specs, params_t)
+
+        def step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: tf.loss_fn(p, batch, cfg), has_aux=True
+            )(params)
+            params, opt_state, _ = opt_update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        batch_t = {
+            "tokens": _sds((sh["batch"], sh["seq"]), jnp.int32),
+            "labels": _sds((sh["batch"], sh["seq"]), jnp.int32),
+        }
+        b_specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+        return Lowerable(
+            fn=step,
+            args=(params_t, opt_t, batch_t),
+            in_shardings=(_named(mesh, p_specs), _named(mesh, o_specs),
+                          _named(mesh, b_specs)),
+            donate=(0, 1),
+            name=f"{ad.arch_id}:train_4k",
+        )
+
+    if shape_name == "prefill_32k":
+        def step(params, tokens):
+            return tf.prefill(params, tokens, cfg)
+
+        tokens_t = _sds((sh["batch"], sh["seq"]), jnp.int32)
+        return Lowerable(
+            fn=step,
+            args=(params_t, tokens_t),
+            in_shardings=(_named(mesh, p_specs), NamedSharding(mesh, P(dp, None))),
+            name=f"{ad.arch_id}:prefill_32k",
+        )
+
+    # decode shapes
+    B, S = sh["batch"], sh["seq"]
+    caches_t = _eval_shape(lambda _: tf.init_cache(cfg, B, S), 0)
+
+    def cache_spec(leaf):
+        shp = leaf.shape
+        if len(shp) == 4:   # (B, Sc, H, dh)
+            return _spec(mesh, shp, [dp, "model", None, None])
+        if len(shp) == 3:   # (B, Sc, r) MLA
+            return _spec(mesh, shp, [dp, "model", None])
+        return _spec(mesh, shp, [dp, "model"])  # pos (B, Sc)
+
+    c_specs = jax.tree.map(cache_spec, caches_t)
+
+    def step(params, token, pos, caches):
+        return tf.decode_step(params, token, pos, caches, cfg)
+
+    tok_t = _sds((B,), jnp.int32)
+    pos_t = _sds((B,), jnp.int32)
+    tp_spec = NamedSharding(mesh, _spec(mesh, (B,), [dp]))
+    return Lowerable(
+        fn=step,
+        args=(params_t, tok_t, pos_t, caches_t),
+        in_shardings=(_named(mesh, p_specs), tp_spec, tp_spec, _named(mesh, c_specs)),
+        donate=(3,),
+        name=f"{ad.arch_id}:{shape_name}",
+    )
+
+
+def build_gnn_lowerable(ad: ArchDef, shape_name: str, mesh) -> Lowerable:
+    cfg: gnn.SAGEConfig = ad.model_cfg
+    sh = dict(GNN_SHAPES[shape_name])
+    dp = dp_axes(mesh)
+    n_cls = ad.extra.get("n_classes", cfg.n_classes)
+    opt_init, opt_update = opt_lib.make_optimizer(ad.optimizer)
+
+    if shape_name == "molecule":
+        cfg_m = dataclasses.replace(cfg, d_in=sh["d_feat"])
+        params_t = _eval_shape(lambda k: gnn.init_params(k, cfg_m), jax.random.PRNGKey(0))
+        opt_t = _eval_shape(opt_init, params_t)
+
+        def step(params, opt_state, batch):
+            def lf(p):
+                logits = gnn.forward_dense(p, batch["feats"], batch["adj"], cfg_m)
+                logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+                return -jnp.take_along_axis(logp, batch["labels"][:, None], 1).mean()
+
+            loss, grads = jax.value_and_grad(lf)(params)
+            params, opt_state, _ = opt_update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        B, N = sh["batch"], sh["n_nodes"]
+        batch_t = {
+            "feats": _sds((B, N, sh["d_feat"])),
+            "adj": _sds((B, N, N)),
+            "labels": _sds((B,), jnp.int32),
+        }
+        b_specs = {"feats": P(dp, None, None), "adj": P(dp, None, None),
+                   "labels": P(dp)}
+        return Lowerable(
+            fn=step, args=(params_t, opt_t, batch_t),
+            in_shardings=(None, None, _named(mesh, b_specs)),
+            donate=(0, 1), name=f"{ad.arch_id}:molecule",
+        )
+
+    cfg_s = dataclasses.replace(cfg, d_in=sh["d_feat"])
+    params_t = _eval_shape(lambda k: gnn.init_params(k, cfg_s), jax.random.PRNGKey(0))
+    opt_t = _eval_shape(opt_init, params_t)
+
+    if shape_name == "minibatch_lg":
+        def step(params, opt_state, batch):
+            def lf(p):
+                logits = gnn.forward_minibatch(
+                    p, batch["key"], batch["feats"], batch["indptr"],
+                    batch["indices"], batch["nodes"], cfg_s,
+                ).astype(jnp.float32)
+                logp = jax.nn.log_softmax(logits)
+                return -jnp.take_along_axis(logp, batch["labels"][:, None], 1).mean()
+
+            loss, grads = jax.value_and_grad(lf)(params)
+            params, opt_state, _ = opt_update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        N, E, B = sh["n_nodes"], sh["n_edges"], sh["batch_nodes"]
+        batch_t = {
+            "key": _sds((2,), jnp.uint32),
+            "feats": _sds((N, sh["d_feat"])),
+            "indptr": _sds((N + 1,), jnp.int32),
+            "indices": _sds((E,), jnp.int32),
+            "nodes": _sds((B,), jnp.int32),
+            "labels": _sds((B,), jnp.int32),
+        }
+        b_specs = {
+            "key": P(None), "feats": P(None, None), "indptr": P(None),
+            "indices": P(None), "nodes": P(dp), "labels": P(dp),
+        }
+        return Lowerable(
+            fn=step, args=(params_t, opt_t, batch_t),
+            in_shardings=(None, None, _named(mesh, b_specs)),
+            donate=(0, 1), name=f"{ad.arch_id}:minibatch_lg",
+        )
+
+    # full-graph cells
+    def step(params, opt_state, batch):
+        def lf(p):
+            return gnn.loss_full(p, batch["feats"], batch["edges"],
+                                 batch["labels"], batch["mask"], cfg_s)
+
+        loss, grads = jax.value_and_grad(lf)(params)
+        params, opt_state, _ = opt_update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    N, E = sh["n_nodes"], sh["n_edges"]
+    batch_t = {
+        "feats": _sds((N, sh["d_feat"])),
+        "edges": _sds((E, 2), jnp.int32),
+        "labels": _sds((N,), jnp.int32),
+        "mask": _sds((N,)),
+    }
+    b_specs = {"feats": P(None, None), "edges": _spec(mesh, (E, 2), [dp, None]),
+               "labels": P(None), "mask": P(None)}
+    return Lowerable(
+        fn=step, args=(params_t, opt_t, batch_t),
+        in_shardings=(None, None, _named(mesh, b_specs)),
+        donate=(0, 1), name=f"{ad.arch_id}:{shape_name}",
+    )
+
+
+def recsys_param_specs(params_tree, mesh, tables_2d: bool = False):
+    """tables_2d shards embedding rows over EVERY mesh axis (each row has one
+    owner): lookups/updates route sparsely instead of reconciling a
+    data-replicated copy with table-sized all-reduces (§Perf D3b)."""
+    row_axes = tuple(mesh.axis_names) if tables_2d else "model"
+
+    def rule(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+        pstr = "/".join(str(p) for p in path)
+        nd = len(leaf.shape)
+        if "tables" in pstr and nd == 2:
+            return _spec(mesh, leaf.shape, [row_axes, None])
+        if "first" in pstr and nd == 1:
+            return _spec(mesh, leaf.shape, ["model"])
+        if name in ("item_emb",):
+            return _spec(mesh, leaf.shape, ["model", None])
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def build_recsys_lowerable(ad: ArchDef, shape_name: str, mesh) -> Lowerable:
+    cfg = ad.model_cfg
+    sh = RECSYS_SHAPES[shape_name]
+    dp = dp_axes(mesh)
+    B = sh["batch"]
+    opt_init, opt_update = opt_lib.make_optimizer(ad.optimizer)
+    kind = type(cfg).__name__
+
+    if kind == "DLRMConfig":
+        init = lambda k: recsys.dlrm_init(k, cfg)
+        fwd = lambda p, b: recsys.dlrm_forward(p, b["dense"], b["sparse"], cfg)
+        batch_t = {
+            "dense": _sds((B, cfg.n_dense)),
+            "sparse": _sds((B, len(cfg.vocab_sizes)), jnp.int32),
+            "label": _sds((B,)),
+        }
+        emb_dim = cfg.embed_dim
+    elif kind == "DeepFMConfig":
+        init = lambda k: recsys.deepfm_init(k, cfg)
+        fwd = lambda p, b: recsys.deepfm_forward(p, b["sparse"], cfg)
+        batch_t = {"sparse": _sds((B, len(cfg.vocab_sizes)), jnp.int32),
+                   "label": _sds((B,))}
+        emb_dim = cfg.embed_dim
+    elif kind == "AutoIntConfig":
+        init = lambda k: recsys.autoint_init(k, cfg)
+        fwd = lambda p, b: recsys.autoint_forward(p, b["sparse"], cfg)
+        batch_t = {"sparse": _sds((B, len(cfg.vocab_sizes)), jnp.int32),
+                   "label": _sds((B,))}
+        emb_dim = cfg.embed_dim
+    else:  # Bert4Rec
+        init = lambda k: recsys.bert4rec_init(k, cfg)
+        fwd = None
+        emb_dim = cfg.embed_dim
+
+    params_t = _eval_shape(init, jax.random.PRNGKey(0))
+    p_specs = recsys_param_specs(params_t, mesh,
+                                 tables_2d=ad.extra.get("tables_2d", False))
+
+    if shape_name == "retrieval_cand":
+        n_cand = sh["n_candidates"]
+
+        def step(items, query):
+            scores = query @ items.T                    # (B, n_cand) on MXU
+            d, i = jax.lax.top_k(scores, 100)
+            return d, i
+
+        items_t = _sds((n_cand, emb_dim))
+        query_t = _sds((B, emb_dim))
+        return Lowerable(
+            fn=step, args=(items_t, query_t),
+            in_shardings=(
+                NamedSharding(mesh, _spec(mesh, (n_cand, emb_dim),
+                                          [tuple(mesh.axis_names), None])),
+                NamedSharding(mesh, P(None, None)),
+            ),
+            name=f"{ad.arch_id}:retrieval_cand",
+        )
+
+    if kind == "Bert4RecConfig":
+        S, M = cfg.seq_len, 40
+        if shape_name == "train_batch":
+            opt_t = _eval_shape(opt_init, params_t)
+            o_specs = opt_state_specs(opt_t, p_specs, params_t)
+
+            def step(params, opt_state, batch):
+                def lf(p):
+                    return recsys.bert4rec_loss(
+                        p, batch["items"], batch["masked_pos"], batch["labels"], cfg
+                    )
+
+                loss, grads = jax.value_and_grad(lf)(params)
+                params, opt_state, _ = opt_update(grads, opt_state, params)
+                return params, opt_state, loss
+
+            batch_t = {
+                "items": _sds((B, S), jnp.int32),
+                "masked_pos": _sds((B, M), jnp.int32),
+                "labels": _sds((B, M), jnp.int32),
+            }
+            b_specs = {k: P(dp, None) for k in batch_t}
+            return Lowerable(
+                fn=step, args=(params_t, opt_t, batch_t),
+                in_shardings=(_named(mesh, p_specs), _named(mesh, o_specs),
+                              _named(mesh, b_specs)),
+                donate=(0, 1), name=f"{ad.arch_id}:train_batch",
+            )
+
+        def step(params, items):  # serve: next-item scores at last position
+            h = recsys.bert4rec_forward(params, items, cfg)
+            return (h[:, -1] @ params["item_emb"].T).astype(jnp.float32)
+
+        items_t = _sds((B, S), jnp.int32)
+        return Lowerable(
+            fn=step, args=(params_t, items_t),
+            in_shardings=(_named(mesh, p_specs), NamedSharding(mesh, P(dp, None))),
+            name=f"{ad.arch_id}:{shape_name}",
+        )
+
+    b_specs = {k: P(dp) if v.ndim == 1 else P(dp, None) for k, v in batch_t.items()}
+    if shape_name == "train_batch":
+        opt_t = _eval_shape(opt_init, params_t)
+        o_specs = opt_state_specs(opt_t, p_specs, params_t)
+        sparse_upd = ad.extra.get("sparse_emb_update", False) and kind == "DLRMConfig"
+
+        if sparse_upd:
+            # §Perf D3: gradients w.r.t. GATHERED rows (B, d) + scatter-add
+            # SGD on the sharded tables — the dense (V, d) table gradient
+            # (and its table-sized DP all-reduce) never exists.
+            def step(params, opt_state, batch):
+                tables = params["tables"]
+                ids = batch["sparse"]
+                rows = [t[ids[:, i]] for i, t in enumerate(tables)]
+                rest = {k: v for k, v in params.items() if k != "tables"}
+
+                def lf(rest_p, rows_p):
+                    logits = recsys.dlrm_forward(
+                        {**rest_p, "tables": tables}, batch["dense"], ids, cfg,
+                        rows=rows_p,
+                    ).astype(jnp.float32)
+                    y = batch["label"]
+                    return jnp.mean(
+                        jnp.maximum(logits, 0) - logits * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+                    )
+
+                loss, (g_rest, g_rows) = jax.value_and_grad(lf, argnums=(0, 1))(
+                    rest, rows
+                )
+                new_rest, opt_state, _ = opt_update(g_rest, opt_state, rest)
+                lr_emb = 0.01
+                new_tables = [
+                    t.at[ids[:, i]].add(-lr_emb * g.astype(t.dtype))
+                    for i, (t, g) in enumerate(zip(tables, g_rows))
+                ]
+                return {**new_rest, "tables": new_tables}, opt_state, loss
+
+            # optimizer state only shadows the dense params
+            rest_t = {k: v for k, v in params_t.items() if k != "tables"}
+            opt_t = _eval_shape(opt_init, rest_t)
+            rest_specs = {k: v for k, v in p_specs.items() if k != "tables"}
+            o_specs = opt_state_specs(opt_t, rest_specs, rest_t)
+            return Lowerable(
+                fn=step, args=(params_t, opt_t, batch_t),
+                in_shardings=(_named(mesh, p_specs), _named(mesh, o_specs),
+                              _named(mesh, b_specs)),
+                donate=(0, 1), name=f"{ad.arch_id}:train_batch",
+            )
+
+        def step(params, opt_state, batch):
+            def lf(p):
+                logits = fwd(p, batch).astype(jnp.float32)
+                y = batch["label"]
+                return jnp.mean(
+                    jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+                )
+
+            loss, grads = jax.value_and_grad(lf)(params)
+            params, opt_state, _ = opt_update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        return Lowerable(
+            fn=step, args=(params_t, opt_t, batch_t),
+            in_shardings=(_named(mesh, p_specs), _named(mesh, o_specs),
+                          _named(mesh, b_specs)),
+            donate=(0, 1), name=f"{ad.arch_id}:train_batch",
+        )
+
+    def step(params, batch):
+        return fwd(params, batch)
+
+    return Lowerable(
+        fn=step, args=(params_t, batch_t),
+        in_shardings=(_named(mesh, p_specs), _named(mesh, b_specs)),
+        name=f"{ad.arch_id}:{shape_name}",
+    )
+
+
+def build_lowerable(ad: ArchDef, shape_name: str, mesh) -> Lowerable:
+    if ad.family == "lm":
+        return build_lm_lowerable(ad, shape_name, mesh)
+    if ad.family == "gnn":
+        return build_gnn_lowerable(ad, shape_name, mesh)
+    return build_recsys_lowerable(ad, shape_name, mesh)

@@ -1,0 +1,49 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437]: 61L, d=7168, MLA (128 heads),
+1 shared + 256 routed experts top-8 (d_ff=2048, first 3 layers dense 18432),
+MTP, vocab 129280."""
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as tf
+
+from .common import ArchDef
+
+CONFIG = tf.LMConfig(
+    name="deepseek-v3-671b",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv=128,
+    d_head=128,
+    d_ff=18432,                   # dense-prefix FFN width
+    vocab=129280,
+    attention="mla",
+    mla=L.MLAConfig(
+        n_heads=128, q_lora_rank=1536, kv_lora_rank=512,
+        qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+    ),
+    moe=L.MoEConfig(
+        n_experts=256, top_k=8, d_ff=2048, n_shared=1, shared_d_ff=2048,
+        capacity_factor=1.25,
+    ),
+    n_dense_prefix=3,
+    rope_theta=10000.0,
+    mtp=True,
+    dtype=jnp.bfloat16,
+    remat=True,
+)
+
+SMOKE = tf.LMConfig(
+    name="deepseek-v3-smoke",
+    n_layers=3, d_model=64, n_heads=4, n_kv=4, d_head=16, d_ff=128, vocab=256,
+    attention="mla",
+    mla=L.MLAConfig(n_heads=4, q_lora_rank=32, kv_lora_rank=16,
+                    qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
+    moe=L.MoEConfig(n_experts=8, top_k=2, d_ff=32, n_shared=1, shared_d_ff=32),
+    n_dense_prefix=1, mtp=True, dtype=jnp.float32,
+)
+
+ARCH = ArchDef(
+    arch_id="deepseek-v3-671b", family="lm", model_cfg=CONFIG,
+    optimizer="adafactor", fsdp=True, smoke_cfg=SMOKE,
+)

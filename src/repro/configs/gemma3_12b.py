@@ -1,0 +1,26 @@
+"""Gemma3-12B [hf:google/gemma-3; unverified tier]: 48L, d=3840, GQA 16/8
+(d_head=256), d_ff=15360, vocab 262144, 5 local (window 1024) : 1 global
+pattern, 128k context."""
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+
+from .common import ArchDef
+
+CONFIG = tf.LMConfig(
+    name="gemma3-12b",
+    n_layers=48, d_model=3840, n_heads=16, n_kv=8, d_head=256, d_ff=15360,
+    vocab=262144, local_global=6, local_window=1024,
+    rope_theta=1_000_000.0, dtype=jnp.bfloat16, remat=True,
+)
+
+SMOKE = tf.LMConfig(
+    name="gemma3-smoke",
+    n_layers=6, d_model=64, n_heads=4, n_kv=2, d_head=16, d_ff=128, vocab=256,
+    local_global=3, local_window=8, dtype=jnp.float32,
+)
+
+ARCH = ArchDef(
+    arch_id="gemma3-12b", family="lm", model_cfg=CONFIG,
+    optimizer="adamw", fsdp=True, smoke_cfg=SMOKE,
+)

@@ -1,0 +1,23 @@
+"""GraphSAGE [arXiv:1706.02216]: 2 layers, d_hidden=128, mean aggregator,
+sample sizes 25-10 (minibatch_lg uses the assigned 15-10 fanout)."""
+import jax.numpy as jnp
+
+from repro.models import gnn
+
+from .common import ArchDef
+
+CONFIG = gnn.SAGEConfig(
+    name="graphsage-reddit",
+    n_layers=2, d_in=602, d_hidden=128, n_classes=41,
+    fanouts=(25, 10), aggregator="mean", dtype=jnp.float32,
+)
+
+SMOKE = gnn.SAGEConfig(
+    name="graphsage-smoke",
+    n_layers=2, d_in=16, d_hidden=8, n_classes=4, fanouts=(4, 3),
+)
+
+ARCH = ArchDef(
+    arch_id="graphsage-reddit", family="gnn", model_cfg=CONFIG,
+    optimizer="adamw", smoke_cfg=SMOKE,
+)

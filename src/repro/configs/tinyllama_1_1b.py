@@ -1,0 +1,24 @@
+"""TinyLlama 1.1B [arXiv:2401.02385]: 22L, d=2048, GQA 32/4, d_ff=5632,
+vocab 32000 (llama2 arch)."""
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+
+from .common import ArchDef
+
+CONFIG = tf.LMConfig(
+    name="tinyllama-1.1b",
+    n_layers=22, d_model=2048, n_heads=32, n_kv=4, d_head=64, d_ff=5632,
+    vocab=32000, rope_theta=10000.0, dtype=jnp.bfloat16, remat=True,
+)
+
+SMOKE = tf.LMConfig(
+    name="tinyllama-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_head=16, d_ff=128, vocab=256,
+    dtype=jnp.float32,
+)
+
+ARCH = ArchDef(
+    arch_id="tinyllama-1.1b", family="lm", model_cfg=CONFIG,
+    optimizer="adamw", smoke_cfg=SMOKE,
+)

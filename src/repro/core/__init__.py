@@ -1,0 +1,1 @@
+from . import bruteforce, distances, graph_index, lid, topk  # noqa: F401

@@ -1,0 +1,85 @@
+"""Exact nearest-neighbor search — the paper's ground truth + speedup denominator.
+
+Chunked over the base so the (q, n) score matrix never materializes; the inner
+tile uses the Pallas distance kernel when enabled (kernels.ops dispatches).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import distances
+from .topk import merge_candidates, topk_smallest
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "chunk"))
+def exact_search(
+    queries: jax.Array,
+    base: jax.Array,
+    k: int,
+    metric: str = "l2",
+    chunk: int = 16384,
+) -> tuple[jax.Array, jax.Array]:
+    """(q, d) vs (n, d) -> (dists (q,k), ids (q,k)) ascending; exact.
+
+    Scans the base in ``chunk``-row tiles keeping a running top-k, so peak
+    memory is O(q * chunk) rather than O(q * n).
+    """
+    from repro.kernels import ops  # late import to avoid cycles
+
+    n = base.shape[0]
+    chunk = min(chunk, n)
+    n_chunks = (n + chunk - 1) // chunk
+    padded = n_chunks * chunk
+    if padded != n:
+        base = jnp.concatenate(
+            [base, jnp.zeros((padded - n, base.shape[1]), base.dtype)]
+        )
+
+    q = queries.shape[0]
+    init_d = jnp.full((q, k), jnp.inf, jnp.float32)
+    init_i = jnp.full((q, k), -1, jnp.int32)
+
+    def body(carry, c):
+        best_d, best_i = carry
+        tile = jax.lax.dynamic_slice_in_dim(base, c * chunk, chunk, axis=0)
+        dmat = ops.distance_matrix(queries, tile, metric=metric)  # (q, chunk)
+        # Mask padding columns (global id >= n) before selection.
+        col_ids = c * chunk + jnp.arange(chunk)
+        dmat = jnp.where(col_ids[None, :] < n, dmat, jnp.inf)
+        cd, ci = topk_smallest(dmat, min(k, chunk))
+        ci = ci + c * chunk
+        ci = jnp.where(cd < jnp.inf, ci, -1)
+        merged = jax.vmap(lambda da, ia, db, ib: merge_candidates(da, ia, db, ib, k, dedup=False))(
+            best_d, best_i, cd, ci
+        )
+        return merged, None
+
+    (best_d, best_i), _ = jax.lax.scan(body, (init_d, init_i), jnp.arange(n_chunks))
+    return best_d, best_i
+
+
+def ground_truth(
+    queries: jax.Array, base: jax.Array, k: int, metric: str = "l2"
+) -> jax.Array:
+    """Exact top-k ids (q, k) — used for recall@k across all experiments."""
+    _, ids = exact_search(queries, base, k, metric)
+    return ids
+
+
+def exact_knn_graph(base: jax.Array, k: int, metric: str = "l2", chunk: int = 4096):
+    """Exact k-NN graph (excluding self) — oracle for NN-Descent tests."""
+    from .graph_index import KnnGraph
+
+    d, i = exact_search(base, base, k + 1, metric)
+    # Drop self-matches (first column is the point itself at distance 0 for l2;
+    # for robustness drop by id equality, not position).
+    self_mask = i == jnp.arange(base.shape[0])[:, None]
+    d = jnp.where(self_mask, jnp.inf, d)
+    i = jnp.where(self_mask, -1, i)
+    order = jnp.argsort(d, axis=-1, stable=True)
+    d = jnp.take_along_axis(d, order, axis=-1)[:, :k]
+    i = jnp.take_along_axis(i, order, axis=-1)[:, :k]
+    return KnnGraph(neighbors=i, dists=d)

@@ -1,0 +1,75 @@
+"""Metric layer — every graph/baseline module is generic over these.
+
+All metrics return "smaller is closer" scores:
+  l2  : squared euclidean (monotone in euclidean; sqrt applied only for reporting)
+  ip  : negative inner product (for MIPS-style retrieval)
+  cos : cosine distance = 1 - cosine similarity
+
+The paper uses l2 for the synthetic/SIFT/GIST data and cosine for GloVe.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Metric = str  # 'l2' | 'ip' | 'cos'
+
+METRICS = ("l2", "ip", "cos")
+
+
+def _sqnorm(x: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.square(x), axis=-1)
+
+
+def pairwise_l2(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Squared L2 distances, (n, d) x (m, d) -> (n, m). MXU-friendly form."""
+    # ||x-y||^2 = ||x||^2 - 2 x.y + ||y||^2 ; the cross term is a single matmul.
+    xx = _sqnorm(x)[:, None]
+    yy = _sqnorm(y)[None, :]
+    xy = x @ y.T
+    return jnp.maximum(xx - 2.0 * xy + yy, 0.0)
+
+
+def pairwise_ip(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Negative inner product, (n, d) x (m, d) -> (n, m)."""
+    return -(x @ y.T)
+
+
+def pairwise_cos(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Cosine distance (1 - cos sim), (n, d) x (m, d) -> (n, m)."""
+    xn = x * jax.lax.rsqrt(jnp.maximum(_sqnorm(x), 1e-12))[:, None]
+    yn = y * jax.lax.rsqrt(jnp.maximum(_sqnorm(y), 1e-12))[:, None]
+    return 1.0 - xn @ yn.T
+
+
+_PAIRWISE: dict[str, Callable[[jax.Array, jax.Array], jax.Array]] = {
+    "l2": pairwise_l2,
+    "ip": pairwise_ip,
+    "cos": pairwise_cos,
+}
+
+
+def pairwise(x: jax.Array, y: jax.Array, metric: Metric = "l2") -> jax.Array:
+    """Dense (n, m) distance matrix under ``metric``."""
+    return _PAIRWISE[metric](x, y)
+
+
+def point_to_points(q: jax.Array, pts: jax.Array, metric: Metric = "l2") -> jax.Array:
+    """(d,) vs (m, d) -> (m,) distances."""
+    return pairwise(q[None, :], pts, metric)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def distance(a: jax.Array, b: jax.Array, metric: Metric = "l2") -> jax.Array:
+    """Scalar distance between two vectors."""
+    return point_to_points(a, b[None, :], metric)[0]
+
+
+def report_scale(d: jax.Array, metric: Metric) -> jax.Array:
+    """Convert internal score to the paper's reporting scale (euclidean for l2)."""
+    if metric == "l2":
+        return jnp.sqrt(jnp.maximum(d, 0.0))
+    return d

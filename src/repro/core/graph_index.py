@@ -1,0 +1,79 @@
+"""Index containers — plain pytrees so they shard/jit/checkpoint transparently.
+
+All adjacency is fixed-out-degree, padded with INVALID (-1). Ids are global
+row indices into the base matrix. HNSW layers store adjacency in *global id
+space* plus an id->slot map per layer so search never rebases ids.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .topk import INVALID
+
+
+class KnnGraph(NamedTuple):
+    """Flat k-NN (or diversified) graph.
+
+    neighbors : (n, R) int32, padded with -1
+    dists     : (n, R) f32, +inf at padding (metric scores to the host vertex)
+    """
+
+    neighbors: jax.Array
+    dists: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.neighbors.shape[0]
+
+    @property
+    def degree(self) -> int:
+        return self.neighbors.shape[1]
+
+
+class HnswIndex(NamedTuple):
+    """Layered small-world index (paper Fig. 1 structure).
+
+    layers_neighbors : tuple over layers 0..L-1 of (n_l, M_l) int32 adjacency
+                       in global id space (-1 padded). Layer 0 is the bottom
+                       (all nodes, M_0 = 2M as in hnswlib).
+    layers_nodes     : tuple of (n_l,) int32 — global ids present per layer.
+    layers_slot      : tuple of (n,) int32 — global id -> row in that layer's
+                       adjacency (-1 if absent).
+    entry_point      : () int32 global id on the top layer.
+    levels           : (n,) int32 max level of each node.
+    """
+
+    layers_neighbors: tuple[jax.Array, ...]
+    layers_nodes: tuple[jax.Array, ...]
+    layers_slot: tuple[jax.Array, ...]
+    entry_point: jax.Array
+    levels: jax.Array
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers_neighbors)
+
+    def bottom_graph(self) -> KnnGraph:
+        """The flat graph = bottom layer (what the paper calls flat-HNSW)."""
+        nbrs = self.layers_neighbors[0]
+        return KnnGraph(neighbors=nbrs, dists=jnp.full(nbrs.shape, jnp.inf))
+
+
+def memory_bytes(graph_or_index) -> int:
+    """Index memory footprint (paper compares GD vs DPG vs HNSW on this)."""
+    return sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(graph_or_index)
+    )
+
+
+def pad_neighbors(neighbors: jax.Array, degree: int) -> jax.Array:
+    """Pad/truncate (n, r) adjacency to (n, degree) with INVALID."""
+    n, r = neighbors.shape
+    if r >= degree:
+        return neighbors[:, :degree]
+    pad = jnp.full((n, degree - r), INVALID, dtype=neighbors.dtype)
+    return jnp.concatenate([neighbors, pad], axis=1)

@@ -1,0 +1,202 @@
+"""HNSW — hierarchical navigable small-world graphs [Malkov & Yashunin].
+
+Construction is *batch-layered* (DESIGN.md §6 deviation #1): levels are drawn
+up front from the exponential distribution (P(level >= l) = exp(-l / mL),
+mL = 1/ln M, exactly HNSW's assignment); each layer's graph is then built as
+a k-NN graph over the nodes reaching that layer (brute-force for small upper
+layers, NN-Descent below), occlusion-pruned with the paper's Fig. 2 heuristic
+and reverse-unioned — i.e. the same neighbor-selection rule HNSW applies at
+insert time, evaluated in batch. The search structure and procedure are
+faithful: greedy 1-NN descent from the top-layer entry point, then an
+ef-bounded best-first search on the bottom layer.
+
+``flat_search`` is the paper's flat-HNSW control: bottom layer only, ef
+random seeds.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .beam_search import SearchResult, beam_search, random_entries
+from .bruteforce import exact_knn_graph
+from .diversify import add_reverse_edges, gd_prune
+from .graph_index import HnswIndex, KnnGraph
+from .nndescent import NNDescentConfig, build_knn_graph
+from .topk import INVALID
+
+
+class HnswConfig(NamedTuple):
+    M: int = 16                 # max neighbors, upper layers
+    m0_mult: int = 2            # bottom-layer degree = m0_mult * M (hnswlib)
+    knn_k: int = 32             # raw k-NN degree before pruning
+    brute_threshold: int = 4096  # exact graph for layers up to this size
+    max_layers: int = 6
+    nndescent: NNDescentConfig = NNDescentConfig()
+
+
+def assign_levels(key: jax.Array, n: int, cfg: HnswConfig) -> jax.Array:
+    """Exponentially-decaying layer assignment (HNSW Sec. 4)."""
+    ml = 1.0 / math.log(cfg.M)
+    u = jax.random.uniform(key, (n,), minval=1e-12, maxval=1.0)
+    lv = jnp.floor(-jnp.log(u) * ml).astype(jnp.int32)
+    return jnp.minimum(lv, cfg.max_layers - 1)
+
+
+def _layer_graph(base_sub, k, cfg: HnswConfig, metric, key) -> KnnGraph:
+    n = base_sub.shape[0]
+    k_eff = min(k, n - 1)
+    if n <= cfg.brute_threshold:
+        return exact_knn_graph(base_sub, k_eff, metric=metric)
+    nd_cfg = cfg.nndescent._replace(k=k_eff)
+    return build_knn_graph(base_sub, nd_cfg, metric=metric, key=key)
+
+
+def build_hnsw(
+    base: jax.Array,
+    cfg: HnswConfig = HnswConfig(),
+    metric: str = "l2",
+    key: jax.Array | None = None,
+    bottom_graph: KnnGraph | None = None,
+    verbose: bool = False,
+) -> HnswIndex:
+    """Build the layered index. ``bottom_graph`` lets experiments share one
+    NN-Descent graph between HNSW / KGraph+GD / DPG (paper Sec. IV)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = base.shape[0]
+    klv, key = jax.random.split(key)
+    levels = assign_levels(klv, n, cfg)
+    num_layers = int(levels.max()) + 1
+
+    layers_neighbors, layers_nodes, layers_slot = [], [], []
+    for layer in range(num_layers):
+        nodes = jnp.nonzero(levels >= layer)[0].astype(jnp.int32)
+        n_l = int(nodes.shape[0])
+        if verbose:
+            print(f"[hnsw] layer {layer}: {n_l} nodes")
+        max_deg = cfg.m0_mult * cfg.M if layer == 0 else cfg.M
+        if n_l <= 1:
+            nbrs_g = jnp.full((n_l, max_deg), INVALID, jnp.int32)
+        else:
+            key, kg = jax.random.split(key)
+            if layer == 0 and bottom_graph is not None:
+                g = bottom_graph
+            else:
+                sub = base[nodes] if layer > 0 else base
+                g = _layer_graph(sub, cfg.knn_k, cfg, metric, kg)
+            kept = gd_prune(
+                base[nodes] if layer > 0 else base, g, max_keep=cfg.M, metric=metric
+            )
+            merged = add_reverse_edges(kept, max_deg)
+            # map local row ids back to global ids
+            nbrs_g = jnp.where(merged >= 0, nodes[jnp.maximum(merged, 0)], INVALID)
+        slot = jnp.full((n,), INVALID, jnp.int32).at[nodes].set(
+            jnp.arange(n_l, dtype=jnp.int32)
+        )
+        layers_neighbors.append(nbrs_g)
+        layers_nodes.append(nodes)
+        layers_slot.append(slot)
+
+    entry = layers_nodes[-1][0]
+    return HnswIndex(
+        layers_neighbors=tuple(layers_neighbors),
+        layers_nodes=tuple(layers_nodes),
+        layers_slot=tuple(layers_slot),
+        entry_point=entry,
+        levels=levels,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _greedy_layer(queries, base, nbrs_g, slot, start_ids, metric):
+    """Greedy 1-NN descent on one layer (the coarse-to-fine step, Fig. 1).
+
+    start_ids (Q,) -> (ids (Q,), dists (Q,), comps (Q,))."""
+    from repro.kernels import ops
+
+    Q = queries.shape[0]
+    d0 = ops.gather_distance(queries, start_ids[:, None], base, metric=metric)[:, 0]
+
+    def cond(s):
+        _, _, _, done = s
+        return ~done.all()
+
+    def body(s):
+        cur, cur_d, comps, done = s
+        rows = nbrs_g[jnp.maximum(slot[jnp.maximum(cur, 0)], 0)]  # (Q, M)
+        rows = jnp.where(done[:, None], INVALID, rows)
+        nd = ops.gather_distance(queries, rows, base, metric=metric)
+        comps = comps + (rows >= 0).sum(1, dtype=jnp.int32)
+        j = jnp.argmin(nd, axis=1)
+        best_d = jnp.take_along_axis(nd, j[:, None], 1)[:, 0]
+        best_i = jnp.take_along_axis(rows, j[:, None], 1)[:, 0]
+        better = best_d < cur_d
+        return (
+            jnp.where(better, best_i, cur),
+            jnp.where(better, best_d, cur_d),
+            comps,
+            done | ~better,
+        )
+
+    cur, cur_d, comps, _ = jax.lax.while_loop(
+        cond, body, (start_ids, d0, jnp.ones((Q,), jnp.int32), jnp.zeros((Q,), bool))
+    )
+    return cur, cur_d, comps
+
+
+def hnsw_search(
+    queries: jax.Array,
+    base: jax.Array,
+    index: HnswIndex,
+    ef: int,
+    k: int = 1,
+    metric: str = "l2",
+) -> SearchResult:
+    """Top-down hierarchical search (paper Sec. III, hnswlib procedure)."""
+    Q = queries.shape[0]
+    cur = jnp.full((Q,), index.entry_point, jnp.int32)
+    comps_total = jnp.zeros((Q,), jnp.int32)
+    for layer in range(index.num_layers - 1, 0, -1):
+        cur, _, comps = _greedy_layer(
+            queries,
+            base,
+            index.layers_neighbors[layer],
+            index.layers_slot[layer],
+            cur,
+            metric,
+        )
+        comps_total = comps_total + comps
+    res = beam_search(
+        queries, base, index.layers_neighbors[0], cur[:, None], ef=ef, k=k,
+        metric=metric,
+    )
+    return res._replace(n_comps=res.n_comps + comps_total)
+
+
+def flat_search(
+    queries: jax.Array,
+    base: jax.Array,
+    index_or_graph,
+    ef: int,
+    k: int = 1,
+    metric: str = "l2",
+    key: jax.Array | None = None,
+    n_seeds: int | None = None,
+) -> SearchResult:
+    """flat-HNSW (paper Sec. IV): bottom layer only, random seeds."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    neighbors = (
+        index_or_graph.layers_neighbors[0]
+        if isinstance(index_or_graph, HnswIndex)
+        else index_or_graph.neighbors
+    )
+    n = base.shape[0]
+    E = min(n_seeds if n_seeds is not None else ef, ef)
+    entries = random_entries(key, n, queries.shape[0], E)
+    return beam_search(queries, base, neighbors, entries, ef=ef, k=k, metric=metric)

@@ -1,0 +1,74 @@
+"""Fixed-shape top-k / sorted-list utilities used across builders and search.
+
+Conventions: candidate lists are kept sorted ascending by distance; the id
+``INVALID`` (= -1) marks padding and always sorts last (distance = +inf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INVALID = jnp.int32(-1)
+INF = jnp.float32(jnp.inf)
+
+
+def topk_smallest(dists: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """(.., m) -> (values, indices) of the k smallest, ascending."""
+    neg_vals, idx = jax.lax.top_k(-dists, k)
+    return -neg_vals, idx
+
+
+def sort_by_distance(dists: jax.Array, ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sort (…, m) candidate lists ascending by distance (stable)."""
+    order = jnp.argsort(dists, axis=-1, stable=True)
+    return (
+        jnp.take_along_axis(dists, order, axis=-1),
+        jnp.take_along_axis(ids, order, axis=-1),
+    )
+
+
+def dedup_by_id(dists: jax.Array, ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mask duplicate ids (keep smallest distance per id). Fixed shape.
+
+    Works on 1-D lists; vmap for batches. Strategy: sort by (id, dist), mark
+    entries equal to their predecessor id, set their distance to +inf.
+    """
+    # Sort primarily by id, secondarily by distance: encode as lexsort via two
+    # stable argsorts (distance first, then id).
+    order_d = jnp.argsort(dists, stable=True)
+    ids_d, dists_d = ids[order_d], dists[order_d]
+    order_i = jnp.argsort(ids_d, stable=True)
+    ids_s, dists_s = ids_d[order_i], dists_d[order_i]
+    dup = jnp.concatenate([jnp.array([False]), ids_s[1:] == ids_s[:-1]])
+    dup = dup | (ids_s == INVALID)
+    dists_s = jnp.where(dup, INF, dists_s)
+    ids_s = jnp.where(dup, INVALID, ids_s)
+    return sort_by_distance(dists_s, ids_s)
+
+
+def merge_candidates(
+    dists_a: jax.Array,
+    ids_a: jax.Array,
+    dists_b: jax.Array,
+    ids_b: jax.Array,
+    k: int,
+    *,
+    dedup: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Merge two 1-D candidate lists into the k best (ascending, id-deduped)."""
+    dists = jnp.concatenate([dists_a, dists_b])
+    ids = jnp.concatenate([ids_a, ids_b])
+    if dedup:
+        dists, ids = dedup_by_id(dists, ids)
+    else:
+        dists, ids = sort_by_distance(dists, ids)
+    return dists[:k], ids[:k]
+
+
+def recall_at_k(found_ids: jax.Array, true_ids: jax.Array) -> jax.Array:
+    """Mean recall@k: fraction of true_ids (…, k) present in found_ids (…, k')."""
+    hits = (found_ids[..., :, None] == true_ids[..., None, :]) & (
+        true_ids[..., None, :] != INVALID
+    )
+    per_query = hits.any(axis=-2).sum(axis=-1) / true_ids.shape[-1]
+    return per_query.mean()

@@ -1,0 +1,138 @@
+"""Distributed graph-ANN serving: shard-and-merge (DESIGN.md §4).
+
+The base matrix and its (flat, diversified) graph are sharded over every mesh
+axis flattened into one logical 'shards' axis: device p owns rows
+[p*n/P, (p+1)*n/P) and the graph rows restricted to *local* targets (the
+builder relabels cross-shard edges to local approximations — standard for
+shard-per-machine ANN deployments; recall cost is measured in tests).
+
+Queries are replicated; each shard runs the batched beam search on its local
+graph; the global answer is an all-gather of (k, dist) pairs + local merge
+(k * P values — tiny). A lost/straggling shard degrades recall by ~n/P
+candidates instead of failing the query: ``live_mask`` drops its
+contribution (straggler mitigation by design).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.beam_search import beam_search
+from repro.core.topk import topk_smallest
+
+
+def shard_graph(base, neighbors, n_shards: int, *, rebuild: bool = True,
+                metric: str = "l2", key=None):
+    """Partition base rows into contiguous shards and produce per-shard
+    graphs.
+
+    rebuild=True (production default): each shard builds its OWN k-NN+GD
+    graph over its local rows — masking a global graph would orphan most
+    vertices (cross-shard edges dominate a random partition) and collapse
+    recall; per-shard builds keep every shard internally navigable, which is
+    how shard-per-machine ANN deployments (DiskANN-class) operate.
+    rebuild=False keeps the masked-global-graph behaviour for ablation.
+    Returns (base_shards (P, n/P, d), nbr_shards (P, n/P, R))."""
+    n = base.shape[0]
+    per = n // n_shards
+    bs, ns = [], []
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    for s in range(n_shards):
+        lo = s * per
+        shard_base = base[lo : lo + per]
+        if rebuild:
+            from repro.core.diversify import build_gd_graph
+            from repro.core.nndescent import NNDescentConfig, build_knn_graph
+
+            k = min(20, per - 1)
+            g = build_knn_graph(
+                shard_base,
+                NNDescentConfig(k=k, rounds=10),
+                metric=metric,
+                key=jax.random.fold_in(key, s),
+            )
+            local = build_gd_graph(shard_base, g, metric=metric).neighbors
+        else:
+            local = neighbors[lo : lo + per]
+            inside = (local >= lo) & (local < lo + per)
+            local = jnp.where(inside, local - lo, -1)
+        ns.append(local)
+        bs.append(shard_base)
+    return jnp.stack(bs), jnp.stack(ns)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ef", "k", "metric", "mesh", "axis")
+)
+def distributed_search(
+    queries: jax.Array,       # (Q, d) replicated
+    base_shards: jax.Array,   # (P, n/P, d) sharded on axis 0
+    nbr_shards: jax.Array,    # (P, n/P, R) sharded on axis 0
+    entry_ids: jax.Array,     # (P, Q, E) local entries per shard
+    live_mask: jax.Array,     # (P,) bool — False = failed/straggler shard
+    *,
+    ef: int,
+    k: int,
+    metric: str = "l2",
+    mesh: Mesh,
+    axis: str = "shards",
+):
+    per = base_shards.shape[1]
+
+    def local(qs, b, nb, ent, live):
+        b, nb, ent, live = b[0], nb[0], ent[0], live[0]
+        res = beam_search(qs, b, nb, ent, ef=ef, k=k, metric=metric)
+        sid = jax.lax.axis_index(axis)
+        gids = jnp.where(res.ids >= 0, res.ids + sid * per, -1)
+        d = jnp.where(live, res.dists, jnp.inf)
+        gids = jnp.where(live, gids, -1)
+        # all-gather the tiny (Q, k) result blocks and merge locally
+        all_d = jax.lax.all_gather(d, axis)       # (P, Q, k)
+        all_i = jax.lax.all_gather(gids, axis)
+        Pn = all_d.shape[0]
+        flat_d = all_d.transpose(1, 0, 2).reshape(qs.shape[0], Pn * k)
+        flat_i = all_i.transpose(1, 0, 2).reshape(qs.shape[0], Pn * k)
+        md, sel = topk_smallest(flat_d, k)
+        mi = jnp.take_along_axis(flat_i, sel, axis=1)
+        comps = jax.lax.psum(jnp.where(live, res.n_comps, 0), axis)
+        return md, mi, comps
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )(queries, base_shards, nbr_shards, entry_ids, live_mask)
+
+
+def distributed_build_and_search(
+    base, queries, mesh: Mesh, ef: int = 64, k: int = 1,
+    metric: str = "l2", key=None, graph_neighbors=None,
+):
+    """Convenience wrapper: build (or take) a flat graph, shard it over the
+    mesh's device count, search with all shards live."""
+    from repro.core.diversify import build_gd_graph
+    from repro.core.nndescent import NNDescentConfig, build_knn_graph
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n_shards = mesh.devices.size
+    if graph_neighbors is None:
+        g = build_knn_graph(base, NNDescentConfig(), metric=metric, key=key)
+        graph_neighbors = build_gd_graph(base, g, metric=metric).neighbors
+    bs, ns = shard_graph(base, graph_neighbors, n_shards)
+    per = bs.shape[1]
+    Q = queries.shape[0]
+    E = min(8, ef)
+    ent = jax.random.randint(key, (n_shards, Q, E), 0, per, dtype=jnp.int32)
+    live = jnp.ones((n_shards,), bool)
+    return distributed_search(
+        queries, bs, ns, ent, live, ef=ef, k=k, metric=metric,
+        mesh=mesh, axis=mesh.axis_names[0],
+    )

@@ -1,0 +1,66 @@
+"""Fused gather + distance Pallas kernel — the beam-search inner loop.
+
+Given per-query neighbor ids, fetch the base rows straight from HBM (scalar-
+prefetched ids drive the BlockSpec index_map, the canonical Pallas-TPU gather
+pattern) and reduce against the query without materializing a (Q, R, d)
+intermediate in HBM.
+
+Grid = (Q, R): step (q, r) DMAs base row ids[q, r] into VMEM, the query row q
+is revisited (Pallas keeps it resident across the inner r loop), and a single
+(1, d) * (1, d) reduction writes out[q, r].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gd_kernel(ids_ref, q_ref, row_ref, o_ref, *, metric: str):
+    q = q_ref[...].astype(jnp.float32)  # (1, d)
+    row = row_ref[...].astype(jnp.float32)  # (1, d)
+    if metric == "ip":
+        d = -jnp.sum(q * row)
+    elif metric == "cos":
+        qn = q * jax.lax.rsqrt(jnp.maximum(jnp.sum(q * q), 1e-12))
+        rn = row * jax.lax.rsqrt(jnp.maximum(jnp.sum(row * row), 1e-12))
+        d = 1.0 - jnp.sum(qn * rn)
+    else:
+        diff = q - row
+        d = jnp.sum(diff * diff)
+    i, r = pl.program_id(0), pl.program_id(1)
+    invalid = ids_ref[i, r] < 0
+    o_ref[0, 0] = jnp.where(invalid, jnp.inf, d)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def gather_distance(
+    queries: jax.Array,
+    ids: jax.Array,
+    base: jax.Array,
+    metric: str = "l2",
+    interpret: bool = False,
+) -> jax.Array:
+    """queries (Q, d), ids (Q, R), base (n, d) -> (Q, R) distances."""
+    Q, d = queries.shape
+    _, R = ids.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, R),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda q, r, ids: (q, 0)),  # query row
+            # Gather: the base block index is data-dependent via prefetched ids.
+            pl.BlockSpec((1, d), lambda q, r, ids: (jnp.maximum(ids[q, r], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda q, r, ids: (q, r)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_gd_kernel, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, R), jnp.float32),
+        interpret=interpret,
+    )(ids, queries, base)
+    return out

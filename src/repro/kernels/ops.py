@@ -1,0 +1,45 @@
+"""Dispatching wrappers around the Pallas kernels.
+
+On TPU the compiled kernels run natively; on CPU (this container) the default
+is the jnp reference (fast under XLA:CPU), with ``REPRO_PALLAS=interpret``
+forcing the Pallas bodies through the interpreter for validation. Tests also
+call the kernels directly with ``interpret=True``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from . import ref
+from .distance_matrix import distance_matrix as _dm_pallas
+from .gather_distance import gather_distance as _gd_pallas
+from .pq_adc import pq_adc as _adc_pallas
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env in ("ref", "interpret", "native"):
+        return env
+    return "native" if jax.default_backend() == "tpu" else "ref"
+
+
+def distance_matrix(x, y, metric: str = "l2", **kw):
+    mode = _mode()
+    if mode == "ref":
+        return ref.distance_matrix_ref(x, y, metric)
+    return _dm_pallas(x, y, metric=metric, interpret=(mode == "interpret"), **kw)
+
+
+def gather_distance(queries, ids, base, metric: str = "l2"):
+    mode = _mode()
+    if mode == "ref":
+        return ref.gather_distance_ref(queries, ids, base, metric)
+    return _gd_pallas(queries, ids, base, metric=metric, interpret=(mode == "interpret"))
+
+
+def pq_adc(codes, lut):
+    mode = _mode()
+    if mode == "ref":
+        return ref.pq_adc_ref(codes, lut)
+    return _adc_pallas(codes, lut, interpret=(mode == "interpret"))

@@ -1,0 +1,52 @@
+"""PQ asymmetric-distance-computation Pallas kernel (baseline scorer).
+
+TPU adaptation: CPU/GPU ADC gathers lut[m, code] per element; TPU has no fast
+per-lane gather, so we recast the LUT lookup as a one-hot matmul — each code
+column becomes onehot(codes[:, m]) @ lut[m], an (bn, K) x (K,) MXU contraction.
+The whole LUT (M x 256 f32 = 8KB at M=8) lives in VMEM across the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adc_kernel(codes_ref, lut_ref, o_ref):
+    codes = codes_ref[...].astype(jnp.int32)  # (bn, M)
+    lut = lut_ref[...]  # (M, K)
+    M, K = lut.shape
+    acc = jnp.zeros((codes.shape[0],), jnp.float32)
+    for m in range(M):  # static unroll; M is 8/16
+        onehot = (codes[:, m][:, None] == jnp.arange(K)[None, :]).astype(jnp.float32)
+        acc = acc + jax.lax.dot_general(
+            onehot, lut[m], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_adc(
+    codes: jax.Array, lut: jax.Array, block_n: int = 1024, interpret: bool = False
+) -> jax.Array:
+    """codes (n, M), lut (M, K) -> (n,) ADC scores."""
+    n, M = codes.shape
+    bn = min(block_n, n)
+    n_pad = (n + bn - 1) // bn * bn
+    if n_pad != n:
+        codes = jnp.pad(codes, ((0, n_pad - n), (0, 0)))
+    out = pl.pallas_call(
+        _adc_kernel,
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, M), lambda i: (i, 0)),
+            pl.BlockSpec(lut.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=interpret,
+    )(codes, lut)
+    return out[:n]

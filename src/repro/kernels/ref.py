@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel. The kernels must match these
+(assert_allclose over shape/dtype sweeps in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def distance_matrix_ref(x: jax.Array, y: jax.Array, metric: str = "l2") -> jax.Array:
+    """(q, d) x (n, d) -> (q, n) distances; fp32 accumulation."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if metric == "cos":
+        x = x * jax.lax.rsqrt(jnp.maximum(jnp.sum(x * x, -1, keepdims=True), 1e-12))
+        y = y * jax.lax.rsqrt(jnp.maximum(jnp.sum(y * y, -1, keepdims=True), 1e-12))
+        return 1.0 - x @ y.T
+    if metric == "ip":
+        return -(x @ y.T)
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    return jnp.maximum(xx - 2.0 * (x @ y.T) + yy, 0.0)
+
+
+def gather_distance_ref(
+    queries: jax.Array, ids: jax.Array, base: jax.Array, metric: str = "l2"
+) -> jax.Array:
+    """queries (Q, d), ids (Q, R) into base (n, d) -> (Q, R) distances.
+
+    Padding ids (< 0) produce +inf. This is the beam-search inner loop.
+    """
+    safe = jnp.maximum(ids, 0)
+    rows = base[safe]  # (Q, R, d)
+    q = queries[:, None, :]
+    if metric == "ip":
+        d = -jnp.sum(rows * q, axis=-1)
+    elif metric == "cos":
+        qn = q * jax.lax.rsqrt(jnp.maximum(jnp.sum(q * q, -1, keepdims=True), 1e-12))
+        rn = rows * jax.lax.rsqrt(
+            jnp.maximum(jnp.sum(rows * rows, -1, keepdims=True), 1e-12)
+        )
+        d = 1.0 - jnp.sum(rn * qn, axis=-1)
+    else:
+        diff = rows - q
+        d = jnp.sum(diff * diff, axis=-1)
+    return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def pq_adc_ref(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """codes (n, M) uint8/int32, lut (M, K) f32 -> (n,) ADC scores.
+
+    score[i] = sum_m lut[m, codes[i, m]]  (asymmetric distance computation).
+    """
+    m = jnp.arange(lut.shape[0])
+    return jnp.sum(lut[m[None, :], codes.astype(jnp.int32)], axis=-1)
+
+
+def flash_attention_ref(q, k, v, causal=True, window=None, softmax_scale=None):
+    """Dense oracle for the flash kernel: q (B,S,Hq,dh), GQA-grouped."""
+    B, S, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else dh**-0.5
+    qg = q.reshape(B, S, Hkv, G, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= pos[:, None] - pos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,323 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract the roofline terms.
+
+MUST be run as its own process (the two lines above lock jax to 512 host
+devices before any other import):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --json out.json
+
+Per cell it reports:
+  * compile OK/FAIL for the requested mesh(es),
+  * memory_analysis (bytes/device where the backend provides it, plus an
+    analytic parameter-bytes/device figure),
+  * cost_analysis FLOPs + bytes accessed,
+  * collective bytes parsed from the post-SPMD HLO (all-gather, all-reduce,
+    reduce-scatter, all-to-all, collective-permute),
+  * the three roofline terms under the v5e constants (DESIGN/EXPERIMENTS).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+# -- v5e hardware constants (per chip) ---------------------------------------
+PEAK_FLOPS = 197e12          # bf16 TFLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (~ per-chip injection for ring)
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|s64|f64)\[([0-9,]*)\]")
+_BYTES = {"bf16": 2, "f32": 4, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+          "pred": 1, "s64": 8, "f64": 8}
+
+
+def _shape_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op in the (post-SPMD) HLO.
+
+    Uses the result shape of each collective instruction line — for
+    all-gather that is the gathered (full) size, for reduce-scatter the
+    scattered size; a reasonable wire-bytes proxy for ring algorithms."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(
+            r"(?:ROOT )?%?[\w.\-]+ = \(?((?:bf16|f32|f16|s32|u32|s8|u8|pred|s64|f64)\[[0-9,]*\])",
+            s,
+        )
+        if not m:
+            continue
+        cm = _COLL_RE.search(s.split("=", 1)[1])
+        if not cm:
+            continue
+        kind = cm.group(1)
+        head = s.split("=", 1)[1]
+        head = head[: head.find(kind)]
+        total = 0
+        for t in _SHAPE_RE.finditer(head):
+            dt, dims = t.groups()
+            nelem = 1
+            if dims:
+                for d in dims.split(","):
+                    nelem *= int(d)
+            total += nelem * _BYTES[dt]
+        # XLA:CPU promotes bf16 reductions to f32 ('clone_promoted'); on the
+        # TPU target these stay bf16 on the wire — count at source width.
+        if "_promoted" in s:
+            total //= 2
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+def _cost_of(lowerable, mesh) -> tuple[float, float, dict]:
+    with mesh:
+        compiled = (
+            jax.jit(lowerable.fn, in_shardings=lowerable.in_shardings,
+                    donate_argnums=lowerable.donate)
+            .lower(*lowerable.args)
+            .compile()
+        )
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    return (
+        float(ca.get("flops", 0.0)),
+        float(ca.get("bytes accessed", 0.0)),
+        collective_bytes(compiled.as_text()),
+    )
+
+
+def lm_extrapolated_cost(ad, shape: str, mesh) -> tuple[float, float, dict]:
+    """Exact linear-in-depth cost: lower 1-block and 2-block variants with all
+    scans unrolled (XLA counts while bodies once — DESIGN/EXPERIMENTS note),
+    extrapolate to the full depth. Blocks are pattern periods (gemma3: 6)."""
+    import dataclasses as dc
+
+    from repro import configs as cfgs
+
+    cfg = ad.model_cfg
+    p = cfg.local_global or 1
+    prefix = cfg.n_dense_prefix
+    blocks = cfg.n_scan_layers // p
+    assert cfg.n_scan_layers % p == 0
+
+    def variant(nb):
+        cfg_v = dc.replace(
+            cfg, n_layers=prefix + nb * p, scan_unroll=1024, attn_unroll=1024,
+            kv_chunk=4096,  # fewer, larger chunks: same flops, smaller HLO
+        )
+        ad_v = dc.replace(ad, model_cfg=cfg_v)
+        return _cost_of(cfgs.build_lowerable(ad_v, shape, mesh), mesh)
+
+    f1, b1, c1 = variant(1)
+    f3, b3, c3 = variant(3)
+    flops = f1 + (blocks - 1) * (f3 - f1) / 2
+    byts = b1 + (blocks - 1) * (b3 - b1) / 2
+    coll = {
+        k: c1.get(k, 0) + (blocks - 1) * (c3.get(k, 0) - c1.get(k, 0)) / 2
+        for k in set(c1) | set(c3)
+    }
+    return flops, byts, coll
+
+
+def collective_top_shapes(hlo_text: str, top: int = 10) -> list[tuple[str, int, int]]:
+    """[(op+shape, count, total bytes)] for the largest collectives — the
+    §Perf diagnosis view."""
+    agg: dict[str, list[int]] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        cm = _COLL_RE.search(rhs)
+        if not cm:
+            continue
+        head = rhs[: rhs.find(cm.group(1))]
+        total = 0
+        for t in _SHAPE_RE.finditer(head):
+            dt, dims = t.groups()
+            nelem = 1
+            if dims:
+                for d in dims.split(","):
+                    nelem *= int(d)
+            total += nelem * _BYTES[dt]
+        if "_promoted" in s:
+            total //= 2
+            key = f"{cm.group(1)}[bf16-wire] {head.strip()[:72]}"
+        else:
+            key = f"{cm.group(1)} {head.strip()[:80]}"
+        agg.setdefault(key, [0, 0])
+        agg[key][0] += 1
+        agg[key][1] += total
+    return sorted(
+        ((k, v[0], v[1]) for k, v in agg.items()), key=lambda x: -x[2]
+    )[:top]
+
+
+def analyze_cell(arch_id: str, shape: str, *, multi_pod: bool,
+                 keep_hlo: bool = False) -> dict:
+    ad = configs.get_arch(arch_id)
+    cell = next(c for c in ad.cells() if c.shape == shape)
+    rec: dict = {"arch": arch_id, "shape": shape, "kind": cell.kind,
+                 "mesh": "2x16x16" if multi_pod else "16x16"}
+    if cell.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    try:
+        low = configs.build_lowerable(ad, shape, mesh)
+        with mesh:
+            jitted = jax.jit(
+                low.fn, in_shardings=low.in_shardings, donate_argnums=low.donate
+            )
+            lowered = jitted.lower(*low.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+
+        # memory analysis (backend-dependent on CPU)
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                rec["memory_analysis"] = {
+                    k: int(getattr(ma, k))
+                    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                              "temp_size_in_bytes", "generated_code_size_in_bytes")
+                    if hasattr(ma, k)
+                }
+        except Exception as e:  # pragma: no cover
+            rec["memory_analysis_error"] = str(e)
+        # analytic params+args bytes per device
+        arg_bytes = sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(low.args)
+        )
+        rec["arg_bytes_total"] = arg_bytes
+        rec["arg_bytes_per_device"] = arg_bytes // n_chips
+
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        flops = float(ca.get("flops", 0.0))
+        bytes_acc = float(ca.get("bytes accessed", 0.0))
+        rec["hlo_flops_raw"] = flops
+        rec["hlo_bytes_raw"] = bytes_acc
+
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        rec["collective_top"] = collective_top_shapes(hlo)
+        if keep_hlo:
+            rec["hlo"] = hlo
+
+        # LM train/prefill use lax.scan over layers + kv chunks; XLA counts a
+        # while body once, so extract exact costs from unrolled reduced-depth
+        # variants and extrapolate linearly (decode paths are loop-free).
+        if ad.family == "lm" and cell.kind in ("train", "prefill"):
+            flops, bytes_acc, coll = lm_extrapolated_cost(ad, shape, mesh)
+            rec["cost_method"] = "unrolled-2pt-extrapolation"
+        else:
+            rec["cost_method"] = "direct"
+        rec["hlo_flops"] = flops
+        rec["hlo_bytes"] = bytes_acc
+        rec["collectives"] = coll
+        coll_total = sum(coll.values())
+        rec["collective_bytes"] = coll_total
+
+        # roofline terms: cost_analysis FLOPs/bytes are per-device (post-SPMD)
+        rec["t_compute_s"] = flops / PEAK_FLOPS
+        rec["t_memory_s"] = bytes_acc / HBM_BW
+        rec["t_collective_s"] = coll_total / ICI_BW
+        rec["bottleneck"] = max(
+            ("compute", rec["t_compute_s"]),
+            ("memory", rec["t_memory_s"]),
+            ("collective", rec["t_collective_s"]),
+            key=lambda kv: kv[1],
+        )[0]
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    for c in configs.all_cells():
+        if args.arch and c.arch != args.arch:
+            continue
+        if args.shape and c.shape != args.shape:
+            continue
+        cells.append(c)
+    if not cells:
+        raise SystemExit("no cells selected")
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    results = []
+    for c in cells:
+        for mp in meshes:
+            rec = analyze_cell(c.arch, c.shape, multi_pod=mp)
+            results.append(rec)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                extra = (
+                    f"flops={rec['hlo_flops']:.3e} bytes={rec['hlo_bytes']:.3e} "
+                    f"coll={rec['collective_bytes']:.3e} "
+                    f"T=(c {rec['t_compute_s']:.2e}|m {rec['t_memory_s']:.2e}|"
+                    f"x {rec['t_collective_s']:.2e}) -> {rec['bottleneck']} "
+                    f"[compile {rec['compile_s']}s]"
+                )
+            elif status == "skipped":
+                extra = rec["skip_reason"][:60]
+            else:
+                extra = rec["error"][:200]
+            print(f"[dryrun] {rec['mesh']} {c.arch}:{c.shape} {status} {extra}",
+                  flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

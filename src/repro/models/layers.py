@@ -1,0 +1,418 @@
+"""Transformer building blocks shared by the LM-family architectures.
+
+Design constraints (see DESIGN.md §4):
+  * every layer fn works for full sequences (train/prefill) and single-token
+    decode with a KV cache — same weights, two code paths;
+  * attention over long sequences is a chunked online-softmax scan (flash
+    formulation in pure JAX) so prefill_32k never materializes (S, S) scores;
+  * GQA uses grouped einsum (no KV repeat materialization);
+  * MLA implements DeepSeek's latent compression, with the matrix-absorbed
+    decode path (scores directly against the cached latent);
+  * MoE uses GShard-style dense one-hot dispatch with static capacity —
+    expert-parallel friendly under GSPMD (an alternative sort-based dispatch
+    lives in the §Perf hillclimb).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# -- basics -------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x (..., S, H, dh), positions (..., S) -> rotated x."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# -- attention (chunked online-softmax, GQA-grouped) --------------------------
+
+
+def _gqa_scores(q, k):
+    """q (B,Sq,Hkv,G,dh) x k (B,Skv,Hkv,dh) -> (B,Hkv,G,Sq,Skv) fp32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+
+
+def attention_full(
+    q: jax.Array,      # (B, S, Hq, dh)
+    k: jax.Array,      # (B, S, Hkv, dh)
+    v: jax.Array,      # (B, S, Hkv, dhv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_chunk: int = 1024,
+    softmax_scale: float | None = None,
+    unroll: int = 1,   # dry-run cost analysis unrolls the kv scan
+    global_override=None,  # traced bool: True disables the window mask
+                           # (hybrid local:global archs run ONE attention
+                           # pass with a data-dependent mask, not two)
+) -> jax.Array:
+    """Chunked attention: scan over KV blocks with running (max, denom, acc).
+
+    Memory is O(S * kv_chunk) per head group instead of O(S^2); the same path
+    serves train_4k and prefill_32k.
+    """
+    B, S, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    dhv = v.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else dh**-0.5
+    qg = q.reshape(B, S, Hkv, G, dh) * scale
+
+    kv_chunk = min(kv_chunk, S)
+    assert S % kv_chunk == 0, (S, kv_chunk)
+    n_chunks = S // kv_chunk
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, dhv).transpose(1, 0, 2, 3, 4)
+
+    q_pos = jnp.arange(S)
+
+    def body(carry, blk):
+        m, l, acc = carry  # (B,Hkv,G,S), (B,Hkv,G,S), (B,Hkv,G,S,dhv)
+        kb, vb, c = blk
+        s = _gqa_scores(qg, kb)  # (B,Hkv,G,S,kv_chunk)
+        kv_pos = c * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.ones((S, kv_chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            win = q_pos[:, None] - kv_pos[None, :] < window
+            if global_override is not None:
+                win = win | global_override
+            mask &= win
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> nan
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe_m[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - safe_m, -jnp.inf))
+        corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, S), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, S, dhv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)),
+        unroll=min(unroll, n_chunks),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, dhv).astype(q.dtype)
+
+
+def attention_decode(
+    q: jax.Array,        # (B, 1, Hq, dh)
+    k_cache: jax.Array,  # (B, Smax, Hkv, dh)
+    v_cache: jax.Array,  # (B, Smax, Hkv, dhv)
+    length: jax.Array,   # (B,) valid cache length (the new token included)
+    *,
+    window: int | None = None,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    B, _, Hq, dh = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else dh**-0.5
+    qg = q.reshape(B, 1, Hkv, G, dh) * scale
+    s = _gqa_scores(qg, k_cache)[..., 0, :]  # (B,Hkv,G,Skv)
+    pos = jnp.arange(Smax)[None, :]
+    mask = pos < length[:, None]
+    if window is not None:
+        mask &= pos >= (length[:, None] - window)
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd", p, v_cache, preferred_element_type=jnp.float32
+    )
+    return out.reshape(B, 1, Hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+# -- GQA attention block -------------------------------------------------------
+
+
+def init_gqa(key, d_model, n_heads, n_kv, d_head, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d_model**-0.5
+    return {
+        "wq": (jax.random.normal(k1, (d_model, n_heads * d_head)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, n_kv * d_head)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, n_kv * d_head)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (n_heads * d_head, d_model)) * s).astype(dtype),
+    }
+
+
+def gqa_forward(
+    p: Params,
+    x: jax.Array,                 # (B, S, D)
+    positions: jax.Array,         # (B, S)
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope_theta: float,
+    window: int | None = None,
+    cache: tuple[jax.Array, jax.Array] | None = None,  # (k,v) (B,Smax,Hkv,dh)
+    cache_len: jax.Array | None = None,                # (B,) length BEFORE this token
+    kv_chunk: int = 1024,
+    unroll: int = 1,
+    global_override=None,
+):
+    B, S, D = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, d_head)
+    k = (x @ p["wk"]).reshape(B, S, n_kv, d_head)
+    v = (x @ p["wv"]).reshape(B, S, n_kv, d_head)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    if cache is None:
+        o = attention_full(q, k, v, causal=True, window=window, kv_chunk=kv_chunk,
+                           unroll=unroll, global_override=global_override)
+        new_cache = (k, v)
+    else:
+        kc, vc = cache
+        idx = cache_len  # (B,)
+        kc = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice(c, kk, (i, 0, 0)))(
+            kc, k, idx
+        )
+        vc = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice(c, vv, (i, 0, 0)))(
+            vc, v, idx
+        )
+        o = attention_decode(q, kc, vc, idx + S, window=window)
+        new_cache = (kc, vc)
+    out = o.reshape(B, S, n_heads * d_head) @ p["wo"]
+    return out, new_cache
+
+
+# -- MLA attention block (DeepSeek-V2/V3) --------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    n_heads: int = 128
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+def init_mla(key, d_model, cfg: MLAConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    s = d_model**-0.5
+    H, r = cfg.n_heads, cfg.kv_lora_rank
+
+    def w(k, shape):
+        return (jax.random.normal(k, shape) * s).astype(dtype)
+
+    return {
+        "w_dq": w(ks[0], (d_model, cfg.q_lora_rank)),
+        "q_norm": jnp.ones((cfg.q_lora_rank,), dtype),
+        "w_uq": w(ks[1], (cfg.q_lora_rank, H * (cfg.qk_nope_dim + cfg.qk_rope_dim))),
+        "w_dkv": w(ks[2], (d_model, r)),
+        "kv_norm": jnp.ones((r,), dtype),
+        "w_kr": w(ks[3], (d_model, cfg.qk_rope_dim)),
+        "w_uk": w(ks[4], (r, H * cfg.qk_nope_dim)),
+        "w_uv": w(ks[5], (r, H * cfg.v_head_dim)),
+        "wo": w(ks[6], (H * cfg.v_head_dim, d_model)),
+    }
+
+
+def mla_forward(
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: MLAConfig,
+    *,
+    rope_theta: float,
+    cache: tuple[jax.Array, jax.Array] | None = None,  # (kv_c (B,Smax,r), k_rope (B,Smax,dr))
+    cache_len: jax.Array | None = None,
+    kv_chunk: int = 1024,
+    unroll: int = 1,
+):
+    B, S, D = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = (dn + dr) ** -0.5
+
+    q_lat = rms_norm(x @ p["w_dq"], p["q_norm"])
+    q = (q_lat @ p["w_uq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, rope_theta)
+
+    kv_c = rms_norm(x @ p["w_dkv"], p["kv_norm"])      # (B, S, r)
+    k_rope = rope((x @ p["w_kr"])[:, :, None, :], positions, rope_theta)[:, :, 0]
+
+    if cache is None:
+        # train / prefill: decompress and run standard attention
+        k_nope = (kv_c @ p["w_uk"]).reshape(B, S, H, dn)
+        v = (kv_c @ p["w_uv"]).reshape(B, S, H, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, dr))], -1)
+        qf = jnp.concatenate([q_nope, q_rope], -1)
+        o = attention_full(qf, k, v, causal=True, kv_chunk=kv_chunk,
+                           softmax_scale=scale, unroll=unroll)
+        new_cache = (kv_c, k_rope)
+    else:
+        # decode: matrix-absorbed scoring against the cached latent
+        kvc_c, krc = cache
+        idx = cache_len
+        kvc_c = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0)))(
+            kvc_c, kv_c, idx
+        )
+        krc = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0)))(
+            krc, k_rope, idx
+        )
+        w_uk = p["w_uk"].reshape(-1, H, dn)             # (r, H, dn)
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)  # (B,S=1,H,r)
+        s_nope = jnp.einsum(
+            "bshr,bkr->bhsk", q_abs, kvc_c, preferred_element_type=jnp.float32
+        )
+        s_rope = jnp.einsum(
+            "bshd,bkd->bhsk", q_rope, krc, preferred_element_type=jnp.float32
+        )
+        s = (s_nope + s_rope)[:, :, 0, :] * scale        # (B,H,Skv)
+        Smax = kvc_c.shape[1]
+        mask = jnp.arange(Smax)[None, :] < (idx + S)[:, None]
+        s = jnp.where(mask[:, None], s, -jnp.inf)
+        pattn = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum(
+            "bhk,bkr->bhr", pattn, kvc_c, preferred_element_type=jnp.float32
+        )  # (B,H,r)
+        w_uv = p["w_uv"].reshape(-1, H, dv)              # (r, H, dv)
+        o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(x.dtype), w_uv)[:, None]
+        o = o.reshape(B, 1, H, dv)
+        new_cache = (kvc_c, krc)
+    out = o.reshape(B, S, H * dv) @ p["wo"]
+    return out, new_cache
+
+
+# -- MoE (GShard dense dispatch) ------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 64
+    top_k: int = 8
+    d_ff: int = 2048
+    n_shared: int = 0          # shared experts (DeepSeek)
+    shared_d_ff: int = 2048
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    expert_in_spec: Any = None     # PartitionSpec pinned on (B, E, C, D)
+    dispatch_dtype: Any = None     # §Perf D1: bf16 dispatch/combine tensors
+    dispatch_spec: Any = None      # §Perf D2: shard (B, S, E, C) over experts
+
+
+def init_moe(key, d_model, cfg: MoEConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    s = d_model**-0.5
+    E, F = cfg.n_experts, cfg.d_ff
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, E)) * s).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d_model, F)) * s).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d_model, F)) * s).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, d_model)) * s).astype(dtype),
+    }
+    if cfg.n_shared:
+        kg, ku, kd = jax.random.split(ks[4], 3)
+        Fs = cfg.shared_d_ff * cfg.n_shared
+        p["shared"] = {
+            "w_gate": (jax.random.normal(kg, (d_model, Fs)) * s).astype(dtype),
+            "w_up": (jax.random.normal(ku, (d_model, Fs)) * s).astype(dtype),
+            "w_down": (jax.random.normal(kd, (Fs, d_model)) * s).astype(dtype),
+        }
+    return p
+
+
+def moe_forward(p: Params, x: jax.Array, cfg: MoEConfig):
+    """x (B, S, D) -> (out, aux_loss). GShard-style grouped dense dispatch:
+    each batch row is a group with its own static capacity C = cf*K*S/E, so
+    the dispatch tensor is (B, S, E, C) — sharded over the data axes it stays
+    O(S*E*C) per device regardless of global batch."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    K = min(K, E)
+
+    logits = x.astype(jnp.float32) @ p["router"]               # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = max(int(cfg.capacity_factor * S * K / E), 1)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (B, S, K, E)
+    # rank of each (s, k) assignment within its expert's group queue
+    flat = onehot.reshape(B, S * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # (B, S*K, E)
+    pos = jnp.einsum("bse,bse->bs", pos, flat).reshape(B, S, K)
+    keep = pos < C
+    gate_vals = gate_vals * keep
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=jnp.float32)[..., :C]
+    disp = jnp.einsum("bske,bskc->bsec", onehot, pos_oh)       # 0/1
+    comb = jnp.einsum("bsk,bske,bskc->bsec", gate_vals, onehot, pos_oh)
+    if cfg.dispatch_dtype is not None:
+        # 0/1 masks are exact in bf16; gate values round at ~1e-3 (§Perf D1)
+        disp = disp.astype(cfg.dispatch_dtype)
+        comb = comb.astype(cfg.dispatch_dtype)
+    if cfg.dispatch_spec is not None:
+        disp = jax.lax.with_sharding_constraint(disp, cfg.dispatch_spec)
+        comb = jax.lax.with_sharding_constraint(comb, cfg.dispatch_spec)
+
+    xd = x.astype(jnp.float32) if cfg.dispatch_dtype is None else x
+    xin = jnp.einsum("bsec,bsd->becd", disp, xd).astype(x.dtype)
+    if cfg.expert_in_spec is not None:
+        xin = jax.lax.with_sharding_constraint(xin, cfg.expert_in_spec)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, p["w_gate"])) * jnp.einsum(
+        "becd,edf->becf", xin, p["w_up"]
+    )
+    eout = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    if cfg.expert_in_spec is not None:
+        eout = jax.lax.with_sharding_constraint(eout, cfg.expert_in_spec)
+    eo = eout.astype(jnp.float32) if cfg.dispatch_dtype is None else eout
+    out = jnp.einsum("bsec,becd->bsd", comb, eo).astype(x.dtype)
+
+    if cfg.n_shared:
+        sp = p["shared"]
+        out = out + swiglu(x, sp["w_gate"], sp["w_up"], sp["w_down"])
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    f = onehot.sum(axis=(0, 1, 2)) / (B * S * K)
+    pmean = probs.mean(axis=(0, 1))
+    aux = cfg.router_aux_weight * E * jnp.sum(f * pmean)
+    return out, aux
+
+
+def init_mlp(key, d_model, d_ff, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = d_model**-0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s).astype(dtype),
+    }

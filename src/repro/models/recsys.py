@@ -1,0 +1,332 @@
+"""RecSys architectures: DLRM (MLPerf), DeepFM, AutoInt, BERT4Rec.
+
+The hot path is the sparse embedding lookup. JAX has no EmbeddingBag — it is
+built here from ``jnp.take`` + ``jax.ops.segment_sum`` (the assignment calls
+this out as part of the system). Tables are row-sharded over the 'model' mesh
+axis at scale (configs attach the PartitionSpecs).
+
+The ``retrieval_cand`` shape (score 1M candidates for one query) is served by
+two backends: ``retrieval_score_exact`` (batched dot on the MXU) and
+``retrieval_score_ann`` — the paper's graph index (KGraph+GD / HNSW) over the
+item-embedding matrix, which is precisely the paper's workload (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# -- EmbeddingBag ----------------------------------------------------------------
+
+
+def embedding_bag(
+    table: jax.Array,        # (V, d)
+    ids: jax.Array,          # (L,) flat indices
+    segment_ids: jax.Array,  # (L,) bag assignment, sorted
+    num_segments: int,
+    mode: str = "sum",
+) -> jax.Array:
+    """torch.nn.EmbeddingBag equivalent: gather rows, segment-reduce bags."""
+    rows = jnp.take(table, ids, axis=0)
+    if mode == "max":
+        out = jax.ops.segment_max(rows, segment_ids, num_segments=num_segments)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(segment_ids, table.dtype), segment_ids, num_segments
+        )
+        out = out / jnp.maximum(cnt[:, None], 1.0)
+    return out
+
+
+def _mlp_init(key, dims, dtype):
+    ws = []
+    for i in range(len(dims) - 1):
+        k1, key = jax.random.split(key)
+        s = dims[i] ** -0.5
+        ws.append(
+            {
+                "w": (jax.random.normal(k1, (dims[i], dims[i + 1])) * s).astype(dtype),
+                "b": jnp.zeros((dims[i + 1],), dtype),
+            }
+        )
+    return ws
+
+
+def _mlp(ws, x, final_act=False):
+    for i, l in enumerate(ws):
+        x = x @ l["w"] + l["b"]
+        if i < len(ws) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# -- DLRM (MLPerf config) ----------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    vocab_sizes: tuple[int, ...] = ()   # one per sparse field (26 for Criteo)
+    embed_dim: int = 128
+    bot_mlp: tuple[int, ...] = (512, 256, 128)
+    top_mlp: tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    dtype: Any = jnp.float32
+
+
+def dlrm_init(key, cfg: DLRMConfig) -> Params:
+    kt, kb, ktop = jax.random.split(key, 3)
+    tables = []
+    for i, v in enumerate(cfg.vocab_sizes):
+        kt, k1 = jax.random.split(kt)
+        tables.append(
+            (jax.random.normal(k1, (v, cfg.embed_dim)) * v**-0.25).astype(cfg.dtype)
+        )
+    n_f = len(cfg.vocab_sizes) + 1
+    n_inter = n_f * (n_f - 1) // 2
+    return {
+        "tables": tables,
+        "bot": _mlp_init(kb, (cfg.n_dense,) + cfg.bot_mlp, cfg.dtype),
+        "top": _mlp_init(ktop, (n_inter + cfg.bot_mlp[-1],) + cfg.top_mlp, cfg.dtype),
+    }
+
+
+def dlrm_forward(params: Params, dense: jax.Array, sparse_ids: jax.Array,
+                 cfg: DLRMConfig, rows: list | None = None) -> jax.Array:
+    """dense (B, 13), sparse_ids (B, 26) -> logits (B,). Dot interaction.
+    ``rows`` lets the sparse-update train step (§Perf D3) pass pre-gathered
+    embedding rows so gradients flow to the rows, not the dense tables."""
+    B = dense.shape[0]
+    d = _mlp(params["bot"], dense.astype(cfg.dtype), final_act=True)  # (B, 128)
+    embs = rows if rows is not None else [
+        t[sparse_ids[:, i]] for i, t in enumerate(params["tables"])
+    ]
+    feats = jnp.stack([d] + embs, axis=1)                   # (B, F, 128)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)        # (B, F, F)
+    fi, gi = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, fi, gi]                                 # (B, F(F-1)/2)
+    top_in = jnp.concatenate([d, flat], axis=1)
+    return _mlp(params["top"], top_in)[:, 0]
+
+
+# -- DeepFM --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    vocab_sizes: tuple[int, ...] = ()   # 39 fields for Criteo-full
+    embed_dim: int = 10
+    mlp: tuple[int, ...] = (400, 400, 400)
+    dtype: Any = jnp.float32
+
+
+def deepfm_init(key, cfg: DeepFMConfig) -> Params:
+    kt, kw, km = jax.random.split(key, 3)
+    tables, firsts = [], []
+    for v in cfg.vocab_sizes:
+        kt, k1, k2 = jax.random.split(kt, 3)
+        tables.append((jax.random.normal(k1, (v, cfg.embed_dim)) * v**-0.25).astype(cfg.dtype))
+        firsts.append((jax.random.normal(k2, (v,)) * v**-0.25).astype(cfg.dtype))
+    F = len(cfg.vocab_sizes)
+    return {
+        "tables": tables,
+        "first": firsts,
+        "mlp": _mlp_init(km, (F * cfg.embed_dim,) + cfg.mlp + (1,), cfg.dtype),
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+
+
+def deepfm_forward(params: Params, sparse_ids: jax.Array, cfg: DeepFMConfig):
+    """sparse_ids (B, F) -> logits (B,). FM + deep branches share embeddings."""
+    embs = jnp.stack(
+        [t[sparse_ids[:, i]] for i, t in enumerate(params["tables"])], axis=1
+    )  # (B, F, d)
+    first = sum(params["first"][i][sparse_ids[:, i]] for i in range(len(params["first"])))
+    # FM 2nd order: 0.5 * ((sum v)^2 - sum v^2)
+    s = embs.sum(axis=1)
+    fm2 = 0.5 * (jnp.square(s) - jnp.square(embs).sum(axis=1)).sum(axis=-1)
+    deep = _mlp(params["mlp"], embs.reshape(embs.shape[0], -1))[:, 0]
+    return params["bias"] + first + fm2 + deep
+
+
+# -- AutoInt ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    vocab_sizes: tuple[int, ...] = ()
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    dtype: Any = jnp.float32
+
+
+def autoint_init(key, cfg: AutoIntConfig) -> Params:
+    kt, ka, ko = jax.random.split(key, 3)
+    tables = []
+    for v in cfg.vocab_sizes:
+        kt, k1 = jax.random.split(kt)
+        tables.append((jax.random.normal(k1, (v, cfg.embed_dim)) * v**-0.25).astype(cfg.dtype))
+    layers = []
+    d_in = cfg.embed_dim
+    for _ in range(cfg.n_attn_layers):
+        ka, kq, kk, kv, kr = jax.random.split(ka, 5)
+        s = d_in**-0.5
+        layers.append(
+            {
+                "wq": (jax.random.normal(kq, (d_in, cfg.n_heads * cfg.d_attn)) * s).astype(cfg.dtype),
+                "wk": (jax.random.normal(kk, (d_in, cfg.n_heads * cfg.d_attn)) * s).astype(cfg.dtype),
+                "wv": (jax.random.normal(kv, (d_in, cfg.n_heads * cfg.d_attn)) * s).astype(cfg.dtype),
+                "wres": (jax.random.normal(kr, (d_in, cfg.n_heads * cfg.d_attn)) * s).astype(cfg.dtype),
+            }
+        )
+        d_in = cfg.n_heads * cfg.d_attn
+    F = len(cfg.vocab_sizes)
+    head = (jax.random.normal(ko, (F * d_in,)) * (F * d_in) ** -0.5).astype(cfg.dtype)
+    return {"tables": tables, "layers": layers, "head": head}
+
+
+def autoint_forward(params: Params, sparse_ids: jax.Array, cfg: AutoIntConfig):
+    h = jnp.stack([t[sparse_ids[:, i]] for i, t in enumerate(params["tables"])], axis=1)
+    for lp in params["layers"]:
+        B, F, d = h.shape
+        q = (h @ lp["wq"]).reshape(B, F, cfg.n_heads, cfg.d_attn)
+        k = (h @ lp["wk"]).reshape(B, F, cfg.n_heads, cfg.d_attn)
+        v = (h @ lp["wv"]).reshape(B, F, cfg.n_heads, cfg.d_attn)
+        s = jnp.einsum("bfhd,bghd->bhfg", q, k) * cfg.d_attn**-0.5
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", p, v).reshape(B, F, -1)
+        h = jax.nn.relu(o + h @ lp["wres"])
+    return (h.reshape(h.shape[0], -1) * params["head"]).sum(axis=-1)
+
+
+# -- BERT4Rec ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 54546           # ML-20M items; +1 mask +1 pad appended
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    dtype: Any = jnp.float32
+
+    @property
+    def vocab(self) -> int:
+        return self.n_items + 2
+
+    @property
+    def mask_token(self) -> int:
+        return self.n_items
+
+    @property
+    def pad_token(self) -> int:
+        return self.n_items + 1
+
+
+def bert4rec_init(key, cfg: Bert4RecConfig) -> Params:
+    ke, kp, kb = jax.random.split(key, 3)
+    s = cfg.embed_dim**-0.5
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        kb, kq, kk, kv, ko, k1, k2 = jax.random.split(kb, 7)
+        D = cfg.embed_dim
+        blocks.append(
+            {
+                "ln1": jnp.ones((D,), cfg.dtype),
+                "wq": (jax.random.normal(kq, (D, D)) * s).astype(cfg.dtype),
+                "wk": (jax.random.normal(kk, (D, D)) * s).astype(cfg.dtype),
+                "wv": (jax.random.normal(kv, (D, D)) * s).astype(cfg.dtype),
+                "wo": (jax.random.normal(ko, (D, D)) * s).astype(cfg.dtype),
+                "ln2": jnp.ones((D,), cfg.dtype),
+                "w1": (jax.random.normal(k1, (D, 4 * D)) * s).astype(cfg.dtype),
+                "w2": (jax.random.normal(k2, (4 * D, D)) * (4 * D) ** -0.5).astype(cfg.dtype),
+            }
+        )
+    return {
+        "item_emb": (jax.random.normal(ke, (cfg.vocab, cfg.embed_dim)) * s).astype(cfg.dtype),
+        "pos_emb": (jax.random.normal(kp, (cfg.seq_len, cfg.embed_dim)) * s).astype(cfg.dtype),
+        "blocks": blocks,
+        "final_ln": jnp.ones((cfg.embed_dim,), cfg.dtype),
+    }
+
+
+def _rms(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + 1e-6) * g
+
+
+def bert4rec_forward(params: Params, item_seq: jax.Array, cfg: Bert4RecConfig):
+    """item_seq (B, S) -> hidden (B, S, D). Bidirectional (no causal mask);
+    pad positions masked out of attention."""
+    B, S = item_seq.shape
+    h = params["item_emb"][item_seq] + params["pos_emb"][None, :S]
+    pad = item_seq == cfg.pad_token
+    for bp in params["blocks"]:
+        x = _rms(h, bp["ln1"])
+        D, H = cfg.embed_dim, cfg.n_heads
+        dh = D // H
+        q = (x @ bp["wq"]).reshape(B, S, H, dh)
+        k = (x @ bp["wk"]).reshape(B, S, H, dh)
+        v = (x @ bp["wv"]).reshape(B, S, H, dh)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * dh**-0.5
+        s = jnp.where(pad[:, None, None, :], -jnp.inf, s)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(B, S, D)
+        h = h + o @ bp["wo"]
+        x = _rms(h, bp["ln2"])
+        h = h + jax.nn.gelu(x @ bp["w1"]) @ bp["w2"]
+    return _rms(h, params["final_ln"])
+
+
+def bert4rec_loss(params: Params, item_seq: jax.Array, masked_pos: jax.Array,
+                  labels: jax.Array, cfg: Bert4RecConfig):
+    """Masked-item prediction with a FIXED number of masked positions per row
+    (masked_pos (B, M), labels (B, M), -100 = unused slot). Scoring only the
+    M masked positions keeps the logits tensor (B, M, V) instead of (B, S, V)
+    — the difference between 2.8 PB and a few GB at the train_batch shape."""
+    h = bert4rec_forward(params, item_seq, cfg)            # (B, S, D)
+    hm = jnp.take_along_axis(h, masked_pos[..., None], axis=1)  # (B, M, D)
+    logits = (hm @ params["item_emb"].T).astype(jnp.float32)    # (B, M, V)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], -1)[..., 0]
+    return jnp.where(valid, logz - gold, 0.0).sum() / jnp.maximum(valid.sum(), 1)
+
+
+# -- retrieval scoring (the paper's workload) ----------------------------------------
+
+
+def retrieval_score_exact(query_emb: jax.Array, item_embs: jax.Array,
+                          k: int = 100):
+    """(B, d) x (n_cand, d) -> top-k by inner product, brute force (MXU)."""
+    from repro.core.bruteforce import exact_search
+
+    return exact_search(query_emb, item_embs, k, metric="ip")
+
+
+def retrieval_score_ann(query_emb: jax.Array, item_embs: jax.Array,
+                        graph_neighbors: jax.Array, k: int = 100,
+                        ef: int = 128, key: jax.Array | None = None):
+    """Graph-ANN backend: beam search over a KGraph+GD index of the items."""
+    from repro.core.beam_search import beam_search, random_entries
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    entries = random_entries(key, item_embs.shape[0], query_emb.shape[0],
+                             min(16, ef))
+    res = beam_search(query_emb, item_embs, graph_neighbors, entries,
+                      ef=ef, k=k, metric="ip")
+    return res.dists, res.ids

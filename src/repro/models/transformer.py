@@ -1,0 +1,396 @@
+"""LM-family model: one config-driven implementation covering the five
+assigned transformer architectures (dense GQA, SWA, local:global hybrid,
+GQA-MoE, MLA-MoE + MTP).
+
+Structure:
+  * train/prefill: ``lax.scan`` over layer-stacked weights (flat HLO in depth;
+    DeepSeek's dense-FFN prefix runs as a small python loop before the scan);
+  * decode: python loop over layers with per-layer caches — this permits
+    ragged cache sizes (sliding-window ring buffers for local layers, full
+    buffers for global/MLA-latent layers) without scan uniformity tricks;
+  * gemma3's 5 local : 1 global pattern is a traced per-layer flag toggling
+    the window mask inside the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import ad_checkpoint
+
+from . import layers as L
+
+Params = dict[str, Any]
+
+
+def _pin(x, spec):
+    """Sharding constraint when a spec is configured (stabilizes GSPMD's
+    propagation so per-depth costs are strictly linear — dryrun relies on
+    this; see EXPERIMENTS.md §Dry-run methodology)."""
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@jax.custom_vjp
+def _grad_cast_bf16(x):
+    """Identity forward; backward casts the cotangent to bf16 so cross-shard
+    gradient collectives ride the wire at half width (§Perf H2). A plain
+    astype is a no-op when dtypes already match, so it cannot do this."""
+    return x
+
+
+def _gc_fwd(x):
+    return x, None
+
+
+def _gc_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype),)
+
+
+_grad_cast_bf16.defvjp(_gc_fwd, _gc_bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv: int = 2
+    d_head: int = 64
+    d_ff: int = 512
+    vocab: int = 1024
+    attention: str = "gqa"              # 'gqa' | 'mla'
+    mla: L.MLAConfig | None = None
+    moe: L.MoEConfig | None = None
+    n_dense_prefix: int = 0             # leading dense-FFN layers (DeepSeek: 3)
+    window: int | None = None           # sliding-window width (danube)
+    local_global: int | None = None     # period P: layer % P == P-1 is global
+    local_window: int = 1024            # window width for local layers
+    rope_theta: float = 10000.0
+    mtp: bool = False                   # multi-token-prediction head (DeepSeek)
+    mtp_weight: float = 0.3
+    dtype: Any = jnp.bfloat16
+    kv_chunk: int = 1024
+    remat: bool = False                 # activation-checkpoint each layer
+    scan_unroll: int = 1                # dryrun sets n_scan_layers for exact
+                                        # cost_analysis (XLA counts a while
+                                        # body once)
+    attn_unroll: int = 1                # ditto for the kv-chunk scan
+    act_spec: Any = None                # PartitionSpec pinned on activations
+    logit_spec: Any = None              # PartitionSpec pinned on logits
+    xent_mode: str = "gather"           # 'gather' (baseline) | 'onehot'
+                                        # (vocab-sharded loss, §Perf H1)
+    bf16_grad_sync: bool = False        # §Perf H2: cast the residual at layer
+                                        # boundaries (fwd no-op) so backward
+                                        # TP collectives run in bf16, not the
+                                        # f32 the loss upcast propagates
+    remat_policy: str = "full"          # 'full' | 'save_collectives' (§Perf
+                                        # D2: do not re-run TP all-reduces in
+                                        # the remat recompute)
+
+    @property
+    def n_scan_layers(self) -> int:
+        return self.n_layers - self.n_dense_prefix
+
+    def layer_is_global(self, i: int) -> bool:
+        if self.local_global is None:
+            return self.window is None
+        return i % self.local_global == self.local_global - 1
+
+    def layer_window(self, i: int) -> int | None:
+        if self.local_global is not None:
+            return None if self.layer_is_global(i) else self.local_window
+        return self.window
+
+
+# -- init ----------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: LMConfig, dense_mlp: bool) -> Params:
+    ka, km = jax.random.split(key)
+    if cfg.attention == "mla":
+        attn = L.init_mla(ka, cfg.d_model, cfg.mla, cfg.dtype)
+    else:
+        attn = L.init_gqa(ka, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head, cfg.dtype)
+    if cfg.moe is not None and not dense_mlp:
+        mlp = L.init_moe(km, cfg.d_model, cfg.moe, cfg.dtype)
+    else:
+        mlp = L.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "attn": attn,
+        "mlp_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "mlp": mlp,
+    }
+
+
+def init_params(key: jax.Array, cfg: LMConfig) -> Params:
+    ke, kl, kh, km = jax.random.split(key, 4)
+    s = cfg.d_model**-0.5
+    p: Params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * s).astype(cfg.dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab)) * s).astype(cfg.dtype),
+    }
+    keys = jax.random.split(kl, cfg.n_layers)
+    prefix = [
+        _init_layer(keys[i], cfg, dense_mlp=True) for i in range(cfg.n_dense_prefix)
+    ]
+    if prefix:
+        p["prefix"] = prefix
+    rest = [
+        _init_layer(keys[i], cfg, dense_mlp=False)
+        for i in range(cfg.n_dense_prefix, cfg.n_layers)
+    ]
+    p["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *rest)
+    if cfg.mtp:
+        k1, k2 = jax.random.split(km)
+        p["mtp"] = {
+            "proj": (jax.random.normal(k1, (2 * cfg.d_model, cfg.d_model)) * s).astype(
+                cfg.dtype
+            ),
+            "layer": _init_layer(k2, cfg, dense_mlp=True),
+            "norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        }
+    return p
+
+
+# -- forward (train / prefill) ---------------------------------------------------
+
+
+def _layer_forward(lp: Params, x, positions, cfg: LMConfig, is_global, window):
+    """One block, no cache. ``is_global`` (traced bool) toggles the window mask
+    when the arch has a local:global pattern; ``window`` is the static width."""
+    h = L.rms_norm(x, lp["attn_norm"])
+    if cfg.attention == "mla":
+        a, _ = L.mla_forward(
+            lp["attn"], h, positions, cfg.mla, rope_theta=cfg.rope_theta,
+            kv_chunk=cfg.kv_chunk, unroll=cfg.attn_unroll,
+        )
+    else:
+        # hybrid archs run ONE attention pass; the traced is_global flag
+        # widens the mask for global layers (no duplicated compute)
+        hybrid = window is not None and cfg.local_global is not None
+        a, _ = L.gqa_forward(
+            lp["attn"], h, positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.d_head,
+            rope_theta=cfg.rope_theta,
+            window=window, kv_chunk=cfg.kv_chunk, unroll=cfg.attn_unroll,
+            global_override=is_global if hybrid else None,
+        )
+    x = x + a
+    if cfg.remat_policy == "save_collectives":
+        x = ad_checkpoint.checkpoint_name(x, "attn_out")
+    h = L.rms_norm(x, lp["mlp_norm"])
+    aux = jnp.float32(0.0)
+    if cfg.moe is not None and "router" in lp["mlp"]:
+        m, aux = L.moe_forward(lp["mlp"], h, cfg.moe)
+    else:
+        m = L.swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+    out = x + m
+    if cfg.remat_policy == "save_collectives":
+        out = ad_checkpoint.checkpoint_name(out, "mlp_out")
+    return out, aux
+
+
+def forward(params: Params, tokens: jax.Array, cfg: LMConfig):
+    """tokens (B, S) -> (hidden (B, S, D), aux_loss)."""
+    B, S = tokens.shape
+    x = _pin(params["embed"][tokens], cfg.act_spec)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux_total = jnp.float32(0.0)
+
+    for i in range(cfg.n_dense_prefix):
+        x, aux = _layer_forward(
+            params["prefix"][i], x, positions, cfg,
+            is_global=jnp.bool_(cfg.layer_is_global(i)),
+            window=cfg.layer_window(i),
+        )
+        aux_total += aux
+
+    n_scan = cfg.n_scan_layers
+    # hybrid pattern flag per scanned layer
+    flags = jnp.array(
+        [cfg.layer_is_global(i + cfg.n_dense_prefix) for i in range(n_scan)]
+    )
+    scan_window = (
+        cfg.local_window if cfg.local_global is not None else cfg.window
+    )
+
+    def body(carry, inp):
+        x, aux = carry
+        lp, flag = inp
+        x, a = _layer_forward(lp, x, positions, cfg, is_global=flag, window=scan_window)
+        if cfg.bf16_grad_sync:
+            x = x.astype(cfg.dtype)  # fwd no-op; bwd casts the cotangent
+        return (_pin(x, cfg.act_spec), aux + a), None
+
+    if cfg.remat:
+        if cfg.remat_policy == "save_collectives":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    "attn_out", "mlp_out"
+                ),
+            )
+        else:
+            body = jax.checkpoint(body)
+    (x, aux_total), _ = jax.lax.scan(
+        body, (x, aux_total), (params["layers"], flags),
+        unroll=min(cfg.scan_unroll, n_scan),
+    )
+    return L.rms_norm(x, params["final_norm"]), aux_total
+
+
+def _sharded_xent(logits, labels, cfg):
+    """Cross-entropy that stays vocab-sharded: logsumexp reduces locally with
+    a tiny cross-shard max/sum, and the gold logit is picked by a one-hot
+    contraction (partial-sum + psum of (B, S)) instead of take_along_axis,
+    which would all-gather the (B, S, V) logits. Identical values."""
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    if cfg.xent_mode == "onehot":
+        onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    else:
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, logz - gold, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def loss_fn(params: Params, batch: dict, cfg: LMConfig):
+    """batch: tokens (B, S), labels (B, S) with -100 = ignore."""
+    h, aux = forward(params, batch["tokens"], cfg)
+    logits = _pin((h @ params["lm_head"]).astype(jnp.float32), cfg.logit_spec)
+    labels = batch["labels"]
+    loss = _sharded_xent(logits, labels, cfg)
+    nll_main = loss
+
+    if cfg.mtp:
+        # depth-1 MTP head (DeepSeek-V3): predict token t+2 from h_t ++ emb_{t+1}
+        mp = params["mtp"]
+        emb_next = params["embed"][jnp.roll(batch["tokens"], -1, axis=1)]
+        hm = jnp.concatenate([L.rms_norm(h, mp["norm"]), emb_next], axis=-1) @ mp["proj"]
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        hm, _ = _layer_forward(
+            mp["layer"], hm, positions, cfg, is_global=jnp.bool_(True), window=None
+        )
+        logits_m = _pin((hm @ params["lm_head"]).astype(jnp.float32),
+                        cfg.logit_spec)
+        labels_m = jnp.roll(labels, -1, axis=1).at[:, -1].set(-100)
+        loss = loss + cfg.mtp_weight * _sharded_xent(logits_m, labels_m, cfg)
+
+    return loss + aux, {"nll": nll_main, "aux": aux}
+
+
+# -- decode (serving) ------------------------------------------------------------
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> list:
+    """Per-layer cache list. Local layers get ring buffers of their window."""
+    caches = []
+    for i in range(cfg.n_layers):
+        w = cfg.layer_window(i)
+        size = max_len if w is None else min(w, max_len)
+        if cfg.attention == "mla":
+            c = {
+                "kv_c": jnp.zeros((batch, size, cfg.mla.kv_lora_rank), cfg.dtype),
+                "k_rope": jnp.zeros((batch, size, cfg.mla.qk_rope_dim), cfg.dtype),
+            }
+        else:
+            c = {
+                "k": jnp.zeros((batch, size, cfg.n_kv, cfg.d_head), cfg.dtype),
+                "v": jnp.zeros((batch, size, cfg.n_kv, cfg.d_head), cfg.dtype),
+                "pos": jnp.full((batch, size), -1, jnp.int32),
+            }
+        caches.append(c)
+    return caches
+
+
+def _decode_layer(lp, x, pos, cache, cfg: LMConfig, layer_idx: int):
+    """One layer, one token. pos (B,) absolute position of this token."""
+    B = x.shape[0]
+    w = cfg.layer_window(layer_idx)
+    h = L.rms_norm(x, lp["attn_norm"])
+    positions = pos[:, None]
+    if cfg.attention == "mla":
+        # MLA caches are full-length (latent is small) — slot = pos
+        a, new_cache = L.mla_forward(
+            lp["attn"], h[:, None, :], positions, cfg.mla, rope_theta=cfg.rope_theta,
+            cache=(cache["kv_c"], cache["k_rope"]), cache_len=pos,
+        )
+        a = a  # (B, 1, D); squeezed below with the shared path
+        cache = {"kv_c": new_cache[0], "k_rope": new_cache[1]}
+    else:
+        size = cache["k"].shape[1]
+        slot = pos % size if w is not None and w <= size else pos
+        q = (h @ lp["attn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.d_head)
+        k = (h @ lp["attn"]["wk"]).reshape(B, 1, cfg.n_kv, cfg.d_head)
+        v = (h @ lp["attn"]["wv"]).reshape(B, 1, cfg.n_kv, cfg.d_head)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        upd = lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i,) + (0,) * (c.ndim - 1))
+        kc = jax.vmap(upd)(cache["k"], k, slot)
+        vc = jax.vmap(upd)(cache["v"], v, slot)
+        pc = jax.vmap(lambda c, i, p: c.at[i].set(p))(cache["pos"], slot, pos)
+        # mask straight from stored absolute positions (ring-safe)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk",
+            q.reshape(B, 1, cfg.n_kv, cfg.n_heads // cfg.n_kv, cfg.d_head)
+            * cfg.d_head**-0.5,
+            kc,
+            preferred_element_type=jnp.float32,
+        )[..., 0, :]
+        valid = (pc >= 0) & (pc <= pos[:, None])
+        if w is not None:
+            valid &= pc > (pos[:, None] - w)
+        s = jnp.where(valid[:, None, None], s, -jnp.inf)
+        pattn = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgk,bkhd->bhgd", pattn, vc, preferred_element_type=jnp.float32)
+        a = o.reshape(B, 1, cfg.n_heads * cfg.d_head).astype(x.dtype) @ lp["attn"]["wo"]
+        cache = {"k": kc, "v": vc, "pos": pc}
+    x = x + a[:, 0]
+    h = L.rms_norm(x, lp["mlp_norm"])
+    if cfg.moe is not None and "router" in lp["mlp"]:
+        m, _ = L.moe_forward(lp["mlp"], h[:, None, :], cfg.moe)
+        m = m[:, 0]
+    else:
+        m = L.swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+    return x + m, cache
+
+
+def decode_step(params: Params, token: jax.Array, pos: jax.Array, caches: list,
+                cfg: LMConfig):
+    """token (B,), pos (B,) -> (logits (B, V), new caches). One AR step."""
+    x = params["embed"][token]
+    new_caches = []
+    li = 0
+    for i in range(cfg.n_dense_prefix):
+        x, c = _decode_layer(params["prefix"][i], x, pos, caches[li], cfg, li)
+        new_caches.append(c)
+        li += 1
+    for j in range(cfg.n_scan_layers):
+        lp = jax.tree.map(lambda a, j=j: a[j], params["layers"])
+        x, c = _decode_layer(lp, x, pos, caches[li], cfg, li)
+        new_caches.append(c)
+        li += 1
+    h = L.rms_norm(x, params["final_norm"])
+    return (h @ params["lm_head"]).astype(jnp.float32), new_caches
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: LMConfig):
+    """Full-sequence forward returning last-position logits (cache omitted:
+    the dry-run prefill cell measures the compute path; serving wires
+    prefill->decode through ``init_cache`` + per-token writes)."""
+    h, _ = forward(params, tokens, cfg)
+    return (h[:, -1] @ params["lm_head"]).astype(jnp.float32)
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

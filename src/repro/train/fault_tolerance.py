@@ -1,0 +1,69 @@
+"""Failure handling: checkpoint/restart harness + failure injection for tests.
+
+At 1000+ nodes the failure model is: a worker dies -> the job controller
+re-execs -> the run must resume bit-exactly from the last atomic checkpoint
+(weights, optimizer, data-pipeline position). ``run_with_restarts`` is that
+controller in miniature: it drives a step function, injects/absorbs
+``SimulatedFailure``s, restores from the newest checkpoint and continues.
+Determinism comes from step-indexed data (data/pipeline.py) and the atomic
+checkpoint protocol (train/checkpoint.py).
+
+Straggler policy (documented here, implemented where it lives):
+  * serving: shard-dropout merge in distributed/sharded_ann.py (a late shard
+    is masked out of the top-k merge; recall degrades, latency does not);
+  * training: static balanced sharding + synchronous steps; the restart path
+    above covers fail-stop. Asynchronous gradient schemes are intentionally
+    out (the paper's workload is latency-critical search, not async SGD).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from . import checkpoint as ckpt_lib
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by failure-injection hooks to emulate a node loss."""
+
+
+def run_with_restarts(
+    *,
+    total_steps: int,
+    make_initial_state: Callable[[], Any],
+    step_fn: Callable[[int, Any], Any],
+    ckpt_dir: str,
+    ckpt_every: int = 10,
+    max_restarts: int = 10,
+    failure_hook: Callable[[int], None] | None = None,
+) -> tuple[Any, dict]:
+    """Drive step_fn with checkpoint/restart. failure_hook(step) may raise
+    SimulatedFailure at any step; the harness restores and continues."""
+    template = make_initial_state()
+    restored = ckpt_lib.restore_latest(ckpt_dir, template)
+    if restored is not None:
+        step, state, _ = restored
+    else:
+        step, state = 0, template
+
+    restarts = 0
+    while step < total_steps:
+        try:
+            if failure_hook is not None:
+                failure_hook(step)
+            state = step_fn(step, state)
+            step += 1
+            if step % ckpt_every == 0:
+                ckpt_lib.save(ckpt_dir, step, state)
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise RuntimeError("restart budget exhausted")
+            restored = ckpt_lib.restore_latest(ckpt_dir, template)
+            if restored is not None:
+                step, state, _ = restored
+            else:
+                step, state = 0, make_initial_state()
+    ckpt_lib.save(ckpt_dir, step, state)
+    return state, {"restarts": restarts, "final_step": step}

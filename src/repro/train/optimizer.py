@@ -1,0 +1,163 @@
+"""Optimizers in plain JAX pytree form.
+
+AdamW for the small/medium archs; Adafactor (factored second moments, no
+first moment) for the ≥30B MoE archs where full Adam state would not fit a
+v5e pod (DESIGN.md §4). Both are sharding-transparent: state pytrees mirror
+the parameter pytree, so GSPMD shards them identically to the params.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# -- AdamW ---------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        new_p = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+
+# -- Adafactor ------------------------------------------------------------------
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Params  # row stats (or full v for <2D leaves)
+    vc: Params  # col stats (zeros-placeholder for <2D leaves)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(p):
+        return (
+            jnp.zeros(p.shape[:-1], jnp.float32)
+            if _factored(p)
+            else jnp.zeros(p.shape, jnp.float32)
+        )
+
+    def vc(p):
+        return (
+            jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            if _factored(p)
+            else jnp.zeros((1,), jnp.float32)
+        )
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(vr, params),
+        vc=jax.tree.map(vc, params),
+    )
+
+
+def adafactor_update(
+    grads,
+    state: AdafactorState,
+    params,
+    lr: float = 1e-3,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+):
+    step = state.step + 1
+    beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+    def upd(g, vr, vc, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if _factored(p):
+            vr_n = beta * vr + (1 - beta) * g2.mean(axis=-1)
+            vc_n = beta * vc + (1 - beta) * g2.mean(axis=-2)
+            denom = (
+                vr_n[..., :, None]
+                * vc_n[..., None, :]
+                / jnp.maximum(vr_n.mean(axis=-1)[..., None, None], eps)
+            )
+            u = g32 * jax.lax.rsqrt(jnp.maximum(denom, eps))
+        else:
+            vr_n = beta * vr + (1 - beta) * g2
+            vc_n = vc
+            u = g32 * jax.lax.rsqrt(jnp.maximum(vr_n, eps))
+        # update clipping (RMS of update <= clip_threshold)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        new_p = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), vr_n, vc_n
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    istup = lambda x: isinstance(x, tuple)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=istup)
+    new_vr = jax.tree.map(lambda t: t[1], out, is_leaf=istup)
+    new_vc = jax.tree.map(lambda t: t[2], out, is_leaf=istup)
+    return new_params, AdafactorState(step=step, vr=new_vr, vc=new_vc), None
+
+
+def make_optimizer(name: str, **hp):
+    """('init', 'update') pair by name. hp are bound as defaults."""
+    if name == "adamw":
+        return adamw_init, lambda g, s, p: adamw_update(g, s, p, **hp)
+    if name == "adafactor":
+        return adafactor_init, lambda g, s, p: adafactor_update(g, s, p, **hp)
+    raise ValueError(f"unknown optimizer {name}")

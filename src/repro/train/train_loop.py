@@ -1,0 +1,108 @@
+"""Generic training loop: microbatched gradient accumulation, optimizer
+update, periodic atomic checkpoints, deterministic resume.
+
+The step function is built once per (loss_fn, optimizer, accum) and jitted
+with donated state; under a mesh + shardings it becomes the pjit'd
+production step (launch/train.py wires that)."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import checkpoint as ckpt_lib
+from .optimizer import make_optimizer
+
+LossFn = Callable[[Any, dict], tuple[jax.Array, dict]]
+
+
+def make_train_step(
+    loss_fn: LossFn,
+    opt_update,
+    grad_accum: int = 1,
+    remat: bool = False,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With grad_accum > 1 the batch's leading axis is split into microbatches
+    scanned sequentially (activation memory / accum trade)."""
+    lf = jax.checkpoint(loss_fn) if remat else loss_fn
+    grad_fn = jax.value_and_grad(lf, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def resplit(x):
+                b = x.shape[0]
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+            micro = jax.tree.map(resplit, batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss, metrics = lsum / grad_accum, {}
+        params, opt_state, gnorm = opt_update(grads, opt_state, params)
+        out_metrics = {"loss": loss}
+        if gnorm is not None:
+            out_metrics["grad_norm"] = gnorm
+        out_metrics.update(metrics or {})
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def fit(
+    *,
+    init_params_fn: Callable[[jax.Array], Any],
+    loss_fn: LossFn,
+    batch_fn: Callable[[int], dict],
+    steps: int,
+    optimizer: str = "adamw",
+    opt_hp: dict | None = None,
+    grad_accum: int = 1,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    seed: int = 0,
+    log_every: int = 10,
+    remat: bool = False,
+) -> dict:
+    """Single-host driver with restore-on-start. Returns final state + history."""
+    opt_init, opt_update = make_optimizer(optimizer, **(opt_hp or {}))
+    params = init_params_fn(jax.random.PRNGKey(seed))
+    opt_state = opt_init(params)
+    start_step = 0
+
+    if ckpt_dir:
+        restored = ckpt_lib.restore_latest(ckpt_dir, (params, opt_state))
+        if restored is not None:
+            start_step, (params, opt_state), _ = restored
+            print(f"[train] resumed from step {start_step}")
+
+    step_fn = jax.jit(
+        make_train_step(loss_fn, opt_update, grad_accum, remat=remat),
+        donate_argnums=(0, 1),
+    )
+    history = []
+    t0 = time.time()
+    for step in range(start_step, steps):
+        batch = batch_fn(step)  # deterministic per-step (resume-safe)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            history.append((step, loss))
+            print(f"[train] step {step}: loss={loss:.4f} ({time.time()-t0:.1f}s)")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            ckpt_lib.save(ckpt_dir, step + 1, (params, opt_state))
+    if ckpt_dir:
+        ckpt_lib.save(ckpt_dir, steps, (params, opt_state))
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,103 @@
+"""NN-Descent convergence, diversification invariants, HNSW structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bruteforce, diversify, hnsw, nndescent
+from repro.core.topk import INVALID
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    key = jax.random.PRNGKey(0)
+    base = jax.random.uniform(key, (3000, 12))
+    exact = bruteforce.exact_knn_graph(base, 10)
+    cfg = nndescent.NNDescentConfig(k=10, sample=10, sample_nn=10, reverse=20,
+                                    rounds=12)
+    graph = nndescent.build_knn_graph(base, cfg, key=key)
+    return base, exact, graph
+
+
+def test_nndescent_recall(small_world):
+    _, exact, graph = small_world
+    rec = nndescent.graph_recall(graph, exact)
+    assert rec > 0.80, rec
+
+
+def test_nndescent_rows_unique(small_world):
+    _, _, graph = small_world
+    ids = np.asarray(graph.neighbors)
+    for row in ids[:200]:
+        row = row[row >= 0]
+        assert len(set(row.tolist())) == len(row)
+
+
+def test_gd_prune_subset_and_cap(small_world):
+    base, _, graph = small_world
+    kept = diversify.gd_prune(base, graph)
+    ids = np.asarray(graph.neighbors)
+    kp = np.asarray(kept)
+    L = graph.degree
+    for r in range(100):
+        k_r = kp[r][kp[r] >= 0]
+        assert len(k_r) <= L // 2
+        assert set(k_r.tolist()) <= set(ids[r][ids[r] >= 0].tolist())
+
+
+def test_gd_occlusion_property(small_world):
+    """Every kept neighbor is closer to the host than to any earlier-kept one
+    (paper Fig. 2 rule)."""
+    base, _, graph = small_world
+    kept = diversify.gd_prune(base, graph)
+    b = np.asarray(base)
+    kp = np.asarray(kept)
+    for r in range(50):
+        ks = [c for c in kp[r] if c >= 0]
+        for j, c in enumerate(ks):
+            d_vc = ((b[r] - b[c]) ** 2).sum()
+            for s in ks[:j]:
+                d_sc = ((b[s] - b[c]) ** 2).sum()
+                assert d_vc < d_sc + 1e-5
+
+
+def test_reverse_union_contains_forward(small_world):
+    base, _, graph = small_world
+    kept = diversify.gd_prune(base, graph)
+    merged = diversify.add_reverse_edges(kept, graph.degree)
+    kp, mg = np.asarray(kept), np.asarray(merged)
+    for r in range(100):
+        fwd = set(kp[r][kp[r] >= 0].tolist())
+        got = set(mg[r][mg[r] >= 0].tolist())
+        # forward edges survive unless the degree cap evicted them
+        assert len(fwd - got) == 0 or len(got) == graph.degree
+
+
+def test_dpg_prune_cap(small_world):
+    base, _, graph = small_world
+    kept = diversify.dpg_prune(base, graph)
+    kp = np.asarray(kept)
+    assert ((kp >= 0).sum(1) <= graph.degree // 2).all()
+
+
+def test_hnsw_levels_distribution():
+    cfg = hnsw.HnswConfig(M=16)
+    lv = hnsw.assign_levels(jax.random.PRNGKey(1), 200_000, cfg)
+    frac_l1 = float((lv >= 1).mean())
+    # P(level >= 1) = exp(-ln M) = 1/M
+    assert abs(frac_l1 - 1 / 16) < 0.01, frac_l1
+
+
+def test_hnsw_build_and_search_small():
+    key = jax.random.PRNGKey(2)
+    base = jax.random.uniform(key, (3000, 8))
+    queries = jax.random.uniform(jax.random.fold_in(key, 1), (50, 8))
+    idx = hnsw.build_hnsw(base, hnsw.HnswConfig(M=12, knn_k=16, brute_threshold=4096))
+    gt = bruteforce.ground_truth(queries, base, 1)
+    res = hnsw.hnsw_search(queries, base, idx, ef=24)
+    recall = float((res.ids[:, 0] == gt[:, 0]).mean())
+    assert recall > 0.9, recall
+    # bottom layer covers all nodes
+    assert idx.layers_neighbors[0].shape[0] == 3000
+    # entry point lives on the top layer
+    assert int(idx.levels[idx.entry_point]) == idx.num_layers - 1

@@ -1,0 +1,118 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topk
+from repro.core.beam_search import _is_visited, _mark_visited
+from repro.kernels import ref
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(2, 50),
+    d=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_l2_metric_axioms(n, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    dm = np.asarray(ref.distance_matrix_ref(x, x, "l2"))
+    assert (dm >= -1e-5).all()                       # non-negativity
+    np.testing.assert_allclose(dm, dm.T, atol=1e-4)  # symmetry
+    np.testing.assert_allclose(np.diag(dm), 0, atol=1e-4)
+    # triangle inequality on the sqrt scale
+    e = np.sqrt(np.maximum(dm, 0))
+    i, j, k = 0, n // 2, n - 1
+    assert e[i, k] <= e[i, j] + e[j, k] + 1e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(2, 64),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_dedup_by_id_invariants(m, k, seed):
+    key = jax.random.PRNGKey(seed)
+    dists = jax.random.uniform(key, (m,))
+    ids = jax.random.randint(jax.random.fold_in(key, 1), (m,), -1, max(m // 2, 1))
+    d, i = topk.dedup_by_id(dists, ids)
+    i_np = np.asarray(i)
+    valid = i_np[i_np >= 0]
+    assert len(set(valid.tolist())) == len(valid)          # unique ids
+    d_np = np.asarray(d)
+    finite = d_np[np.isfinite(d_np)]
+    assert (np.diff(finite) >= -1e-6).all()                # ascending prefix
+    # padding (inf) is contiguous at the tail
+    assert np.isfinite(d_np[: len(finite)]).all()
+    # every surviving id kept its smallest distance
+    for uid in set(valid.tolist()):
+        orig = np.asarray(dists)[np.asarray(ids) == uid].min()
+        kept = d_np[i_np == uid][0]
+        np.testing.assert_allclose(kept, orig, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(33, 400),
+    seed=st.integers(0, 2**16),
+)
+def test_visited_bitmap_roundtrip(n, seed):
+    key = jax.random.PRNGKey(seed)
+    Q = 3
+    W = (n + 31) // 32
+    visited = jnp.zeros((Q, W), jnp.uint32)
+    # unique ids per row (bitmap contract)
+    ids = jnp.stack(
+        [jax.random.permutation(jax.random.fold_in(key, q), n)[:10] for q in range(Q)]
+    ).astype(jnp.int32)
+    visited = _mark_visited(visited, ids)
+    assert bool(_is_visited(visited, ids).all())
+    other = (ids + 11) % n
+    fresh = ~_is_visited(visited, other)
+    # an id not in the row's marked set must read unvisited
+    marked = np.asarray(ids)
+    oth = np.asarray(other)
+    for q in range(Q):
+        for j, o in enumerate(oth[q]):
+            if o not in marked[q]:
+                assert bool(fresh[q, j])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    q=st.integers(1, 8),
+    n=st.integers(8, 64),
+    d=st.integers(1, 12),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_exact_search_matches_numpy_property(q, n, d, k, seed):
+    from repro.core import bruteforce
+
+    k = min(k, n)
+    key = jax.random.PRNGKey(seed)
+    base = jax.random.normal(key, (n, d))
+    qs = jax.random.normal(jax.random.fold_in(key, 1), (q, d))
+    dist, ids = bruteforce.exact_search(qs, base, k, chunk=16)
+    full = ((np.asarray(qs)[:, None] - np.asarray(base)[None]) ** 2).sum(-1)
+    want_d = np.sort(full, axis=1)[:, :k]
+    np.testing.assert_allclose(np.asarray(dist), want_d, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), frac=st.floats(0.1, 0.9))
+def test_moe_capacity_drop_monotone(seed, frac):
+    """Lower capacity factor can only drop more tokens (output moves toward
+    the shared/zero path), never produce NaNs."""
+    from repro.models import layers as L
+
+    cfg_hi = L.MoEConfig(n_experts=4, top_k=2, d_ff=16, capacity_factor=4.0)
+    cfg_lo = L.MoEConfig(n_experts=4, top_k=2, d_ff=16, capacity_factor=frac)
+    p = L.init_moe(jax.random.PRNGKey(seed), 16, cfg_hi)
+    x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1),
+                          (2, 8, 16))
+    out_hi, _ = L.moe_forward(p, x, cfg_hi)
+    out_lo, _ = L.moe_forward(p, x, cfg_lo)
+    assert bool(jnp.isfinite(out_hi).all()) and bool(jnp.isfinite(out_lo).all())

@@ -1,0 +1,112 @@
+"""Search-quality behaviour — the paper's core claims at CI scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import beam_search, bruteforce, diversify, hnsw, nndescent
+
+
+@pytest.fixture(scope="module")
+def world():
+    key = jax.random.PRNGKey(7)
+    base = jax.random.uniform(key, (6000, 16))
+    queries = jax.random.uniform(jax.random.fold_in(key, 1), (100, 16))
+    gt = bruteforce.ground_truth(queries, base, 1)
+    g = nndescent.build_knn_graph(
+        base, nndescent.NNDescentConfig(k=20, rounds=10), key=key
+    )
+    return base, queries, gt, g
+
+
+def test_beam_search_recall_increases_with_ef(world):
+    base, queries, gt, g = world
+    ent = beam_search.random_entries(jax.random.PRNGKey(0), 6000, 100, 4)
+    recalls = []
+    for ef in (4, 16, 64):
+        r = beam_search.beam_search(queries, base, g.neighbors, ent, ef=ef, k=1)
+        recalls.append(float((r.ids[:, 0] == gt[:, 0]).mean()))
+    assert recalls[-1] >= recalls[0]
+    assert recalls[-1] > 0.95, recalls
+
+
+def test_beam_search_beats_bruteforce_comps(world):
+    base, queries, gt, g = world
+    ent = beam_search.random_entries(jax.random.PRNGKey(0), 6000, 100, 8)
+    r = beam_search.beam_search(queries, base, g.neighbors, ent, ef=32, k=1)
+    assert float(r.n_comps.mean()) < 6000 / 3  # >3x fewer comps than exhaustive
+
+
+def test_gd_reduces_comps_at_similar_recall(world):
+    """Paper Sec. V-D: diversification saves comparisons."""
+    base, queries, gt, g = world
+    gd = diversify.build_gd_graph(base, g)
+    ent = beam_search.random_entries(jax.random.PRNGKey(1), 6000, 100, 8)
+    r_raw = beam_search.beam_search(queries, base, g.neighbors, ent, ef=32, k=1)
+    r_gd = beam_search.beam_search(queries, base, gd.neighbors, ent, ef=32, k=1)
+    rec_raw = float((r_raw.ids[:, 0] == gt[:, 0]).mean())
+    rec_gd = float((r_gd.ids[:, 0] == gt[:, 0]).mean())
+    assert rec_gd > rec_raw - 0.05
+    assert float(r_gd.n_comps.mean()) < float(r_raw.n_comps.mean())
+
+
+def test_trace_monotone(world):
+    """Fig. 6 instrumentation: best distance is non-increasing, comps
+    non-decreasing."""
+    base, queries, _, g = world
+    ent = beam_search.random_entries(jax.random.PRNGKey(2), 6000, 100, 8)
+    _, td, tc = beam_search.search_with_trace(
+        queries, base, g.neighbors, ent, ef=16, k=1, max_steps=32
+    )
+    td, tc = np.asarray(td), np.asarray(tc)
+    assert (np.diff(td, axis=0) <= 1e-6).all()
+    assert (np.diff(tc, axis=0) >= 0).all()
+
+
+def test_flat_vs_hier_high_dim():
+    """Paper Sec. V-C: at d=32 the hierarchy brings no meaningful advantage."""
+    key = jax.random.PRNGKey(11)
+    base = jax.random.uniform(key, (5000, 32))
+    queries = jax.random.uniform(jax.random.fold_in(key, 1), (60, 32))
+    gt = bruteforce.ground_truth(queries, base, 1)
+    idx = hnsw.build_hnsw(base, hnsw.HnswConfig(M=12, knn_k=20, brute_threshold=8192))
+    rh = hnsw.hnsw_search(queries, base, idx, ef=48)
+    rf = hnsw.flat_search(queries, base, idx, ef=48)
+    rec_h = float((rh.ids[:, 0] == gt[:, 0]).mean())
+    rec_f = float((rf.ids[:, 0] == gt[:, 0]).mean())
+    comps_h = float(rh.n_comps.mean())
+    comps_f = float(rf.n_comps.mean())
+    # recall parity and comparable comps (within 2x) — the paper's point
+    assert abs(rec_h - rec_f) < 0.1, (rec_h, rec_f)
+    assert comps_h < 2 * comps_f and comps_f < 2 * comps_h, (comps_h, comps_f)
+
+
+def test_multi_expansion_fewer_steps(world):
+    """Beyond-paper: expand_width=4 must cut sequential steps ~3x at equal or
+    better recall (slightly more comps allowed)."""
+    base, queries, gt, g = world
+    from repro.core import diversify
+
+    gd = diversify.build_gd_graph(base, g)
+    ent = beam_search.random_entries(jax.random.PRNGKey(5), base.shape[0],
+                                     queries.shape[0], 8)
+    r1 = beam_search.beam_search(queries, base, gd.neighbors, ent, ef=32, k=1)
+    r4 = beam_search.beam_search(queries, base, gd.neighbors, ent, ef=32, k=1,
+                                 expand_width=4)
+    rec1 = float((r1.ids[:, 0] == gt[:, 0]).mean())
+    rec4 = float((r4.ids[:, 0] == gt[:, 0]).mean())
+    assert rec4 >= rec1 - 0.02
+    assert int(r4.n_steps) < int(r1.n_steps) / 2
+    assert float(r4.n_comps.mean()) < 2 * float(r1.n_comps.mean())
+
+
+def test_projection_entries_valid(world):
+    base, queries, gt, g = world
+    import jax.numpy as jnp
+
+    proj = jax.random.normal(jax.random.PRNGKey(9), (base.shape[1], 8)) / jnp.sqrt(8.0)
+    ent = beam_search.projection_entries(queries, base @ proj, proj, 8)
+    assert ent.shape == (queries.shape[0], 8)
+    assert int(ent.min()) >= 0 and int(ent.max()) < base.shape[0]
+    r = beam_search.beam_search(queries, base, g.neighbors, ent, ef=32, k=1)
+    assert float((r.ids[:, 0] == gt[:, 0]).mean()) > 0.9

@@ -1,0 +1,50 @@
+"""End-to-end behaviour tests: the full pipeline of the paper's system."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import beam_search, bruteforce, diversify, hnsw, nndescent
+from repro.data.synthetic import lm_batch_for_step, make_ann_dataset
+
+
+def test_end_to_end_index_and_search():
+    """Dataset -> NN-Descent -> GD -> batched search -> recall + speedup,
+    the complete paper pipeline on a manifold (sift-like) dataset."""
+    base, queries, metric = make_ann_dataset("SIFT1M", scale=0.004, n_queries=50)
+    gt = bruteforce.ground_truth(queries, base, 1, metric)
+    g = nndescent.build_knn_graph(
+        base, nndescent.NNDescentConfig(k=16, rounds=10), metric=metric
+    )
+    gd = diversify.build_gd_graph(base, g, metric=metric)
+    ent = beam_search.random_entries(jax.random.PRNGKey(0), base.shape[0], 50, 8)
+    res = beam_search.beam_search(queries, base, gd.neighbors, ent, ef=48, k=1,
+                                  metric=metric)
+    recall = float((res.ids[:, 0] == gt[:, 0]).mean())
+    comps = float(res.n_comps.mean())
+    assert recall >= 0.9, recall
+    assert comps < base.shape[0] / 4, comps  # >4x fewer than exhaustive
+
+
+def test_end_to_end_hnsw_pipeline():
+    base, queries, metric = make_ann_dataset("RAND10M8D", scale=4e-4,
+                                             n_queries=40)
+    gt = bruteforce.ground_truth(queries, base, 1, metric)
+    idx = hnsw.build_hnsw(base, hnsw.HnswConfig(M=12, knn_k=16,
+                                                brute_threshold=8192))
+    res = hnsw.hnsw_search(queries, base, idx, ef=32)
+    assert float((res.ids[:, 0] == gt[:, 0]).mean()) >= 0.9
+
+
+def test_end_to_end_training_loss_decreases():
+    from repro.models import transformer as T
+    from repro.train.train_loop import fit
+
+    cfg = T.LMConfig(n_layers=2, d_model=64, n_heads=4, n_kv=2, d_head=16,
+                     d_ff=128, vocab=128, dtype=jnp.float32)
+    out = fit(
+        init_params_fn=lambda k: T.init_params(k, cfg),
+        loss_fn=lambda p, b: T.loss_fn(p, b, cfg),
+        batch_fn=lambda s: lm_batch_for_step(0, s, 8, 32, cfg.vocab),
+        steps=30, optimizer="adamw", opt_hp={"lr": 3e-3}, log_every=29,
+    )
+    hist = out["history"]
+    assert hist[-1][1] < hist[0][1], hist

@@ -1,0 +1,169 @@
+"""Optimizers, checkpointing, fault tolerance, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import compression
+from repro.train import checkpoint as ckpt
+from repro.train import fault_tolerance as ft
+from repro.train.optimizer import (
+    adafactor_init, adafactor_update, adamw_init, adamw_update,
+    clip_by_global_norm,
+)
+from repro.train.train_loop import fit, make_train_step
+
+
+def _quad_problem():
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+
+    def loss_fn(p, batch):
+        return jnp.sum((p["w"] - target) ** 2), {}
+
+    return params, loss_fn, target
+
+
+def test_adamw_converges():
+    params, loss_fn, target = _quad_problem()
+    state = adamw_init(params)
+    for _ in range(300):
+        grads = jax.grad(lambda p: loss_fn(p, None)[0])(params)
+        params, state, _ = adamw_update(grads, state, params, lr=0.05,
+                                        weight_decay=0.0)
+    np.testing.assert_allclose(params["w"], target, atol=0.05)
+
+
+def test_adafactor_converges():
+    params = {"w": jnp.zeros((4, 3))}
+    target = jnp.arange(12.0).reshape(4, 3)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    state = adafactor_init(params)
+    for _ in range(500):
+        grads = jax.grad(loss)(params)
+        params, state, _ = adafactor_update(grads, state, params, lr=0.3)
+    assert float(loss(params)) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(clipped["a"])), 1.0,
+                               rtol=1e-5)
+
+
+def test_grad_accum_equivalent():
+    params, loss_fn, _ = _quad_problem()
+
+    def loss_b(p, batch):
+        return jnp.sum((p["w"] - batch["t"]) ** 2).astype(jnp.float32), {}
+
+    _, upd = (adamw_init, lambda g, s, p: adamw_update(g, s, p, lr=0.1,
+                                                       weight_decay=0.0))
+    batch = {"t": jnp.stack([jnp.ones(3), -jnp.ones(3)])}
+    s1 = make_train_step(loss_b, upd, grad_accum=1)
+    s2 = make_train_step(loss_b, upd, grad_accum=2)
+    st = adamw_init(params)
+    p1, _, m1 = s1(params, st, batch)
+    p2, _, m2 = s2(params, st, batch)
+    np.testing.assert_allclose(p1["w"], p2["w"], rtol=1e-5, atol=1e-6)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 2))}}
+    ckpt.save(str(tmp_path), 7, state, extra={"note": "x"})
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    restored, extra = ckpt.restore(str(tmp_path), 7, state)
+    np.testing.assert_array_equal(restored["a"], state["a"])
+    assert extra["note"] == "x"
+
+
+def test_checkpoint_retention(tmp_path):
+    state = {"a": jnp.zeros(1)}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, state)
+    steps = sorted(p for p in os.listdir(tmp_path) if p.startswith("step_"))
+    assert len(steps) == 3 and steps[-1].endswith("5".zfill(10))
+
+
+def test_fit_resumes_deterministically(tmp_path):
+    from repro.data.synthetic import lm_batch_for_step
+    from repro.models import transformer as T
+
+    cfg = T.LMConfig(n_layers=1, d_model=32, n_heads=2, n_kv=1, d_head=16,
+                     d_ff=64, vocab=64, dtype=jnp.float32)
+    common = dict(
+        init_params_fn=lambda k: T.init_params(k, cfg),
+        loss_fn=lambda p, b: T.loss_fn(p, b, cfg),
+        batch_fn=lambda s: lm_batch_for_step(0, s, 4, 16, 64),
+        optimizer="adamw", opt_hp={"lr": 1e-3}, log_every=100,
+    )
+    # uninterrupted run
+    r1 = fit(steps=6, ckpt_dir=None, **common)
+    # interrupted run: 3 steps, checkpoint, then resume to 6
+    fit(steps=3, ckpt_dir=str(tmp_path), ckpt_every=100, **common)
+    r2 = fit(steps=6, ckpt_dir=str(tmp_path), ckpt_every=100, **common)
+    for a, b in zip(jax.tree.leaves(r1["params"]), jax.tree.leaves(r2["params"])):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_run_with_restarts_survives_failures(tmp_path):
+    calls = {"n": 0}
+
+    def failure_hook(step):
+        calls["n"] += 1
+        if calls["n"] in (5, 12):  # two injected crashes
+            raise ft.SimulatedFailure()
+
+    def step_fn(step, state):
+        return {"x": state["x"] + 1.0}
+
+    state, info = ft.run_with_restarts(
+        total_steps=20,
+        make_initial_state=lambda: {"x": jnp.zeros(())},
+        step_fn=step_fn,
+        ckpt_dir=str(tmp_path),
+        ckpt_every=4,
+        failure_hook=failure_hook,
+    )
+    assert info["restarts"] == 2
+    assert float(state["x"]) == 20.0  # exactly 20 effective steps
+
+
+def test_int8_quantization_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    q, s = compression.quantize_int8(x, jax.random.PRNGKey(1))
+    err = jnp.abs(compression.dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 1.01
+
+
+def test_topk_error_feedback_preserves_signal():
+    """With error feedback, repeated compression passes through the full
+    gradient over time (DGC property)."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (256,))
+    ef = compression.ef_init(x)
+    sent = jnp.zeros_like(x)
+    for _ in range(40):
+        corrected = x + ef.residual
+        vals, idx = compression.topk_compress(corrected, 16)
+        dense = compression.topk_decompress(vals, idx, 256)
+        ef = compression.EFState(residual=corrected - dense)
+        sent = sent + dense
+    # average transmitted signal approximates the true gradient direction
+    cos = jnp.sum(sent * x) / (jnp.linalg.norm(sent) * jnp.linalg.norm(x))
+    assert float(cos) > 0.98
+
+
+def test_compressed_psum_int8_single_device():
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((1, 1))
+    allreduce = compression.make_compressed_allreduce(mesh, scheme="int8")
+    g = {"w": jax.random.normal(jax.random.PRNGKey(3), (8, 4))}
+    out = allreduce(g, jax.random.PRNGKey(4))
+    np.testing.assert_allclose(out["w"], g["w"], atol=0.05)
