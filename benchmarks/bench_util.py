@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.baselines import lsh, pq, tree
 from repro.core import beam_search, bruteforce, diversify, hnsw, nndescent
+from repro.core.engine import Searcher, SearchSpec
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> tuple[float, object]:
@@ -46,27 +47,43 @@ class AnnWorld:
             bottom_graph=self.kgraph,
         )
         self.key = key
+        self._searchers = {}
+
+    def searcher_for(self, graph_or_index) -> Searcher:
+        """Engine view of any index this world built (one per graph, cached)."""
+        sid = id(graph_or_index)
+        if sid not in self._searchers:
+            if isinstance(graph_or_index, hnsw.HnswIndex):
+                s = Searcher.from_hnsw(self.base, graph_or_index,
+                                       metric=self.metric, key=self.key)
+            else:
+                s = Searcher.from_graph(self.base, graph_or_index,
+                                        metric=self.metric, key=self.key)
+            # keep the graph alive alongside its Searcher: the cache key is
+            # id(), which CPython may reuse once the object is collected
+            self._searchers[sid] = (graph_or_index, s)
+        return self._searchers[sid][1]
 
     def recall_curve(self, graph_or_index, efs=(8, 16, 32, 64, 128),
-                     hierarchical=False):
-        """[(ef, recall@1, mean comps, wall time, speedup_time, speedup_comps)]"""
+                     entry="random"):
+        """[(ef, recall@1, mean comps, wall time, speedup_time, speedup_comps)]
+
+        All methods route through the SearchEngine: ``entry`` picks the
+        seeding strategy (random = flat-HNSW, hierarchy = HNSW, ...).
+        Seeds are drawn OUTSIDE the timed call for every strategy, so ``wall``
+        times the beam core only — for ``hierarchy`` that now EXCLUDES the
+        greedy-descent time the pre-engine figures included (the ``comps``
+        column still charges seed-phase comparisons for all strategies, so
+        comps-based columns remain comparable across figure generations)."""
         rows = []
         q = self.queries
+        searcher = self.searcher_for(graph_or_index)
         for ef in efs:
-            if hierarchical:
-                fn = lambda: hnsw.hnsw_search(q, self.base, graph_or_index, ef=ef,
-                                              metric=self.metric)
-            else:
-                nbrs = (
-                    graph_or_index.layers_neighbors[0]
-                    if isinstance(graph_or_index, hnsw.HnswIndex)
-                    else graph_or_index.neighbors
-                )
-                ent = beam_search.random_entries(self.key, self.n, q.shape[0],
-                                                 min(8, ef))
-                fn = lambda: beam_search.beam_search(
-                    q, self.base, nbrs, ent, ef=ef, k=1, metric=self.metric
-                )
+            spec = SearchSpec(ef=ef, k=1, metric=self.metric, entry=entry,
+                              n_entries=min(8, ef))
+            ent, extra = searcher.seed(q, spec, key=self.key)
+            fn = lambda: searcher.search(q, spec, entries=ent,
+                                         entry_comps=extra)
             wall, res = timeit(fn, iters=2)
             recall = float((res.ids[:, 0] == self.gt[:, 0]).mean())
             comps = float(res.n_comps.mean())

@@ -36,7 +36,7 @@ def run(world: AnnWorld, name: str, out=print):
         "KGraph": world.recall_curve(world.kgraph),
         "KGraph+GD": world.recall_curve(world.gd),
         "DPG": world.recall_curve(world.dpg),
-        "HNSW": world.recall_curve(world.hnsw, hierarchical=True),
+        "HNSW": world.recall_curve(world.hnsw, entry="hierarchy"),
         "PQ": _baseline_rows(
             world,
             lambda b: pq.build_pq(b, M=8 if b.shape[1] % 8 == 0 else 4, iters=10),

@@ -7,8 +7,8 @@ from .bench_util import AnnWorld
 
 
 def run(world: AnnWorld, name: str, out=print):
-    hier = world.recall_curve(world.hnsw, hierarchical=True)
-    flat = world.recall_curve(world.hnsw, hierarchical=False)
+    hier = world.recall_curve(world.hnsw, entry="hierarchy")
+    flat = world.recall_curve(world.hnsw, entry="random")
     for h, f in zip(hier, flat):
         out(
             f"fig4/{name}/ef={h['ef']},hnsw_recall={h['recall']:.3f},"

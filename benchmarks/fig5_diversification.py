@@ -12,7 +12,7 @@ def run(world: AnnWorld, name: str, out=print):
         "KGraph": world.recall_curve(world.kgraph),
         "KGraph+GD": world.recall_curve(world.gd),
         "DPG": world.recall_curve(world.dpg),
-        "HNSW": world.recall_curve(world.hnsw, hierarchical=True),
+        "HNSW": world.recall_curve(world.hnsw, entry="hierarchy"),
     }
     for m, rows in curves.items():
         best = max(rows, key=lambda r: (r["recall"], r["speedup_comps"]))

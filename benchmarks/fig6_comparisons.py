@@ -1,12 +1,17 @@
 """Paper Fig. 6: number of comparisons spent per distance range reached —
 the curse-of-dimensionality anatomy (claim C4: high-d search spends nearly
-all comparisons in the 'close neighborhood')."""
+all comparisons in the 'close neighborhood').
+
+Each method is (entry strategy x graph) through the SearchEngine; the traced
+beam core is identical, so the figure isolates what the paper isolates — how
+the starting point shifts where comparisons are spent.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import beam_search, hnsw
 from repro.core.distances import report_scale
+from repro.core.engine import SearchSpec
 
 from .bench_util import AnnWorld
 
@@ -14,29 +19,17 @@ from .bench_util import AnnWorld
 def run(world: AnnWorld, name: str, n_queries: int = 50, ef: int = 64, out=print):
     q = world.queries[:n_queries]
     rows = {}
-    for method in ("HNSW", "flat-HNSW", "KGraph+GD"):
-        if method == "HNSW":
-            # trace the bottom-layer phase after the hierarchical descent
-            ids0 = None
-            res = hnsw.hnsw_search(q, world.base, world.hnsw, ef=ef,
-                                   metric=world.metric)
-            nbrs = world.hnsw.layers_neighbors[0]
-            ent = res.ids[:, :1]
-            _, td, tc = beam_search.search_with_trace(
-                q, world.base, nbrs, ent, ef=ef, metric=world.metric,
-                max_steps=3 * ef,
-            )
-        else:
-            nbrs = (
-                world.hnsw.layers_neighbors[0]
-                if method == "flat-HNSW"
-                else world.gd.neighbors
-            )
-            ent = beam_search.random_entries(world.key, world.n, q.shape[0], 8)
-            _, td, tc = beam_search.search_with_trace(
-                q, world.base, nbrs, ent, ef=ef, metric=world.metric,
-                max_steps=3 * ef,
-            )
+    methods = {
+        "HNSW": (world.hnsw, "hierarchy"),
+        "flat-HNSW": (world.hnsw, "random"),
+        "KGraph+GD": (world.gd, "random"),
+    }
+    for method, (graph, entry) in methods.items():
+        searcher = world.searcher_for(graph)
+        spec = SearchSpec(ef=ef, k=1, metric=world.metric, entry=entry,
+                          n_entries=8)
+        _, td, tc = searcher.search_with_trace(q, spec, key=world.key,
+                                               max_steps=3 * ef)
         td = np.asarray(report_scale(td, world.metric))   # (steps, Q)
         tc = np.asarray(tc, dtype=np.float64)
         # histogram: comparisons spent while best-distance is in each decade

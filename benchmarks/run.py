@@ -20,6 +20,7 @@ from . import (  # noqa: E402
     fig4_hierarchy,
     fig5_diversification,
     fig6_comparisons,
+    smoke,
     tab1_datasets,
 )
 from .bench_util import AnnWorld  # noqa: E402
@@ -31,7 +32,7 @@ def main() -> None:
     ap.add_argument("--datasets", default="RAND10M4D,RAND10M32D,RAND1M,SIFT1M",
                     help="comma list from repro.data.synthetic.PAPER_DATASETS")
     ap.add_argument("--only", default=None,
-                    help="comma list of benches: tab1,fig3,fig4,fig5,fig6")
+                    help="comma list of benches: tab1,fig3,fig4,fig5,fig6,smoke")
     args = ap.parse_args()
     scale_small = {"RAND10M4D": 2e-3, "RAND10M8D": 2e-3, "RAND10M16D": 2e-3,
                    "RAND10M32D": 2e-3, "RAND1M": 2e-2, "SIFT1M": 2e-2,
@@ -42,6 +43,8 @@ def main() -> None:
         return only is None or b in only
 
     t0 = time.time()
+    if want("smoke"):
+        smoke.run()
     if want("tab1"):
         tab1_datasets.run(scale=1.0 if args.full else 0.002)
 

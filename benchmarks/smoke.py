@@ -1,0 +1,81 @@
+"""Engine smoke benchmark — the perf trajectory's first data point.
+
+Runs every registered entry strategy through the one SearchEngine on a small
+synthetic world and emits ``BENCH_engine.json`` with recall@1, comparisons
+per query, and wall time per strategy, plus the beam-core batched-search
+timing (the number the hot-loop perf work is tracked against).
+
+    PYTHONPATH=src python -m benchmarks.smoke --out BENCH_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.core import bruteforce  # noqa: E402
+from repro.core.engine import ENTRY_STRATEGIES, Searcher, SearchSpec  # noqa: E402
+
+try:
+    from .bench_util import timeit  # noqa: E402
+except ImportError:  # run as a plain script: python benchmarks/smoke.py
+    from bench_util import timeit  # noqa: E402
+
+
+def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
+        out_path: str = "BENCH_engine.json", out=print) -> dict:
+    key = jax.random.PRNGKey(0)
+    base = jax.random.uniform(key, (n, d))
+    queries = jax.random.uniform(jax.random.fold_in(key, 1), (q, d))
+    gt = bruteforce.ground_truth(queries, base, 1)
+
+    searcher = Searcher.build(base, key=key, with_hierarchy=True)
+    report = {"n": n, "d": d, "q": q, "ef": ef, "strategies": {}}
+    for entry in sorted(ENTRY_STRATEGIES):
+        spec = SearchSpec(ef=ef, k=1, entry=entry)
+        wall, res = timeit(lambda: searcher.search(queries, spec), iters=3)
+        recall = float((res.ids[:, 0] == gt[:, 0]).mean())
+        comps = float(res.n_comps.mean())
+        report["strategies"][entry] = {
+            "recall_at_1": round(recall, 4),
+            "comps_per_query": round(comps, 1),
+            "wall_ms": round(wall * 1e3, 2),
+            "qps": round(q / wall, 1),
+        }
+        out(f"smoke/engine/{entry},recall={recall:.3f},comps={comps:.0f},"
+            f"wall_ms={wall*1e3:.1f}")
+
+    # beam-core batched timing at a fixed spec — the hot-loop perf tracker.
+    # Seeds are drawn outside the timer: entry='random' seed generation is
+    # O(Q*n) (see ROADMAP) and would otherwise dominate the number.
+    spec = SearchSpec(ef=ef, k=1, entry="random")
+    ent, extra = searcher.seed(queries, spec)
+    wall, _ = timeit(
+        lambda: searcher.search(queries, spec, entries=ent, entry_comps=extra),
+        iters=5,
+    )
+    report["beam_core_wall_ms"] = round(wall * 1e3, 2)
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    out(f"smoke/engine written to {out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--q", type=int, default=100)
+    ap.add_argument("--ef", type=int, default=48)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+    run(n=args.n, d=args.d, q=args.q, ef=args.ef, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

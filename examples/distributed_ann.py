@@ -12,8 +12,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import bruteforce  # noqa: E402
-from repro.core.diversify import build_gd_graph  # noqa: E402
-from repro.core.nndescent import NNDescentConfig, build_knn_graph  # noqa: E402
+from repro.core.engine import SearchSpec, emulated_shard_search, shard_entries  # noqa: E402
 from repro.distributed.sharded_ann import distributed_search, shard_graph  # noqa: E402
 from repro.launch.mesh import make_flat_mesh  # noqa: E402
 
@@ -31,7 +30,8 @@ def main():
     # per-shard index builds (production layout: each node owns + indexes
     # its slice; a global graph would orphan cross-shard edges)
     bs, ns = shard_graph(base, None, n_shards, rebuild=True, key=key)
-    ent = jax.random.randint(key, (n_shards, Q, 8), 0, bs.shape[1], dtype=jnp.int32)
+    ent = shard_entries(key, n_shards, Q, bs.shape[1], 8)
+    spec = SearchSpec(ef=48, k=1)
 
     for dead in (0, 1):
         live = jnp.ones((n_shards,), bool)
@@ -39,25 +39,13 @@ def main():
             live = live.at[0].set(False)  # simulated node loss / straggler
         if P == n_shards:
             dists, ids, comps = distributed_search(
-                queries, bs, ns, ent, live, ef=48, k=1, mesh=mesh,
+                queries, bs, ns, ent, live, ef=spec.ef, k=spec.k, mesh=mesh,
                 axis=mesh.axis_names[0],
             )
         else:
-            # CPU fallback: emulate shards sequentially with the same merge
-            from repro.core.beam_search import beam_search
-            from repro.core.topk import topk_smallest
-
-            all_d, all_i = [], []
-            per = bs.shape[1]
-            for s in range(n_shards):
-                res = beam_search(queries, bs[s], ns[s], ent[s], ef=48, k=1)
-                gd_ids = jnp.where(res.ids >= 0, res.ids + s * per, -1)
-                all_d.append(jnp.where(live[s], res.dists, jnp.inf))
-                all_i.append(jnp.where(live[s], gd_ids, -1))
-            flat_d = jnp.concatenate(all_d, 1)
-            flat_i = jnp.concatenate(all_i, 1)
-            dists, sel = topk_smallest(flat_d, 1)
-            ids = jnp.take_along_axis(flat_i, sel, 1)
+            # CPU fallback: the engine emulates shards sequentially with the
+            # same per-shard beam core and merge
+            dists, ids = emulated_shard_search(queries, bs, ns, ent, live, spec)
         recall = float((ids[:, 0] == gt[:, 0]).mean())
         print(f"shards={n_shards} dead={dead}: recall@1={recall:.3f} "
               f"(graceful degradation, no failure)")

@@ -1,4 +1,5 @@
-"""Quickstart: build the paper's hybrid index (KGraph + GD) and search.
+"""Quickstart: build the paper's hybrid index (KGraph + GD) and search it
+through the SearchEngine — one beam core, pluggable entry strategies.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +10,8 @@ sys.path.insert(0, "src")
 
 import jax  # noqa: E402
 
-from repro.core import beam_search, bruteforce, diversify, nndescent  # noqa: E402
+from repro.core import bruteforce, diversify, nndescent  # noqa: E402
+from repro.core.engine import Searcher, SearchSpec  # noqa: E402
 from repro.data.synthetic import make_ann_dataset  # noqa: E402
 
 
@@ -29,19 +31,21 @@ def main():
     gd = diversify.build_gd_graph(base, g, metric=metric)
     print(f"GD-diversified: degree {g.degree} -> {gd.degree} (pruned+reverse)")
 
-    # 3. batched best-first search
+    # 3. one engine, swappable seeding: random (the paper's flat-HNSW start)
+    #    vs projection (SRS-style sketch scan)
+    searcher = Searcher.from_graph(base, gd, metric=metric, key=key)
     gt = bruteforce.ground_truth(queries, base, 1, metric)
-    ent = beam_search.random_entries(key, base.shape[0], queries.shape[0], 8)
-    for ef in (16, 32, 64):
-        res = beam_search.beam_search(
-            queries, base, gd.neighbors, ent, ef=ef, k=1, metric=metric
-        )
-        recall = float((res.ids[:, 0] == gt[:, 0]).mean())
-        comps = float(res.n_comps.mean())
-        print(
-            f"ef={ef:3d}: recall@1={recall:.3f}  comps/query={comps:.0f} "
-            f"(exhaustive={base.shape[0]}, speedup={base.shape[0]/comps:.1f}x)"
-        )
+    for entry in ("random", "projection"):
+        for ef in (16, 32, 64):
+            spec = SearchSpec(ef=ef, k=1, metric=metric, entry=entry)
+            res = searcher.search(queries, spec)
+            recall = float((res.ids[:, 0] == gt[:, 0]).mean())
+            comps = float(res.n_comps.mean())
+            print(
+                f"{entry:10s} ef={ef:3d}: recall@1={recall:.3f}  "
+                f"comps/query={comps:.0f} (exhaustive={base.shape[0]}, "
+                f"speedup={base.shape[0]/comps:.1f}x)"
+            )
 
 
 if __name__ == "__main__":

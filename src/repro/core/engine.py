@@ -1,0 +1,423 @@
+"""Unified search engine: (entry strategy x graph x beam core) — DESIGN.md §3.
+
+The paper's Sec. IV finding — HNSW's hierarchy is not a complexity win, it is
+merely one way to pick good entry points for the same flat best-first search —
+is made architectural here: there is ONE beam core (``beam_search``), one flat
+adjacency, and a registry of pluggable *entry strategies* that only decide
+where the beam starts:
+
+* ``random``     — E uniform seeds (the paper's flat-HNSW control),
+* ``projection`` — E nearest in a tiny random projection (SRS-style scan),
+* ``hierarchy``  — HNSW greedy descent reduced to a 1-seed picker
+                   (operationalizing the paper's Sec. IV claim),
+* ``lsh``        — projection probe + exact rerank (coarse-quantizer seeding
+                   on top of ``baselines/lsh.py``'s SRS sketch).
+
+``hnsw_search``, ``flat_search`` and ``distributed_search`` are thin wrappers
+over this module; a new seeder, metric, or shard layout plugs in here once and
+every caller (core, distributed, serve, benchmarks) picks it up.
+
+Seed-phase distance computations are charged to ``SearchResult.n_comps`` in
+the paper's cost currency: the hierarchy descent counts its greedy
+comparisons, projection/lsh count the m-dim scan at m/d of a full comparison
+per base point (the paper's accounting for SRS), plus any exact rerank.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+from typing import NamedTuple, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from .beam_search import (
+    SearchResult,
+    beam_search,
+    projection_entries,
+    random_entries,
+    search_with_trace,
+)
+from .graph_index import HnswIndex, KnnGraph
+from .topk import INVALID, topk_smallest
+
+
+class SearchSpec(NamedTuple):
+    """Static search configuration (a pytree of hashable leaves).
+
+    One spec drives every layer: single-host ``Searcher.search``, the
+    per-shard body of ``distributed_search``, and the serving loop.
+    """
+
+    ef: int = 64                # candidate-list width of the beam core
+    k: int = 1                  # answers returned per query
+    metric: str = "l2"
+    entry: str = "random"       # key into ENTRY_STRATEGIES
+    n_entries: int = 8          # seeds handed to the beam (capped at ef)
+    expand_width: int = 1       # vertices expanded per step (§Perf-ANN)
+    max_steps: int | None = None
+    proj_dim: int = 8           # sketch width for projection/lsh seeding
+    lsh_probes: int = 64        # rerank candidates for the lsh seeder
+
+    @property
+    def num_seeds(self) -> int:
+        return min(self.n_entries, self.ef)
+
+
+class EntryStrategy(Protocol):
+    """Pluggable seed picker. ``prepare`` builds whatever per-index state the
+    strategy needs (projection matrices, the layered index, ...); ``seed``
+    maps a query batch to ((Q, E) entry ids, (Q,) seed-phase comparisons)."""
+
+    name: str
+
+    def prepare(self, base, neighbors, hierarchy, spec: SearchSpec, key): ...
+
+    def seed(self, aux, queries, base, spec: SearchSpec, key): ...
+
+
+ENTRY_STRATEGIES: dict[str, EntryStrategy] = {}
+
+
+def get_entry_strategy(name: str) -> EntryStrategy:
+    if name not in ENTRY_STRATEGIES:
+        raise ValueError(
+            f"unknown entry strategy {name!r}; registered: "
+            f"{sorted(ENTRY_STRATEGIES)}"
+        )
+    return ENTRY_STRATEGIES[name]
+
+
+def register_entry_strategy(strategy) -> EntryStrategy:
+    """Register a seeder under ``strategy.name`` (the engine's one extension
+    point — new seeding schemes never touch the beam core or its callers).
+    Accepts a class (instantiated with no args) or a ready instance."""
+    inst = strategy() if isinstance(strategy, type) else strategy
+    ENTRY_STRATEGIES[inst.name] = inst
+    return strategy
+
+
+@register_entry_strategy
+class _RandomEntry:
+    name = "random"
+
+    def prepare(self, base, neighbors, hierarchy, spec, key):
+        return base.shape[0]
+
+    def seed(self, aux, queries, base, spec, key):
+        Q = queries.shape[0]
+        ent = random_entries(key, aux, Q, spec.num_seeds)
+        return ent, jnp.zeros((Q,), jnp.int32)
+
+
+@register_entry_strategy
+class _ProjectionEntry:
+    name = "projection"
+
+    def prepare(self, base, neighbors, hierarchy, spec, key):
+        from repro.baselines.lsh import build_srs
+
+        return build_srs(base, m=spec.proj_dim, key=key)
+
+    def seed(self, aux, queries, base, spec, key):
+        ent = projection_entries(queries, aux.base_proj, aux.proj,
+                                 spec.num_seeds)
+        n, m = aux.base_proj.shape
+        scan = int(n * m / base.shape[1])  # m-dim pass at m/d of a comparison
+        return ent, jnp.full((queries.shape[0],), scan, jnp.int32)
+
+
+@register_entry_strategy
+class _HierarchyEntry:
+    name = "hierarchy"
+
+    def prepare(self, base, neighbors, hierarchy, spec, key):
+        if hierarchy is None:
+            raise ValueError(
+                "entry='hierarchy' needs a Searcher built from an HnswIndex"
+            )
+        return hierarchy
+
+    def seed(self, aux, queries, base, spec, key):
+        return hierarchy_entries(queries, base, aux, spec.metric)
+
+
+@register_entry_strategy
+class _LshEntry:
+    name = "lsh"
+
+    def prepare(self, base, neighbors, hierarchy, spec, key):
+        from repro.baselines.lsh import build_srs
+
+        return build_srs(base, m=spec.proj_dim, key=key)
+
+    def seed(self, aux, queries, base, spec, key):
+        # SRS probe + exact rerank, straight from the baseline. SRS is
+        # l2-only (sketch and rerank); for other metrics the seeds are merely
+        # suboptimal — the beam itself still scores with spec.metric.
+        from repro.baselines.lsh import srs_search
+
+        _, ids, comps = srs_search(
+            queries, base, aux, k=spec.num_seeds, probes=spec.lsh_probes
+        )
+        return ids.astype(jnp.int32), comps
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _greedy_layer(queries, base, nbrs_g, slot, start_ids, metric):
+    """Greedy 1-NN descent on one layer (the coarse-to-fine step, Fig. 1).
+
+    start_ids (Q,) -> (ids (Q,), dists (Q,), comps (Q,))."""
+    from repro.kernels import ops
+
+    Q = queries.shape[0]
+    d0 = ops.gather_distance(queries, start_ids[:, None], base, metric=metric)[:, 0]
+
+    def cond(s):
+        _, _, _, done = s
+        return ~done.all()
+
+    def body(s):
+        cur, cur_d, comps, done = s
+        rows = nbrs_g[jnp.maximum(slot[jnp.maximum(cur, 0)], 0)]  # (Q, M)
+        rows = jnp.where(done[:, None], INVALID, rows)
+        nd = ops.gather_distance(queries, rows, base, metric=metric)
+        comps = comps + (rows >= 0).sum(1, dtype=jnp.int32)
+        j = jnp.argmin(nd, axis=1)
+        best_d = jnp.take_along_axis(nd, j[:, None], 1)[:, 0]
+        best_i = jnp.take_along_axis(rows, j[:, None], 1)[:, 0]
+        better = best_d < cur_d
+        return (
+            jnp.where(better, best_i, cur),
+            jnp.where(better, best_d, cur_d),
+            comps,
+            done | ~better,
+        )
+
+    cur, cur_d, comps, _ = jax.lax.while_loop(
+        cond, body, (start_ids, d0, jnp.ones((Q,), jnp.int32), jnp.zeros((Q,), bool))
+    )
+    return cur, cur_d, comps
+
+
+def hierarchy_entries(
+    queries: jax.Array, base: jax.Array, index: HnswIndex, metric: str
+) -> tuple[jax.Array, jax.Array]:
+    """HNSW's upper layers as a seed picker: greedy descent from the top
+    entry point down to layer 1, returning the (Q, 1) landing vertex and the
+    comparisons spent — the paper's claim that the hierarchy is 'just' entry
+    point selection, made literal."""
+    Q = queries.shape[0]
+    cur = jnp.full((Q,), index.entry_point, jnp.int32)
+    comps = jnp.zeros((Q,), jnp.int32)
+    for layer in range(index.num_layers - 1, 0, -1):
+        cur, _, c = _greedy_layer(
+            queries,
+            base,
+            index.layers_neighbors[layer],
+            index.layers_slot[layer],
+            cur,
+            metric,
+        )
+        comps = comps + c
+    return cur[:, None], comps
+
+
+class Searcher:
+    """(entry strategy x graph x beam core), bound to one dataset.
+
+    Holds the base matrix, the flat adjacency the beam walks, and (optionally)
+    an :class:`HnswIndex` whose upper layers back the ``hierarchy`` seeder.
+    Per-strategy prepared state (projections, sketches) is built lazily and
+    cached, keyed by (strategy, sketch width).
+    """
+
+    def __init__(self, base, neighbors, *, hierarchy: HnswIndex | None = None,
+                 metric: str = "l2", key: jax.Array | None = None):
+        self.base = base
+        self.neighbors = neighbors
+        self.hierarchy = hierarchy
+        self.metric = metric
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self._aux: dict[tuple, object] = {}
+
+    # -- constructors ---------------------------------------------------------
+
+    @classmethod
+    def from_graph(cls, base, graph: KnnGraph, **kw) -> "Searcher":
+        return cls(base, graph.neighbors, **kw)
+
+    @classmethod
+    def from_hnsw(cls, base, index: HnswIndex, **kw) -> "Searcher":
+        """Bottom layer becomes the flat graph; upper layers feed the
+        ``hierarchy`` seeder. Every entry strategy then walks the SAME graph —
+        the paper's controlled comparison."""
+        return cls(base, index.layers_neighbors[0], hierarchy=index, **kw)
+
+    @classmethod
+    def build(cls, base, *, metric: str = "l2", key: jax.Array | None = None,
+              graph_k: int = 20, with_hierarchy: bool = False,
+              verbose: bool = False) -> "Searcher":
+        """Build the paper's hybrid index (NN-Descent + GD diversification),
+        optionally with HNSW upper layers for the ``hierarchy`` seeder."""
+        from .diversify import build_gd_graph
+        from .nndescent import NNDescentConfig, build_knn_graph
+
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        g = build_knn_graph(base, NNDescentConfig(k=graph_k), metric=metric,
+                            key=key, verbose=verbose)
+        if with_hierarchy:
+            from .hnsw import HnswConfig, build_hnsw
+
+            idx = build_hnsw(
+                base,
+                HnswConfig(M=max(8, graph_k // 2), knn_k=graph_k),
+                metric=metric, key=key, bottom_graph=g, verbose=verbose,
+            )
+            return cls.from_hnsw(base, idx, metric=metric, key=key)
+        gd = build_gd_graph(base, g, metric=metric)
+        return cls.from_graph(base, gd, metric=metric, key=key)
+
+    # -- seeding --------------------------------------------------------------
+
+    def spec(self, **kw) -> SearchSpec:
+        """SearchSpec pre-filled with this searcher's metric."""
+        kw.setdefault("metric", self.metric)
+        return SearchSpec(**kw)
+
+    def _check_metric(self, spec: SearchSpec) -> None:
+        # metric lives in the spec (it must travel with the static search
+        # config through jit/shard_map) but the index was built for ONE
+        # metric — a mismatch would silently search with wrong distances.
+        if spec.metric != self.metric:
+            raise ValueError(
+                f"spec.metric={spec.metric!r} but this Searcher was built "
+                f"for {self.metric!r}; use searcher.spec(...) or pass "
+                f"metric= explicitly"
+            )
+
+    def prepare(self, spec: SearchSpec):
+        """Build (or fetch) the entry strategy's per-index state."""
+        strat = get_entry_strategy(spec.entry)
+        cache_key = (spec.entry, spec.proj_dim)
+        if cache_key not in self._aux:
+            kp = jax.random.fold_in(
+                self.key, zlib.crc32(spec.entry.encode()) & 0x7FFFFFFF
+            )
+            self._aux[cache_key] = strat.prepare(
+                self.base, self.neighbors, self.hierarchy, spec, kp
+            )
+        return self._aux[cache_key]
+
+    def seed(self, queries, spec: SearchSpec, key: jax.Array | None = None):
+        """(Q, E) entry ids + (Q,) seed-phase comparisons."""
+        self._check_metric(spec)
+        strat = get_entry_strategy(spec.entry)
+        aux = self.prepare(spec)
+        if key is None:
+            key = self.key
+        return strat.seed(aux, queries, self.base, spec, key)
+
+    # -- search ---------------------------------------------------------------
+
+    def search(self, queries, spec: SearchSpec, key: jax.Array | None = None,
+               *, entries: jax.Array | None = None,
+               entry_comps: jax.Array | None = None) -> SearchResult:
+        """Seed (unless ``entries`` pre-computed via :meth:`seed`) + beam.
+
+        Passing ``entries``/``entry_comps`` lets benchmarks time the beam
+        core separately from seed generation."""
+        self._check_metric(spec)
+        if entries is None:
+            entries, entry_comps = self.seed(queries, spec, key)
+        res = beam_search(
+            queries, self.base, self.neighbors, entries,
+            ef=spec.ef, k=spec.k, metric=spec.metric,
+            max_steps=spec.max_steps, expand_width=spec.expand_width,
+        )
+        if entry_comps is not None:
+            res = res._replace(n_comps=res.n_comps + entry_comps)
+        return res
+
+    def search_with_trace(self, queries, spec: SearchSpec,
+                          key: jax.Array | None = None, max_steps: int = 256):
+        """Fig. 6 instrumentation through the same seeding path.
+        ``spec.max_steps`` (when set) overrides the ``max_steps`` default."""
+        ent, extra = self.seed(queries, spec, key)
+        if spec.max_steps is not None:
+            max_steps = spec.max_steps
+        res, td, tc = search_with_trace(
+            queries, self.base, self.neighbors, ent,
+            ef=spec.ef, k=spec.k, metric=spec.metric, max_steps=max_steps,
+            expand_width=spec.expand_width,
+        )
+        return res._replace(n_comps=res.n_comps + extra), td, tc + extra[None, :]
+
+
+# -- shard-level plumbing (the distributed layer runs THIS engine per shard) --
+
+
+def globalize_ids(ids: jax.Array, shard_id, per: int) -> jax.Array:
+    """Local row ids -> global ids for contiguous shard ``shard_id``."""
+    return jnp.where(ids >= 0, ids + shard_id * per, INVALID)
+
+
+def merge_shard_results(dists: jax.Array, ids: jax.Array,
+                        k: int) -> tuple[jax.Array, jax.Array]:
+    """(Q, P*k) gathered per-shard answers -> the k global best, ascending."""
+    md, sel = topk_smallest(dists, k)
+    return md, jnp.take_along_axis(ids, sel, axis=1)
+
+
+def shard_entries(key: jax.Array, n_shards: int, Q: int, per: int,
+                  E: int) -> jax.Array:
+    """Random per-shard seeds — the engine's ``random`` strategy drawn once
+    per shard (each shard's graph is its own id space)."""
+    return jax.random.randint(key, (n_shards, Q, E), 0, per, dtype=jnp.int32)
+
+
+def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
+                 axis: str, per: int):
+    """Per-shard body for ``shard_map``: the SAME beam core as single-host
+    search, plus the all-gather merge. ``live`` False drops a failed or
+    straggling shard's contribution (degrades recall, never the query)."""
+    res = beam_search(
+        queries, base, neighbors, entries,
+        ef=spec.ef, k=spec.k, metric=spec.metric,
+        max_steps=spec.max_steps, expand_width=spec.expand_width,
+    )
+    sid = jax.lax.axis_index(axis)
+    gids = globalize_ids(res.ids, sid, per)
+    d = jnp.where(live, res.dists, jnp.inf)
+    gids = jnp.where(live, gids, INVALID)
+    all_d = jax.lax.all_gather(d, axis)            # (P, Q, k) — tiny
+    all_i = jax.lax.all_gather(gids, axis)
+    Pn = all_d.shape[0]
+    Q = queries.shape[0]
+    flat_d = all_d.transpose(1, 0, 2).reshape(Q, Pn * spec.k)
+    flat_i = all_i.transpose(1, 0, 2).reshape(Q, Pn * spec.k)
+    md, mi = merge_shard_results(flat_d, flat_i, spec.k)
+    comps = jax.lax.psum(jnp.where(live, res.n_comps, 0), axis)
+    return md, mi, comps
+
+
+def emulated_shard_search(queries, base_shards, nbr_shards, entries, live,
+                          spec: SearchSpec):
+    """Host-side loop with identical semantics to ``shard_search`` for runs
+    where logical shards exceed physical devices (CI, laptops).
+
+    Returns (dists (Q, k), global ids (Q, k))."""
+    per = base_shards.shape[1]
+    all_d, all_i = [], []
+    for s in range(base_shards.shape[0]):
+        res = beam_search(
+            queries, base_shards[s], nbr_shards[s], entries[s],
+            ef=spec.ef, k=spec.k, metric=spec.metric,
+            max_steps=spec.max_steps, expand_width=spec.expand_width,
+        )
+        all_d.append(jnp.where(live[s], res.dists, jnp.inf))
+        all_i.append(jnp.where(live[s], globalize_ids(res.ids, s, per), INVALID))
+    return merge_shard_results(
+        jnp.concatenate(all_d, 1), jnp.concatenate(all_i, 1), spec.k
+    )

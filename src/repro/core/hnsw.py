@@ -15,16 +15,16 @@ random seeds.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from .beam_search import SearchResult, beam_search, random_entries
+from .beam_search import SearchResult
 from .bruteforce import exact_knn_graph
 from .diversify import add_reverse_edges, gd_prune
+from .engine import Searcher, SearchSpec
 from .graph_index import HnswIndex, KnnGraph
 from .nndescent import NNDescentConfig, build_knn_graph
 from .topk import INVALID
@@ -112,43 +112,6 @@ def build_hnsw(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("metric",))
-def _greedy_layer(queries, base, nbrs_g, slot, start_ids, metric):
-    """Greedy 1-NN descent on one layer (the coarse-to-fine step, Fig. 1).
-
-    start_ids (Q,) -> (ids (Q,), dists (Q,), comps (Q,))."""
-    from repro.kernels import ops
-
-    Q = queries.shape[0]
-    d0 = ops.gather_distance(queries, start_ids[:, None], base, metric=metric)[:, 0]
-
-    def cond(s):
-        _, _, _, done = s
-        return ~done.all()
-
-    def body(s):
-        cur, cur_d, comps, done = s
-        rows = nbrs_g[jnp.maximum(slot[jnp.maximum(cur, 0)], 0)]  # (Q, M)
-        rows = jnp.where(done[:, None], INVALID, rows)
-        nd = ops.gather_distance(queries, rows, base, metric=metric)
-        comps = comps + (rows >= 0).sum(1, dtype=jnp.int32)
-        j = jnp.argmin(nd, axis=1)
-        best_d = jnp.take_along_axis(nd, j[:, None], 1)[:, 0]
-        best_i = jnp.take_along_axis(rows, j[:, None], 1)[:, 0]
-        better = best_d < cur_d
-        return (
-            jnp.where(better, best_i, cur),
-            jnp.where(better, best_d, cur_d),
-            comps,
-            done | ~better,
-        )
-
-    cur, cur_d, comps, _ = jax.lax.while_loop(
-        cond, body, (start_ids, d0, jnp.ones((Q,), jnp.int32), jnp.zeros((Q,), bool))
-    )
-    return cur, cur_d, comps
-
-
 def hnsw_search(
     queries: jax.Array,
     base: jax.Array,
@@ -156,26 +119,14 @@ def hnsw_search(
     ef: int,
     k: int = 1,
     metric: str = "l2",
+    expand_width: int = 1,
 ) -> SearchResult:
-    """Top-down hierarchical search (paper Sec. III, hnswlib procedure)."""
-    Q = queries.shape[0]
-    cur = jnp.full((Q,), index.entry_point, jnp.int32)
-    comps_total = jnp.zeros((Q,), jnp.int32)
-    for layer in range(index.num_layers - 1, 0, -1):
-        cur, _, comps = _greedy_layer(
-            queries,
-            base,
-            index.layers_neighbors[layer],
-            index.layers_slot[layer],
-            cur,
-            metric,
-        )
-        comps_total = comps_total + comps
-    res = beam_search(
-        queries, base, index.layers_neighbors[0], cur[:, None], ef=ef, k=k,
-        metric=metric,
-    )
-    return res._replace(n_comps=res.n_comps + comps_total)
+    """Top-down hierarchical search (paper Sec. III, hnswlib procedure) —
+    the engine with the ``hierarchy`` seeder over the bottom layer."""
+    searcher = Searcher.from_hnsw(base, index, metric=metric)
+    spec = SearchSpec(ef=ef, k=k, metric=metric, entry="hierarchy",
+                      expand_width=expand_width)
+    return searcher.search(queries, spec)
 
 
 def flat_search(
@@ -187,8 +138,10 @@ def flat_search(
     metric: str = "l2",
     key: jax.Array | None = None,
     n_seeds: int | None = None,
+    expand_width: int = 1,
 ) -> SearchResult:
-    """flat-HNSW (paper Sec. IV): bottom layer only, random seeds."""
+    """flat-HNSW (paper Sec. IV): bottom layer only, random seeds — the
+    engine with the ``random`` seeder."""
     if key is None:
         key = jax.random.PRNGKey(0)
     neighbors = (
@@ -196,7 +149,8 @@ def flat_search(
         if isinstance(index_or_graph, HnswIndex)
         else index_or_graph.neighbors
     )
-    n = base.shape[0]
     E = min(n_seeds if n_seeds is not None else ef, ef)
-    entries = random_entries(key, n, queries.shape[0], E)
-    return beam_search(queries, base, neighbors, entries, ef=ef, k=k, metric=metric)
+    searcher = Searcher(base, neighbors, metric=metric)
+    spec = SearchSpec(ef=ef, k=k, metric=metric, entry="random", n_entries=E,
+                      expand_width=expand_width)
+    return searcher.search(queries, spec, key=key)

@@ -1,0 +1,28 @@
+"""Version-compat shim for ``shard_map`` (jax 0.4.x <-> jax >= 0.5).
+
+jax 0.4.x ships it as ``jax.experimental.shard_map.shard_map`` with a
+``check_rep`` kwarg; newer releases promote it to ``jax.shard_map`` and rename
+the kwarg to ``check_vma``. Callers here use one spelling and we translate.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in _PARAMS
+    else ("check_rep" if "check_rep" in _PARAMS else None)
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if check_vma is not None and _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map(f, **kwargs)

@@ -18,11 +18,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.beam_search import beam_search
-from repro.core.topk import topk_smallest
+from repro.distributed._compat import shard_map
+
+from repro.core import engine
+from repro.core.engine import SearchSpec
 
 
 def shard_graph(base, neighbors, n_shards: int, *, rebuild: bool = True,
@@ -67,7 +68,8 @@ def shard_graph(base, neighbors, n_shards: int, *, rebuild: bool = True,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("ef", "k", "metric", "mesh", "axis")
+    jax.jit,
+    static_argnames=("ef", "k", "metric", "mesh", "axis", "expand_width"),
 )
 def distributed_search(
     queries: jax.Array,       # (Q, d) replicated
@@ -81,26 +83,17 @@ def distributed_search(
     metric: str = "l2",
     mesh: Mesh,
     axis: str = "shards",
+    expand_width: int = 1,
 ):
+    """Shard-and-merge search: each shard runs the SAME SearchEngine beam core
+    (``engine.shard_search``); this wrapper only binds the mesh layout."""
     per = base_shards.shape[1]
+    spec = SearchSpec(ef=ef, k=k, metric=metric, expand_width=expand_width)
 
     def local(qs, b, nb, ent, live):
-        b, nb, ent, live = b[0], nb[0], ent[0], live[0]
-        res = beam_search(qs, b, nb, ent, ef=ef, k=k, metric=metric)
-        sid = jax.lax.axis_index(axis)
-        gids = jnp.where(res.ids >= 0, res.ids + sid * per, -1)
-        d = jnp.where(live, res.dists, jnp.inf)
-        gids = jnp.where(live, gids, -1)
-        # all-gather the tiny (Q, k) result blocks and merge locally
-        all_d = jax.lax.all_gather(d, axis)       # (P, Q, k)
-        all_i = jax.lax.all_gather(gids, axis)
-        Pn = all_d.shape[0]
-        flat_d = all_d.transpose(1, 0, 2).reshape(qs.shape[0], Pn * k)
-        flat_i = all_i.transpose(1, 0, 2).reshape(qs.shape[0], Pn * k)
-        md, sel = topk_smallest(flat_d, k)
-        mi = jnp.take_along_axis(flat_i, sel, axis=1)
-        comps = jax.lax.psum(jnp.where(live, res.n_comps, 0), axis)
-        return md, mi, comps
+        return engine.shard_search(
+            qs, b[0], nb[0], ent[0], live[0], spec=spec, axis=axis, per=per
+        )
 
     return shard_map(
         local,
@@ -127,10 +120,8 @@ def distributed_build_and_search(
         g = build_knn_graph(base, NNDescentConfig(), metric=metric, key=key)
         graph_neighbors = build_gd_graph(base, g, metric=metric).neighbors
     bs, ns = shard_graph(base, graph_neighbors, n_shards)
-    per = bs.shape[1]
     Q = queries.shape[0]
-    E = min(8, ef)
-    ent = jax.random.randint(key, (n_shards, Q, E), 0, per, dtype=jnp.int32)
+    ent = engine.shard_entries(key, n_shards, Q, bs.shape[1], min(8, ef))
     live = jnp.ones((n_shards,), bool)
     return distributed_search(
         queries, bs, ns, ent, live, ef=ef, k=k, metric=metric,

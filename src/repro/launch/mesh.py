@@ -7,13 +7,22 @@ import numpy as np
 from jax.sharding import Mesh
 
 
+def _named_mesh(shape, axes) -> Mesh:
+    """jax.make_mesh across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on jax >= 0.5; 0.4.x takes the
+    positional pair only."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 (one 256-chip v5e pod) or 2x16x16 (two pods, 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _named_mesh(shape, axes)
 
 
 def make_flat_mesh(name: str = "shards") -> Mesh:
@@ -24,9 +33,7 @@ def make_flat_mesh(name: str = "shards") -> Mesh:
 
 def make_test_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
     """CPU-sized mesh with production axis names for unit tests."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _named_mesh(shape, axes)
 
 
 def data_axes(mesh: Mesh) -> tuple[str, ...]:

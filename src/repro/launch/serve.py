@@ -1,13 +1,17 @@
-"""Serving launcher: autoregressive decode loop (LM archs) or batched
-retrieval scoring (recsys archs) on the production mesh.
+"""Serving launcher: autoregressive decode loop (LM archs), batched retrieval
+scoring (recsys archs), or graph-ANN query serving (``--arch ann``) on the
+production mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
         --tokens 32 --batch 2
+    PYTHONPATH=src python -m repro.launch.serve --arch ann --smoke \
+        --entry projection --batch 64 --batches 8
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import jax
@@ -15,6 +19,86 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.launch.mesh import make_production_mesh, make_test_mesh
+
+
+def serve_ann(args) -> None:
+    """ANN serving family: load (or build and save) a flat graph, then answer
+    batched query streams through the SearchEngine with the chosen entry
+    strategy. The same `Searcher.search` call serves every strategy."""
+    import numpy as np
+
+    from repro.core import bruteforce
+    from repro.core.engine import Searcher, SearchSpec
+
+    key = jax.random.PRNGKey(0)
+    # np.savez appends .npz to suffix-less paths; normalize so the load-time
+    # exists() check sees the file the save actually wrote
+    index_path = (
+        args.index if not args.index or args.index.endswith(".npz")
+        else args.index + ".npz"
+    )
+    if index_path and os.path.exists(index_path):
+        blob = np.load(index_path)
+        base = jnp.asarray(blob["base"])
+        searcher = Searcher(
+            base, jnp.asarray(blob["neighbors"]), metric=str(blob["metric"])
+        )
+        print(f"[serve-ann] loaded index {index_path}: n={base.shape[0]} "
+              f"d={base.shape[1]}")
+        if args.entry == "hierarchy":
+            raise SystemExit("--entry hierarchy needs a built index; rerun "
+                             "without --index or pick another strategy")
+    else:
+        n, d = (20_000, 32) if args.smoke else (1_000_000, 64)
+        base = jax.random.normal(key, (n, d))
+        t0 = time.time()
+        searcher = Searcher.build(
+            base, metric="l2", key=key,
+            with_hierarchy=(args.entry == "hierarchy"),
+        )
+        print(f"[serve-ann] built index over n={n} d={d} "
+              f"in {time.time()-t0:.1f}s")
+        if index_path and args.entry == "hierarchy":
+            # the .npz format holds only the flat graph; saving it here would
+            # make this exact command fail on reload (hierarchy needs the
+            # upper layers, which are rebuilt, not serialized)
+            print("[serve-ann] --index ignored for --entry hierarchy "
+                  "(upper layers are not serialized)")
+        elif index_path:
+            np.savez(
+                index_path, base=np.asarray(base),
+                neighbors=np.asarray(searcher.neighbors), metric="l2",
+            )
+            print(f"[serve-ann] saved flat graph to {index_path}")
+
+    spec = SearchSpec(ef=args.ef, k=args.topk, metric=searcher.metric,
+                      entry=args.entry)
+    d_dim = searcher.base.shape[1]
+    qkey = jax.random.fold_in(key, 7)
+    warm = jax.random.normal(qkey, (args.batch, d_dim))
+    res = searcher.search(warm, spec)            # compile + strategy prep
+    jax.block_until_ready(res.ids)
+
+    t0 = time.time()
+    served_q, served_ids, served_comps, served = [], [], [], 0
+    for b in range(args.batches):
+        q = jax.random.normal(jax.random.fold_in(qkey, b), (args.batch, d_dim))
+        res = searcher.search(q, spec)
+        jax.block_until_ready(res.ids)
+        served += args.batch
+        served_q.append(q)
+        served_ids.append(res.ids[:, 0])
+        served_comps.append(res.n_comps)
+    dt = time.time() - t0
+    # recall/comps over the actual served traffic (ground truth computed off
+    # the timed path)
+    all_q = jnp.concatenate(served_q)
+    gt = bruteforce.ground_truth(all_q, searcher.base, 1, searcher.metric)
+    recall = float((jnp.concatenate(served_ids) == gt[:, 0]).mean())
+    comps = float(jnp.concatenate(served_comps).mean())
+    print(f"[serve-ann] entry={args.entry} ef={args.ef} k={args.topk}: "
+          f"{served} queries in {dt*1e3:.0f} ms ({served/dt:.0f} qps), "
+          f"recall@1={recall:.3f}, comps/query={comps:.0f}")
 
 
 def main() -> None:
@@ -25,7 +109,19 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--entry", default="random",
+                    help="[ann] entry strategy: random|projection|hierarchy|lsh")
+    ap.add_argument("--ef", type=int, default=64, help="[ann] beam width")
+    ap.add_argument("--topk", type=int, default=10, help="[ann] answers/query")
+    ap.add_argument("--batches", type=int, default=8,
+                    help="[ann] query batches to serve")
+    ap.add_argument("--index", default=None,
+                    help="[ann] .npz graph path to load (or save after build)")
     args = ap.parse_args()
+
+    if args.arch == "ann":
+        serve_ann(args)
+        return
 
     ad = configs.get_arch(args.arch)
     if args.smoke:

@@ -1,0 +1,219 @@
+"""SearchEngine: refactor parity (vs. pre-refactor golden outputs and inline
+compositions) + recall/cost sanity per entry strategy."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bruteforce, diversify, hnsw, nndescent
+from repro.core.beam_search import beam_search, random_entries
+from repro.core.engine import (
+    ENTRY_STRATEGIES,
+    Searcher,
+    SearchSpec,
+    emulated_shard_search,
+    merge_shard_results,
+    register_entry_strategy,
+    shard_entries,
+)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data", "golden_engine.npz")
+
+
+@pytest.fixture(scope="module")
+def world():
+    """Deterministic small world — the exact keys the golden file was
+    captured with (pre-refactor seed code)."""
+    key = jax.random.PRNGKey(42)
+    base = jax.random.uniform(key, (2000, 16))
+    queries = jax.random.uniform(jax.random.fold_in(key, 1), (32, 16))
+    g = nndescent.build_knn_graph(
+        base, nndescent.NNDescentConfig(k=16, rounds=8), key=jax.random.PRNGKey(3)
+    )
+    gd = diversify.build_gd_graph(base, g)
+    idx = hnsw.build_hnsw(
+        base, hnsw.HnswConfig(M=8, knn_k=16, brute_threshold=4096),
+        key=jax.random.PRNGKey(5),
+    )
+    gt = bruteforce.ground_truth(queries, base, 1)
+    return base, queries, gd, idx, gt
+
+
+def test_flat_search_matches_pre_refactor_golden(world):
+    base, queries, gd, idx, _ = world
+    gold = np.load(GOLDEN)
+    r = hnsw.flat_search(queries, base, gd, ef=32, k=4,
+                         key=jax.random.PRNGKey(7), n_seeds=8)
+    np.testing.assert_array_equal(np.asarray(r.ids), gold["flat_ids"])
+    np.testing.assert_array_equal(np.asarray(r.dists), gold["flat_dists"])
+    np.testing.assert_array_equal(np.asarray(r.n_comps), gold["flat_comps"])
+
+
+def test_hnsw_search_matches_pre_refactor_golden(world):
+    base, queries, gd, idx, _ = world
+    gold = np.load(GOLDEN)
+    r = hnsw.hnsw_search(queries, base, idx, ef=32, k=4)
+    np.testing.assert_array_equal(np.asarray(r.ids), gold["hier_ids"])
+    np.testing.assert_array_equal(np.asarray(r.dists), gold["hier_dists"])
+    np.testing.assert_array_equal(np.asarray(r.n_comps), gold["hier_comps"])
+
+
+def test_engine_random_equals_inline_composition(world):
+    """flat_search == random_entries + beam_search composed by hand: the
+    wrapper adds no seeding/merge logic of its own."""
+    base, queries, gd, idx, _ = world
+    key = jax.random.PRNGKey(13)
+    via_engine = hnsw.flat_search(queries, base, gd, ef=24, k=2, key=key,
+                                  n_seeds=6)
+    ent = random_entries(key, base.shape[0], queries.shape[0], 6)
+    inline = beam_search(queries, base, gd.neighbors, ent, ef=24, k=2)
+    np.testing.assert_array_equal(np.asarray(via_engine.ids),
+                                  np.asarray(inline.ids))
+    np.testing.assert_array_equal(np.asarray(via_engine.n_comps),
+                                  np.asarray(inline.n_comps))
+
+
+@pytest.mark.parametrize("entry", ["random", "projection", "hierarchy", "lsh"])
+def test_entry_strategy_recall_and_cost(world, entry):
+    """Every registered strategy reaches high recall at a fraction of the
+    exhaustive comparison budget, through the one engine."""
+    base, queries, gd, idx, gt = world
+    searcher = Searcher.from_hnsw(base, idx)
+    res = searcher.search(queries, SearchSpec(ef=48, k=1, entry=entry))
+    recall = float((res.ids[:, 0] == gt[:, 0]).mean())
+    comps = float(res.n_comps.mean())
+    assert recall >= 0.9, (entry, recall)
+    assert comps < base.shape[0], (entry, comps)  # cheaper than exhaustive
+    # candidate list valid & ascending
+    d = np.asarray(res.dists[:, 0])
+    assert np.isfinite(d).all()
+
+
+def test_recall_improves_with_ef_per_strategy(world):
+    base, queries, gd, idx, gt = world
+    searcher = Searcher.from_hnsw(base, idx)
+    for entry in sorted(ENTRY_STRATEGIES):
+        recs, comps = [], []
+        for ef in (4, 16, 48):
+            r = searcher.search(queries, SearchSpec(ef=ef, k=1, entry=entry))
+            recs.append(float((r.ids[:, 0] == gt[:, 0]).mean()))
+            comps.append(float(r.n_comps.mean()))
+        assert recs[-1] >= recs[0], (entry, recs)
+        assert comps[-1] > comps[0], (entry, comps)  # more ef -> more work
+
+
+def test_seed_comps_accounting(world):
+    """projection/lsh charge their scan to n_comps; random charges nothing
+    beyond the beam's own entry evaluations."""
+    base, queries, gd, idx, _ = world
+    searcher = Searcher.from_hnsw(base, idx)
+    n, d = base.shape
+    spec = SearchSpec(ef=16, k=1, entry="projection", proj_dim=8)
+    ent, extra = searcher.seed(queries, spec)
+    assert ent.shape == (queries.shape[0], spec.num_seeds)
+    assert int(extra[0]) == int(n * 8 / d)
+    _, extra_r = searcher.seed(queries, SearchSpec(ef=16, entry="random"))
+    assert int(extra_r.sum()) == 0
+    _, extra_l = searcher.seed(queries, SearchSpec(ef=16, entry="lsh",
+                                                   lsh_probes=32))
+    assert int(extra_l[0]) == 32 + int(n * 8 / d)
+
+
+def test_metric_mismatch_raises(world):
+    """A spec whose metric disagrees with the index's metric must not search
+    silently with wrong distances."""
+    base, queries, gd, idx, _ = world
+    searcher = Searcher.from_graph(base, gd, metric="ip")
+    with pytest.raises(ValueError, match="metric"):
+        searcher.search(queries, SearchSpec(ef=16))  # default l2 vs ip
+    assert searcher.spec(ef=16).metric == "ip"
+
+
+def test_hierarchy_strategy_requires_index(world):
+    base, queries, gd, idx, _ = world
+    flat_only = Searcher.from_graph(base, gd)
+    with pytest.raises(ValueError, match="hierarchy"):
+        flat_only.search(queries, SearchSpec(ef=16, entry="hierarchy"))
+
+
+def test_register_custom_strategy(world):
+    """The extension point: a new seeder plugs in without touching the core."""
+    base, queries, gd, idx, gt = world
+
+    class FixedEntry:
+        name = "_test_fixed"
+
+        def prepare(self, base, neighbors, hierarchy, spec, key):
+            return None
+
+        def seed(self, aux, queries, base, spec, key):
+            Q = queries.shape[0]
+            ent = jnp.zeros((Q, 1), jnp.int32)  # always start at vertex 0
+            return ent, jnp.zeros((Q,), jnp.int32)
+
+    register_entry_strategy(FixedEntry)
+    try:
+        searcher = Searcher.from_graph(base, gd)
+        r = searcher.search(queries, SearchSpec(ef=48, entry="_test_fixed"))
+        assert float((r.ids[:, 0] == gt[:, 0]).mean()) > 0.8
+    finally:
+        del ENTRY_STRATEGIES["_test_fixed"]
+
+
+def test_emulated_shard_search_matches_manual_merge(world):
+    """The engine's shard plumbing == per-shard beam + top-k merge by hand
+    (the pre-refactor distributed_search local body)."""
+    base, queries, gd, idx, gt = world
+    n_shards, per = 4, base.shape[0] // 4
+    bs = jnp.stack([base[s * per:(s + 1) * per] for s in range(n_shards)])
+    # mask the global graph to local targets (rebuild=False layout)
+    ns = []
+    for s in range(n_shards):
+        local = gd.neighbors[s * per:(s + 1) * per]
+        inside = (local >= s * per) & (local < (s + 1) * per)
+        ns.append(jnp.where(inside, local - s * per, -1))
+    ns = jnp.stack(ns)
+    ent = shard_entries(jax.random.PRNGKey(11), n_shards, queries.shape[0],
+                        per, 8)
+    live = jnp.ones((n_shards,), bool).at[2].set(False)
+    spec = SearchSpec(ef=32, k=2)
+
+    d_eng, i_eng = emulated_shard_search(queries, bs, ns, ent, live, spec)
+
+    all_d, all_i = [], []
+    for s in range(n_shards):
+        res = beam_search(queries, bs[s], ns[s], ent[s], ef=32, k=2)
+        gids = jnp.where(res.ids >= 0, res.ids + s * per, -1)
+        all_d.append(jnp.where(live[s], res.dists, jnp.inf))
+        all_i.append(jnp.where(live[s], gids, -1))
+    d_man, i_man = merge_shard_results(
+        jnp.concatenate(all_d, 1), jnp.concatenate(all_i, 1), 2
+    )
+    np.testing.assert_array_equal(np.asarray(i_eng), np.asarray(i_man))
+    np.testing.assert_allclose(np.asarray(d_eng), np.asarray(d_man))
+
+
+def test_expand_width_through_engine(world):
+    """expand_width reaches the beam core from the spec (wide-expansion fast
+    path for every caller)."""
+    base, queries, gd, idx, gt = world
+    searcher = Searcher.from_graph(base, gd)
+    r1 = searcher.search(queries, SearchSpec(ef=32, entry="random"))
+    r4 = searcher.search(queries, SearchSpec(ef=32, entry="random",
+                                             expand_width=4))
+    assert int(r4.n_steps) < int(r1.n_steps)
+    rec1 = float((r1.ids[:, 0] == gt[:, 0]).mean())
+    rec4 = float((r4.ids[:, 0] == gt[:, 0]).mean())
+    assert rec4 >= rec1 - 0.05
+
+
+def test_trace_includes_seed_cost(world):
+    base, queries, gd, idx, _ = world
+    searcher = Searcher.from_hnsw(base, idx)
+    spec = SearchSpec(ef=16, entry="projection")
+    res, td, tc = searcher.search_with_trace(queries, spec, max_steps=24)
+    _, extra = searcher.seed(queries, spec)
+    assert (np.asarray(tc[0]) >= np.asarray(extra)).all()
+    assert (np.diff(np.asarray(tc), axis=0) >= 0).all()
