@@ -1,0 +1,97 @@
+"""Perf-regression guard over BENCH_engine.json (CI gate).
+
+Compares a freshly produced benchmark report against the committed baseline
+and fails when the beam core slows down by more than the allowed ratio, when
+any entry strategy's recall@1 drops, or when its comps/query grows — the
+committed file is the perf trajectory; regressions must be deliberate (update
+the baseline in the same PR and say why in CHANGES.md).
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline /tmp/bench_baseline.json --fresh BENCH_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+WORLD_KEYS = ("n", "d", "q", "ef")
+
+
+def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
+            max_comps_ratio: float, max_recall_drop: float,
+            allow_world_mismatch: bool = False, out=print) -> list[str]:
+    """Return a list of violation messages (empty = pass)."""
+    if any(baseline.get(k) != fresh.get(k) for k in WORLD_KEYS):
+        msg = (f"world mismatch "
+               f"(baseline {[baseline.get(k) for k in WORLD_KEYS]} vs "
+               f"fresh {[fresh.get(k) for k in WORLD_KEYS]})")
+        if allow_world_mismatch:
+            out(f"[perf-guard] SKIP: {msg} — incomparable")
+            return []
+        # a stale baseline must not silently disable the gate: regenerate
+        # the committed BENCH_engine.json on the new world instead
+        return [f"{msg}; rerun benchmarks/smoke.py with the baseline's "
+                f"world or regenerate the committed baseline"]
+    violations = []
+    b_wall, f_wall = baseline["beam_core_wall_ms"], fresh["beam_core_wall_ms"]
+    out(f"[perf-guard] beam_core_wall_ms: {b_wall} -> {f_wall} "
+        f"(allowed <= {b_wall * max_wall_ratio:.2f})")
+    if f_wall > b_wall * max_wall_ratio:
+        violations.append(
+            f"beam_core_wall_ms regressed >{(max_wall_ratio-1)*100:.0f}%: "
+            f"{b_wall} -> {f_wall}"
+        )
+    for name, b in baseline.get("strategies", {}).items():
+        f = fresh.get("strategies", {}).get(name)
+        if f is None:
+            violations.append(f"strategy {name!r} missing from fresh report")
+            continue
+        out(f"[perf-guard] {name}: recall {b['recall_at_1']} -> "
+            f"{f['recall_at_1']}, comps {b['comps_per_query']} -> "
+            f"{f['comps_per_query']}")
+        if f["recall_at_1"] < b["recall_at_1"] - max_recall_drop:
+            violations.append(
+                f"{name}: recall_at_1 {b['recall_at_1']} -> "
+                f"{f['recall_at_1']} (allowed drop {max_recall_drop})"
+            )
+        if f["comps_per_query"] > b["comps_per_query"] * max_comps_ratio:
+            violations.append(
+                f"{name}: comps_per_query {b['comps_per_query']} -> "
+                f"{f['comps_per_query']} "
+                f"(allowed <= {b['comps_per_query'] * max_comps_ratio:.1f})"
+            )
+    return violations
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--max-wall-ratio", type=float, default=1.25,
+                    help="fail if beam_core_wall_ms exceeds baseline * ratio")
+    ap.add_argument("--max-comps-ratio", type=float, default=1.10)
+    ap.add_argument("--max-recall-drop", type=float, default=0.02)
+    ap.add_argument("--allow-world-mismatch", action="store_true",
+                    help="skip (instead of fail) when the two reports were "
+                         "produced with different (n, d, q, ef) worlds")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    violations = compare(
+        baseline, fresh, max_wall_ratio=args.max_wall_ratio,
+        max_comps_ratio=args.max_comps_ratio,
+        max_recall_drop=args.max_recall_drop,
+        allow_world_mismatch=args.allow_world_mismatch,
+    )
+    if violations:
+        for v in violations:
+            print(f"[perf-guard] FAIL: {v}")
+        sys.exit(1)
+    print("[perf-guard] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,9 @@
 Runs every registered entry strategy through the one SearchEngine on a small
 synthetic world and emits ``BENCH_engine.json`` with recall@1, comparisons
 per query, and wall time per strategy, plus the beam-core batched-search
-timing (the number the hot-loop perf work is tracked against).
+timing (the number the hot-loop perf work is tracked against, and the one
+``benchmarks/check_regression.py`` guards in CI) and a streaming (Q, n, d)
+sweep comparing one monolithic batch against tiled ``search_stream`` serving.
 
     PYTHONPATH=src python -m benchmarks.smoke --out BENCH_engine.json
 """
@@ -17,7 +19,7 @@ sys.path.insert(0, "src")
 
 import jax  # noqa: E402
 
-from repro.core import bruteforce  # noqa: E402
+from repro.core import bruteforce, diversify  # noqa: E402
 from repro.core.engine import ENTRY_STRATEGIES, Searcher, SearchSpec  # noqa: E402
 
 try:
@@ -25,9 +27,44 @@ try:
 except ImportError:  # run as a plain script: python benchmarks/smoke.py
     from bench_util import timeit  # noqa: E402
 
+# Streaming sweep worlds: (Q, n, d). Kept small — graphs here are exact k-NN
+# (no NN-Descent) so the sweep adds seconds, not minutes, to CI.
+STREAM_SWEEP = [(256, 3000, 16), (384, 2000, 32), (512, 1500, 24)]
+
+
+def _stream_sweep(key, ef: int, tile_q: int, out) -> list[dict]:
+    rows = []
+    for i, (sq, sn, sd) in enumerate(STREAM_SWEEP):
+        kw = jax.random.fold_in(key, 100 + i)
+        sbase = jax.random.uniform(kw, (sn, sd))
+        squeries = jax.random.uniform(jax.random.fold_in(kw, 1), (sq, sd))
+        g = bruteforce.exact_knn_graph(sbase, 16)
+        gd = diversify.build_gd_graph(sbase, g)
+        s = Searcher.from_graph(sbase, gd, key=kw)
+        spec = SearchSpec(ef=ef, k=1, entry="projection")
+        mono, res_m = timeit(lambda: s.search(squeries, spec), iters=3)
+        stream, res_s = timeit(
+            lambda: s.search_stream(squeries, spec, tile_q=tile_q), iters=3
+        )
+        gt = bruteforce.ground_truth(squeries, sbase, 1)
+        rows.append({
+            "q": sq, "n": sn, "d": sd, "tile_q": tile_q,
+            "mono_ms": round(mono * 1e3, 2),
+            "stream_ms": round(stream * 1e3, 2),
+            "mono_qps": round(sq / mono, 1),
+            "stream_qps": round(sq / stream, 1),
+            "recall_at_1": round(
+                float((res_s.ids[:, 0] == gt[:, 0]).mean()), 4
+            ),
+        })
+        out(f"smoke/stream q={sq} n={sn} d={sd}: mono={mono*1e3:.1f}ms "
+            f"stream={stream*1e3:.1f}ms recall={rows[-1]['recall_at_1']:.3f}")
+    return rows
+
 
 def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
-        out_path: str = "BENCH_engine.json", out=print) -> dict:
+        stream_tile: int = 128, out_path: str = "BENCH_engine.json",
+        out=print) -> dict:
     key = jax.random.PRNGKey(0)
     base = jax.random.uniform(key, (n, d))
     queries = jax.random.uniform(jax.random.fold_in(key, 1), (q, d))
@@ -60,6 +97,9 @@ def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
     )
     report["beam_core_wall_ms"] = round(wall * 1e3, 2)
 
+    # streaming-vs-monolithic trajectory over (Q, n, d) — DESIGN.md §7
+    report["streaming"] = _stream_sweep(key, ef, stream_tile, out)
+
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     out(f"smoke/engine written to {out_path}")
@@ -72,9 +112,11 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=16)
     ap.add_argument("--q", type=int, default=100)
     ap.add_argument("--ef", type=int, default=48)
+    ap.add_argument("--stream-tile", type=int, default=128)
     ap.add_argument("--out", default="BENCH_engine.json")
     args = ap.parse_args()
-    run(n=args.n, d=args.d, q=args.q, ef=args.ef, out_path=args.out)
+    run(n=args.n, d=args.d, q=args.q, ef=args.ef,
+        stream_tile=args.stream_tile, out_path=args.out)
 
 
 if __name__ == "__main__":

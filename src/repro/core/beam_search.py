@@ -44,6 +44,24 @@ class _State(NamedTuple):
     step: jax.Array        # ()
 
 
+def default_max_steps(ef: int, expand_width: int = 1) -> int:
+    """Step budget: the beam converges in O(ef) expansions, and expand_width
+    W expands W vertices per step, so W-wide runs finish in ~1/W the steps —
+    a fixed 4*ef + 64 would make wide fixed-step scans burn W-fold dead work."""
+    return -(-4 * ef // expand_width) + 64
+
+
+def dedup_rows(ids: jax.Array) -> jax.Array:
+    """Sort each row and mark repeats INVALID — the dup-free-rows invariant
+    ``_mark_visited``'s scatter-add requires. Order is not preserved."""
+    srt = jnp.sort(ids, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((ids.shape[0], 1), bool), srt[:, 1:] == srt[:, :-1]],
+        axis=1,
+    )
+    return jnp.where(dup, INVALID, srt)
+
+
 def _mark_visited(visited: jax.Array, ids: jax.Array) -> jax.Array:
     """Set bits for ids (Q, R); ids < 0 are ignored. Rows must be dup-free
     among unvisited entries (guaranteed: adjacency rows are deduped)."""
@@ -55,15 +73,8 @@ def _mark_visited(visited: jax.Array, ids: jax.Array) -> jax.Array:
     return visited.at[q, word].add(bit, mode="drop")
 
 
-def _is_visited(visited: jax.Array, ids: jax.Array) -> jax.Array:
-    Q, W = visited.shape
-    safe = jnp.maximum(ids, 0)
-    q = jnp.broadcast_to(jnp.arange(Q)[:, None], ids.shape)
-    words = visited[q, jnp.minimum(safe >> 5, W - 1)]
-    return (words >> (safe & 31).astype(jnp.uint32)) & 1 > 0
-
-
-def _init_state(queries, base, neighbors, entry_ids, ef, metric) -> _State:
+def _init_state(queries, base, neighbors, entry_ids, ef, metric,
+                r_tile: int = 0) -> _State:
     from repro.kernels import ops
 
     Q = queries.shape[0]
@@ -71,7 +82,8 @@ def _init_state(queries, base, neighbors, entry_ids, ef, metric) -> _State:
     W = (n + 31) // 32
     E = entry_ids.shape[1]
 
-    d0 = ops.gather_distance(queries, entry_ids, base, metric=metric)  # (Q, E)
+    d0 = ops.gather_distance(queries, entry_ids, base, metric=metric,
+                             r_tile=r_tile)  # (Q, E)
     visited = jnp.zeros((Q, W), jnp.uint32)
     visited = _mark_visited(visited, entry_ids)
 
@@ -88,14 +100,15 @@ def _init_state(queries, base, neighbors, entry_ids, ef, metric) -> _State:
         cand_dists=cand_d,
         expanded=jnp.zeros((Q, ef), bool),
         visited=visited,
-        n_comps=jnp.full((Q,), E, jnp.int32),
+        # entry rows may carry INVALID padding (e.g. deduped random seeds)
+        n_comps=(entry_ids >= 0).sum(axis=1, dtype=jnp.int32),
         done=jnp.zeros((Q,), bool),
         step=jnp.int32(0),
     )
 
 
 def _step(state: _State, queries, base, neighbors, metric,
-          expand_width: int = 1) -> _State:
+          expand_width: int = 1, r_tile: int = 0) -> _State:
     from repro.kernels import ops
 
     Q, ef = state.cand_ids.shape
@@ -125,24 +138,20 @@ def _step(state: _State, queries, base, neighbors, metric,
         jnp.broadcast_to(jnp.arange(Q)[:, None], j.shape), j
     ].max(expandable)
 
-    # 2. gather neighbors; mask padding/visited/inactive
+    # 2. gather neighbors; mask padding/inactive
     nbrs = neighbors[jnp.maximum(vtx, 0)].reshape(Q, W * R)          # (Q, W*R)
     nbrs = jnp.where((nbrs >= 0) & jnp.repeat(expandable, R, axis=1), nbrs,
                      INVALID)
-    # dedup within the row (two expanded vertices may share a neighbor):
-    # sort and invalidate repeats, then visited-mask
+    # dedup within the row (two expanded vertices may share a neighbor)
     if W > 1:
-        srt = jnp.sort(nbrs, axis=1)
-        dup = jnp.concatenate(
-            [jnp.zeros((Q, 1), bool), srt[:, 1:] == srt[:, :-1]], axis=1
-        )
-        srt = jnp.where(dup, INVALID, srt)
-        nbrs = srt
-    seen = _is_visited(state.visited, nbrs)
-    nbrs = jnp.where(seen, INVALID, nbrs)
+        nbrs = dedup_rows(nbrs)
 
-    # 3. score + account + mark visited
-    nd = ops.gather_distance(queries, nbrs, base, metric=metric)     # (Q, R)
+    # 3. score + mask + account + mark visited. The visited-bitmap test and
+    # the validity mask are fused into the kernel epilogue: the kernel
+    # returns (+inf, INVALID) for padding/visited entries directly.
+    nd, nbrs = ops.gather_distance_masked(
+        queries, nbrs, base, state.visited, metric=metric, r_tile=r_tile
+    )                                                                # (Q, W*R)
     n_comps = state.n_comps + (nbrs >= 0).sum(axis=1, dtype=jnp.int32)
     visited = _mark_visited(state.visited, nbrs)
 
@@ -174,7 +183,9 @@ def _step(state: _State, queries, base, neighbors, metric,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("ef", "k", "metric", "max_steps", "expand_width")
+    jax.jit,
+    static_argnames=("ef", "k", "metric", "max_steps", "expand_width",
+                     "r_tile"),
 )
 def beam_search(
     queries: jax.Array,
@@ -186,18 +197,22 @@ def beam_search(
     metric: str = "l2",
     max_steps: int | None = None,
     expand_width: int = 1,
+    r_tile: int = 0,
 ) -> SearchResult:
     """Best-first graph search. entry_ids (Q, E) seeds (E <= ef).
-    expand_width > 1 expands several vertices per step (beyond-paper)."""
+    expand_width > 1 expands several vertices per step (beyond-paper);
+    r_tile sets the gather kernel's neighbor tile (0 = kernel default)."""
     if max_steps is None:
-        max_steps = 4 * ef + 64
-    state = _init_state(queries, base, neighbors, entry_ids, ef, metric)
+        max_steps = default_max_steps(ef, expand_width)
+    state = _init_state(queries, base, neighbors, entry_ids, ef, metric,
+                        r_tile)
 
     def cond(s: _State):
         return (~s.done.all()) & (s.step < max_steps)
 
     def body(s: _State):
-        return _step(s, queries, base, neighbors, metric, expand_width)
+        return _step(s, queries, base, neighbors, metric, expand_width,
+                     r_tile)
 
     state = jax.lax.while_loop(cond, body, state)
     return SearchResult(
@@ -209,7 +224,9 @@ def beam_search(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("ef", "k", "metric", "max_steps", "expand_width")
+    jax.jit,
+    static_argnames=("ef", "k", "metric", "max_steps", "expand_width",
+                     "r_tile"),
 )
 def search_with_trace(
     queries: jax.Array,
@@ -219,19 +236,27 @@ def search_with_trace(
     ef: int,
     k: int = 1,
     metric: str = "l2",
-    max_steps: int = 256,
+    max_steps: int | None = None,
     expand_width: int = 1,
+    r_tile: int = 0,
 ) -> tuple[SearchResult, jax.Array, jax.Array]:
     """Fixed-step variant recording the Fig. 6 statistics.
+
+    ``max_steps`` defaults to :func:`default_max_steps`, which scales down
+    with ``expand_width`` — the scan burns every step regardless of
+    convergence, so a W-agnostic bound would waste W-fold work.
 
     Returns (result, trace_dist (steps, Q), trace_comps (steps, Q)) where
     trace_dist[t, q] is the best distance reached after step t and
     trace_comps[t, q] the cumulative distance computations.
     """
-    state = _init_state(queries, base, neighbors, entry_ids, ef, metric)
+    if max_steps is None:
+        max_steps = default_max_steps(ef, expand_width)
+    state = _init_state(queries, base, neighbors, entry_ids, ef, metric,
+                        r_tile)
 
     def body(s: _State, _):
-        s2 = _step(s, queries, base, neighbors, metric, expand_width)
+        s2 = _step(s, queries, base, neighbors, metric, expand_width, r_tile)
         return s2, (s2.cand_dists[:, 0], s2.n_comps)
 
     state, (td, tc) = jax.lax.scan(body, state, None, length=max_steps)
@@ -265,7 +290,12 @@ def projection_entries(
 
 
 def random_entries(key: jax.Array, n: int, Q: int, E: int) -> jax.Array:
-    """E distinct random seeds per query (flat-HNSW start, paper Sec. IV)."""
-    keys = jax.random.split(key, Q)
-    pick = lambda k: jax.random.choice(k, n, shape=(E,), replace=False)
-    return jax.vmap(pick)(keys).astype(jnp.int32)
+    """E random seeds per query (flat-HNSW start, paper Sec. IV).
+
+    With-replacement draw + in-row dedup: O(Q*E log E) instead of the old
+    per-query no-replacement permutation (O(Q*n), which dominated wall time
+    for the ``random`` strategy — see ROADMAP). Collisions are marked INVALID
+    rather than redrawn (the beam requires dup-free rows for its bit-packed
+    visited scatter); at E << n they are rare and only shrink the seed set.
+    """
+    return dedup_rows(jax.random.randint(key, (Q, E), 0, n, dtype=jnp.int32))

@@ -58,6 +58,7 @@ class SearchSpec(NamedTuple):
     max_steps: int | None = None
     proj_dim: int = 8           # sketch width for projection/lsh seeding
     lsh_probes: int = 64        # rerank candidates for the lsh seeder
+    r_tile: int = 0             # gather-kernel neighbor tile (0 = default)
 
     @property
     def num_seeds(self) -> int:
@@ -335,22 +336,66 @@ class Searcher:
             queries, self.base, self.neighbors, entries,
             ef=spec.ef, k=spec.k, metric=spec.metric,
             max_steps=spec.max_steps, expand_width=spec.expand_width,
+            r_tile=spec.r_tile,
         )
         if entry_comps is not None:
             res = res._replace(n_comps=res.n_comps + entry_comps)
         return res
 
+    def search_stream(self, queries, spec: SearchSpec,
+                      key: jax.Array | None = None, *,
+                      tile_q: int = 256) -> SearchResult:
+        """Streaming query batching (DESIGN.md §7): a large Q is split into
+        fixed ``tile_q``-row tiles that pipeline through the jitted beam core
+        — one compile (the tile shape never changes; the last tile is padded),
+        device-sized working sets, steady-state occupancy.
+
+        Per-tile seeding keys are folded from ``key``, so key-deterministic
+        strategies (projection / hierarchy / lsh) return exactly what
+        :meth:`search` would; ``random`` draws per-tile seeds.
+        ``n_steps`` sums the tiles' sequential loop iterations."""
+        self._check_metric(spec)
+        Q = queries.shape[0]
+        if Q <= tile_q:
+            return self.search(queries, spec, key)
+        if key is None:
+            key = self.key
+        self.prepare(spec)  # strategy state built once, outside the loop
+        ids, dists, comps = [], [], []
+        n_steps = jnp.int32(0)
+        for i, lo in enumerate(range(0, Q, tile_q)):
+            tile = queries[lo:lo + tile_q]
+            pad = tile_q - tile.shape[0]
+            if pad:  # keep the compiled shape fixed
+                tile = jnp.concatenate(
+                    [tile, jnp.broadcast_to(tile[-1:], (pad, tile.shape[1]))]
+                )
+            res = self.search(tile, spec, jax.random.fold_in(key, i))
+            take = tile_q - pad
+            ids.append(res.ids[:take])
+            dists.append(res.dists[:take])
+            comps.append(res.n_comps[:take])
+            n_steps = n_steps + res.n_steps
+        return SearchResult(
+            ids=jnp.concatenate(ids),
+            dists=jnp.concatenate(dists),
+            n_comps=jnp.concatenate(comps),
+            n_steps=n_steps,
+        )
+
     def search_with_trace(self, queries, spec: SearchSpec,
-                          key: jax.Array | None = None, max_steps: int = 256):
+                          key: jax.Array | None = None,
+                          max_steps: int | None = None):
         """Fig. 6 instrumentation through the same seeding path.
-        ``spec.max_steps`` (when set) overrides the ``max_steps`` default."""
+        ``spec.max_steps`` (when set) overrides ``max_steps``; when both are
+        unset the core's expand_width-aware default applies."""
         ent, extra = self.seed(queries, spec, key)
         if spec.max_steps is not None:
             max_steps = spec.max_steps
         res, td, tc = search_with_trace(
             queries, self.base, self.neighbors, ent,
             ef=spec.ef, k=spec.k, metric=spec.metric, max_steps=max_steps,
-            expand_width=spec.expand_width,
+            expand_width=spec.expand_width, r_tile=spec.r_tile,
         )
         return res._replace(n_comps=res.n_comps + extra), td, tc + extra[None, :]
 
@@ -386,6 +431,7 @@ def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
         queries, base, neighbors, entries,
         ef=spec.ef, k=spec.k, metric=spec.metric,
         max_steps=spec.max_steps, expand_width=spec.expand_width,
+        r_tile=spec.r_tile,
     )
     sid = jax.lax.axis_index(axis)
     gids = globalize_ids(res.ids, sid, per)
@@ -415,6 +461,7 @@ def emulated_shard_search(queries, base_shards, nbr_shards, entries, live,
             queries, base_shards[s], nbr_shards[s], entries[s],
             ef=spec.ef, k=spec.k, metric=spec.metric,
             max_steps=spec.max_steps, expand_width=spec.expand_width,
+            r_tile=spec.r_tile,
         )
         all_d.append(jnp.where(live[s], res.dists, jnp.inf))
         all_i.append(jnp.where(live[s], globalize_ids(res.ids, s, per), INVALID))

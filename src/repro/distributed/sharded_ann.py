@@ -69,7 +69,8 @@ def shard_graph(base, neighbors, n_shards: int, *, rebuild: bool = True,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("ef", "k", "metric", "mesh", "axis", "expand_width"),
+    static_argnames=("ef", "k", "metric", "mesh", "axis", "expand_width",
+                     "r_tile"),
 )
 def distributed_search(
     queries: jax.Array,       # (Q, d) replicated
@@ -84,11 +85,13 @@ def distributed_search(
     mesh: Mesh,
     axis: str = "shards",
     expand_width: int = 1,
+    r_tile: int = 0,
 ):
     """Shard-and-merge search: each shard runs the SAME SearchEngine beam core
     (``engine.shard_search``); this wrapper only binds the mesh layout."""
     per = base_shards.shape[1]
-    spec = SearchSpec(ef=ef, k=k, metric=metric, expand_width=expand_width)
+    spec = SearchSpec(ef=ef, k=k, metric=metric, expand_width=expand_width,
+                      r_tile=r_tile)
 
     def local(qs, b, nb, ent, live):
         return engine.shard_search(

@@ -1,13 +1,20 @@
 """Fused gather + distance Pallas kernel — the beam-search inner loop.
 
-Given per-query neighbor ids, fetch the base rows straight from HBM (scalar-
-prefetched ids drive the BlockSpec index_map, the canonical Pallas-TPU gather
-pattern) and reduce against the query without materializing a (Q, R, d)
-intermediate in HBM.
+Given per-query neighbor ids, fetch the base rows straight from HBM and reduce
+against the query without materializing a (Q, R, d) intermediate in HBM.
 
-Grid = (Q, R): step (q, r) DMAs base row ids[q, r] into VMEM, the query row q
-is revisited (Pallas keeps it resident across the inner r loop), and a single
-(1, d) * (1, d) reduction writes out[q, r].
+Tiled layout (DESIGN.md §7): grid = (Q, R/R_tile). The base stays in HBM
+(``pl.ANY``); each grid step issues ``R_tile`` row DMAs into a double-buffered
+VMEM scratch — the fetch for tile t+1 is in flight while tile t reduces — and
+the query row stays VMEM-resident across the inner tile loop (its BlockSpec
+revisits the same block). The reduction is one (1, d) x (R_tile, d)
+contraction on the MXU instead of R scalar (1, d) dot-sums.
+
+The epilogue fuses the per-step masking the beam search used to re-do in XLA:
+padding ids (< 0) score +inf, and the ``*_masked`` variant additionally tests
+each id against a bit-packed visited bitmap, returning both the masked
+distances and the masked ids (INVALID where dropped) so ``beam_search._step``
+consumes kernel outputs directly.
 """
 from __future__ import annotations
 
@@ -18,49 +25,202 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+DEFAULT_R_TILE = 16
 
-def _gd_kernel(ids_ref, q_ref, row_ref, o_ref, *, metric: str):
-    q = q_ref[...].astype(jnp.float32)  # (1, d)
-    row = row_ref[...].astype(jnp.float32)  # (1, d)
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _tile_distances(q, rows, metric: str) -> jax.Array:
+    """(1, d) query x (R_tile, d) rows -> (1, R_tile) distances, fp32.
+
+    One MXU contraction for the cross term; norms fused on the VPU."""
+    # HIGHEST keeps the MXU passes full fp32: the l2/cos epilogues difference
+    # large norms, so bf16-truncated products would cancel catastrophically
+    # for near-duplicate rows.
+    cross = jax.lax.dot_general(
+        q, rows, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+        precision=jax.lax.Precision.HIGHEST,
+    )  # (1, R_tile)
     if metric == "ip":
-        d = -jnp.sum(q * row)
-    elif metric == "cos":
-        qn = q * jax.lax.rsqrt(jnp.maximum(jnp.sum(q * q), 1e-12))
-        rn = row * jax.lax.rsqrt(jnp.maximum(jnp.sum(row * row), 1e-12))
-        d = 1.0 - jnp.sum(qn * rn)
+        return -cross
+    rr = jnp.sum(rows * rows, axis=-1)[None, :]  # (1, R_tile)
+    if metric == "cos":
+        qn = jax.lax.rsqrt(jnp.maximum(jnp.sum(q * q), 1e-12))
+        return 1.0 - cross * qn * jax.lax.rsqrt(jnp.maximum(rr, 1e-12))
+    qq = jnp.sum(q * q)
+    return jnp.maximum(qq - 2.0 * cross + rr, 0.0)
+
+
+def _gd_tiled_kernel(
+    # scalar prefetch
+    ids_sref,
+    # inputs
+    idv_ref,
+    q_ref,
+    *rest,
+    metric: str,
+    r_tile: int,
+    masked: bool,
+):
+    if masked:
+        vis_ref, base_ref, d_ref, oid_ref, rows, sems = rest
     else:
-        diff = q - row
-        d = jnp.sum(diff * diff)
-    i, r = pl.program_id(0), pl.program_id(1)
-    invalid = ids_ref[i, r] < 0
-    o_ref[0, 0] = jnp.where(invalid, jnp.inf, d)
+        base_ref, d_ref, rows, sems = rest
+
+    qi, t = pl.program_id(0), pl.program_id(1)
+    nt = pl.num_programs(1)
+    step = qi * nt + t
+    last = pl.num_programs(0) * nt - 1
+
+    def row_dma(slot, j, flat_step):
+        qq, tt = flat_step // nt, flat_step % nt
+        rid = jnp.maximum(ids_sref[qq, tt * r_tile + j], 0)
+        return pltpu.make_async_copy(
+            base_ref.at[pl.ds(rid, 1), :],
+            rows.at[slot, pl.ds(j, 1), :],
+            sems.at[slot, j],
+        )
+
+    def start_fetch(slot, flat_step):
+        for j in range(r_tile):
+            row_dma(slot, j, flat_step).start()
+
+    # Double buffering: tile 0 warms up; every step prefetches the next tile
+    # into the alternate buffer before draining its own.
+    @pl.when(step == 0)
+    def _():
+        start_fetch(0, 0)
+
+    @pl.when(step < last)
+    def _():
+        start_fetch((step + 1) % 2, step + 1)
+
+    slot = step % 2
+    for j in range(r_tile):
+        row_dma(slot, j, step).wait()
+
+    q = q_ref[...].astype(jnp.float32)                    # (1, d)
+    tile = rows[pl.ds(slot, 1)][0].astype(jnp.float32)    # (R_tile, d)
+    d = _tile_distances(q, tile, metric)                  # (1, R_tile)
+
+    ids_t = idv_ref[...]                                  # (1, R_tile)
+    drop = ids_t < 0
+    if masked:
+        safe = jnp.maximum(ids_t, 0)
+        W = vis_ref.shape[1]
+        words = jnp.take_along_axis(
+            vis_ref[...], jnp.minimum(safe >> 5, W - 1), axis=1
+        )
+        seen = (words >> (safe & 31).astype(jnp.uint32)) & 1 > 0
+        drop = drop | seen
+        oid_ref[...] = jnp.where(drop, -1, ids_t)
+    d_ref[...] = jnp.where(drop, jnp.inf, d)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def _pad_ids(ids: jax.Array, r_tile: int) -> tuple[jax.Array, int]:
+    R = ids.shape[1]
+    Rp = _ceil_to(R, r_tile)
+    if Rp != R:
+        ids = jnp.pad(ids, ((0, 0), (0, Rp - R)), constant_values=-1)
+    return ids, Rp
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "r_tile", "interpret")
+)
 def gather_distance(
     queries: jax.Array,
     ids: jax.Array,
     base: jax.Array,
     metric: str = "l2",
+    r_tile: int = DEFAULT_R_TILE,
     interpret: bool = False,
 ) -> jax.Array:
     """queries (Q, d), ids (Q, R), base (n, d) -> (Q, R) distances."""
     Q, d = queries.shape
-    _, R = ids.shape
+    R = ids.shape[1]
+    rt = max(1, min(r_tile, R))
+    ids_p, Rp = _pad_ids(ids, rt)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(Q, R),
+        grid=(Q, Rp // rt),
         in_specs=[
-            pl.BlockSpec((1, d), lambda q, r, ids: (q, 0)),  # query row
-            # Gather: the base block index is data-dependent via prefetched ids.
-            pl.BlockSpec((1, d), lambda q, r, ids: (jnp.maximum(ids[q, r], 0), 0)),
+            pl.BlockSpec((1, rt), lambda q, t, ids: (q, t)),   # ids tile
+            pl.BlockSpec((1, d), lambda q, t, ids: (q, 0)),    # query row
+            pl.BlockSpec(memory_space=pltpu.ANY),              # base, HBM
         ],
-        out_specs=pl.BlockSpec((1, 1), lambda q, r, ids: (q, r)),
+        out_specs=pl.BlockSpec((1, rt), lambda q, t, ids: (q, t)),
+        scratch_shapes=[
+            pltpu.VMEM((2, rt, d), base.dtype),
+            pltpu.SemaphoreType.DMA((2, rt)),
+        ],
     )
     out = pl.pallas_call(
-        functools.partial(_gd_kernel, metric=metric),
+        functools.partial(
+            _gd_tiled_kernel, metric=metric, r_tile=rt, masked=False
+        ),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((Q, R), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Q, Rp), jnp.float32),
         interpret=interpret,
-    )(ids, queries, base)
-    return out
+    )(ids_p, ids_p, queries, base)
+    return out[:, :R]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "r_tile", "interpret")
+)
+def gather_distance_masked(
+    queries: jax.Array,
+    ids: jax.Array,
+    base: jax.Array,
+    visited: jax.Array,
+    metric: str = "l2",
+    r_tile: int = DEFAULT_R_TILE,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused gather + distance + visited/validity masking.
+
+    visited is the beam's (Q, ceil(n/32)) uint32 bitmap. Returns
+    (dists (Q, R), masked ids (Q, R)): entries that are padding (< 0) or
+    already visited come back as (+inf, INVALID), so the caller never
+    re-masks in XLA.
+    """
+    Q, d = queries.shape
+    R = ids.shape[1]
+    rt = max(1, min(r_tile, R))
+    ids_p, Rp = _pad_ids(ids, rt)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, Rp // rt),
+        in_specs=[
+            pl.BlockSpec((1, rt), lambda q, t, ids: (q, t)),   # ids tile
+            pl.BlockSpec((1, d), lambda q, t, ids: (q, 0)),    # query row
+            pl.BlockSpec(
+                (1, visited.shape[1]), lambda q, t, ids: (q, 0)
+            ),                                                 # visited row
+            pl.BlockSpec(memory_space=pltpu.ANY),              # base, HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rt), lambda q, t, ids: (q, t)),
+            pl.BlockSpec((1, rt), lambda q, t, ids: (q, t)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, rt, d), base.dtype),
+            pltpu.SemaphoreType.DMA((2, rt)),
+        ],
+    )
+    dists, oids = pl.pallas_call(
+        functools.partial(
+            _gd_tiled_kernel, metric=metric, r_tile=rt, masked=True
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, Rp), jnp.float32),
+            jax.ShapeDtypeStruct((Q, Rp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids_p, ids_p, queries, visited, base)
+    return dists[:, :R], oids[:, :R]

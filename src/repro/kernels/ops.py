@@ -4,6 +4,12 @@ On TPU the compiled kernels run natively; on CPU (this container) the default
 is the jnp reference (fast under XLA:CPU), with ``REPRO_PALLAS=interpret``
 forcing the Pallas bodies through the interpreter for validation. Tests also
 call the kernels directly with ``interpret=True``.
+
+``gather_distance`` / ``gather_distance_masked`` additionally dispatch on the
+base size (DESIGN.md §7): below ``ONEHOT_N`` rows the gather is a one-hot
+matmul (exact, MXU-friendly, no per-row DMAs) on EVERY backend, so CPU CI
+exercises the same small-n branch production takes on TPU; above it the tiled
+double-buffered Pallas kernel (native/interpret) or the jnp gather (ref) runs.
 """
 from __future__ import annotations
 
@@ -13,8 +19,23 @@ import jax
 
 from . import ref
 from .distance_matrix import distance_matrix as _dm_pallas
+from .gather_distance import DEFAULT_R_TILE
 from .gather_distance import gather_distance as _gd_pallas
+from .gather_distance import gather_distance_masked as _gdm_pallas
 from .pq_adc import pq_adc as _adc_pallas
+
+# Bases at or below this row count take the one-hot-matmul gather: the
+# (Q, R, n) one-hot is small, and a single contraction beats n-scattered row
+# DMAs. Numerics are identical to the gather path (0/1 contraction).
+ONEHOT_N = int(os.environ.get("REPRO_ONEHOT_N", "1024"))
+# ... but only while the materialized (Q, R, n) one-hot stays modest (64 MB
+# fp32); NN-Descent's (chunk, C) scoring pools would otherwise blow it up.
+ONEHOT_BUDGET = 1 << 24
+
+
+def _use_onehot(ids, base) -> bool:
+    n = base.shape[0]
+    return n <= ONEHOT_N and ids.shape[0] * ids.shape[1] * n <= ONEHOT_BUDGET
 
 
 def _mode() -> str:
@@ -31,11 +52,40 @@ def distance_matrix(x, y, metric: str = "l2", **kw):
     return _dm_pallas(x, y, metric=metric, interpret=(mode == "interpret"), **kw)
 
 
-def gather_distance(queries, ids, base, metric: str = "l2"):
+def gather_distance(queries, ids, base, metric: str = "l2", r_tile: int = 0):
+    """(Q, d) x ids (Q, R) into base (n, d) -> (Q, R); r_tile 0 = default."""
+    if _use_onehot(ids, base):
+        return ref.gather_distance_onehot_ref(queries, ids, base, metric)
     mode = _mode()
     if mode == "ref":
         return ref.gather_distance_ref(queries, ids, base, metric)
-    return _gd_pallas(queries, ids, base, metric=metric, interpret=(mode == "interpret"))
+    return _gd_pallas(
+        queries, ids, base, metric=metric,
+        r_tile=(r_tile or DEFAULT_R_TILE), interpret=(mode == "interpret"),
+    )
+
+
+def gather_distance_masked(queries, ids, base, visited, metric: str = "l2",
+                           r_tile: int = 0):
+    """Fused gather + distance + visited/validity mask -> (dists, masked ids).
+
+    The beam's per-step epilogue: padding (< 0) and bitmap-visited ids come
+    back as (+inf, -1), so ``beam_search._step`` never re-masks in XLA.
+    """
+    if _use_onehot(ids, base):
+        masked = ref.visited_mask_ref(ids, visited)
+        return (
+            ref.gather_distance_onehot_ref(queries, masked, base, metric),
+            masked,
+        )
+    mode = _mode()
+    if mode == "ref":
+        return ref.gather_distance_masked_ref(queries, ids, base, visited,
+                                              metric)
+    return _gdm_pallas(
+        queries, ids, base, visited, metric=metric,
+        r_tile=(r_tile or DEFAULT_R_TILE), interpret=(mode == "interpret"),
+    )
 
 
 def pq_adc(codes, lut):

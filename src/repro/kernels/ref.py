@@ -22,16 +22,12 @@ def distance_matrix_ref(x: jax.Array, y: jax.Array, metric: str = "l2") -> jax.A
     return jnp.maximum(xx - 2.0 * (x @ y.T) + yy, 0.0)
 
 
-def gather_distance_ref(
-    queries: jax.Array, ids: jax.Array, base: jax.Array, metric: str = "l2"
+def _distances_from_rows(
+    queries: jax.Array, ids: jax.Array, rows: jax.Array, metric: str
 ) -> jax.Array:
-    """queries (Q, d), ids (Q, R) into base (n, d) -> (Q, R) distances.
-
-    Padding ids (< 0) produce +inf. This is the beam-search inner loop.
-    """
-    safe = jnp.maximum(ids, 0)
-    rows = base[safe]  # (Q, R, d)
-    q = queries[:, None, :]
+    """queries (Q, d) vs gathered rows (Q, R, d) -> (Q, R); ids < 0 -> +inf."""
+    q = queries[:, None, :].astype(jnp.float32)
+    rows = rows.astype(jnp.float32)
     if metric == "ip":
         d = -jnp.sum(rows * q, axis=-1)
     elif metric == "cos":
@@ -44,6 +40,56 @@ def gather_distance_ref(
         diff = rows - q
         d = jnp.sum(diff * diff, axis=-1)
     return jnp.where(ids >= 0, d, jnp.inf)
+
+
+def gather_distance_ref(
+    queries: jax.Array, ids: jax.Array, base: jax.Array, metric: str = "l2"
+) -> jax.Array:
+    """queries (Q, d), ids (Q, R) into base (n, d) -> (Q, R) distances.
+
+    Padding ids (< 0) produce +inf. This is the beam-search inner loop.
+    """
+    rows = base[jnp.maximum(ids, 0)]  # (Q, R, d)
+    return _distances_from_rows(queries, ids, rows, metric)
+
+
+def gather_distance_onehot_ref(
+    queries: jax.Array, ids: jax.Array, base: jax.Array, metric: str = "l2"
+) -> jax.Array:
+    """Small-n fallback: the gather is a one-hot matmul (MXU-friendly on TPU,
+    a dense XLA contraction on CPU), so the whole inner loop stays on the
+    matrix unit for bases that fit a (Q, R, n) one-hot. Bit-identical to
+    ``gather_distance_ref``: the 0/1 contraction reproduces rows exactly.
+    """
+    oh = jax.nn.one_hot(jnp.maximum(ids, 0), base.shape[0], dtype=jnp.float32)
+    # HIGHEST: a 0/1 x fp32 contraction is exact only without bf16 truncation
+    rows = jnp.einsum("qrn,nd->qrd", oh, base.astype(jnp.float32),
+                      precision=jax.lax.Precision.HIGHEST)
+    return _distances_from_rows(queries, ids, rows, metric)
+
+
+def visited_mask_ref(ids: jax.Array, visited: jax.Array) -> jax.Array:
+    """ids (Q, R) against a bit-packed (Q, ceil(n/32)) uint32 visited bitmap
+    -> ids with padding (< 0) and already-visited entries set to -1."""
+    Q, W = visited.shape
+    safe = jnp.maximum(ids, 0)
+    q = jnp.broadcast_to(jnp.arange(Q)[:, None], ids.shape)
+    words = visited[q, jnp.minimum(safe >> 5, W - 1)]
+    seen = (words >> (safe & 31).astype(jnp.uint32)) & 1 > 0
+    return jnp.where((ids >= 0) & ~seen, ids, -1)
+
+
+def gather_distance_masked_ref(
+    queries: jax.Array,
+    ids: jax.Array,
+    base: jax.Array,
+    visited: jax.Array,
+    metric: str = "l2",
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused masked kernel: (dists, masked ids) where padding
+    and visited entries come back as (+inf, -1)."""
+    masked = visited_mask_ref(ids, visited)
+    return gather_distance_ref(queries, masked, base, metric), masked
 
 
 def pq_adc_ref(codes: jax.Array, lut: jax.Array) -> jax.Array:

@@ -72,18 +72,26 @@ def serve_ann(args) -> None:
             print(f"[serve-ann] saved flat graph to {index_path}")
 
     spec = SearchSpec(ef=args.ef, k=args.topk, metric=searcher.metric,
-                      entry=args.entry)
+                      entry=args.entry, r_tile=args.r_tile)
+    # --stream-tile T splits each incoming batch into T-row tiles that
+    # pipeline through one compiled beam core (DESIGN.md §7); 0 = monolithic.
+    if args.stream_tile:
+        do_search = lambda q, k: searcher.search_stream(
+            q, spec, k, tile_q=args.stream_tile
+        )
+    else:
+        do_search = lambda q, k: searcher.search(q, spec, k)
     d_dim = searcher.base.shape[1]
     qkey = jax.random.fold_in(key, 7)
     warm = jax.random.normal(qkey, (args.batch, d_dim))
-    res = searcher.search(warm, spec)            # compile + strategy prep
+    res = do_search(warm, qkey)                  # compile + strategy prep
     jax.block_until_ready(res.ids)
 
     t0 = time.time()
     served_q, served_ids, served_comps, served = [], [], [], 0
     for b in range(args.batches):
         q = jax.random.normal(jax.random.fold_in(qkey, b), (args.batch, d_dim))
-        res = searcher.search(q, spec)
+        res = do_search(q, jax.random.fold_in(qkey, 1000 + b))
         jax.block_until_ready(res.ids)
         served += args.batch
         served_q.append(q)
@@ -96,9 +104,11 @@ def serve_ann(args) -> None:
     gt = bruteforce.ground_truth(all_q, searcher.base, 1, searcher.metric)
     recall = float((jnp.concatenate(served_ids) == gt[:, 0]).mean())
     comps = float(jnp.concatenate(served_comps).mean())
-    print(f"[serve-ann] entry={args.entry} ef={args.ef} k={args.topk}: "
-          f"{served} queries in {dt*1e3:.0f} ms ({served/dt:.0f} qps), "
-          f"recall@1={recall:.3f}, comps/query={comps:.0f}")
+    mode = (f"stream[{args.stream_tile}]" if args.stream_tile else "batch")
+    print(f"[serve-ann] entry={args.entry} ef={args.ef} k={args.topk} "
+          f"mode={mode}: {served} queries in {dt*1e3:.0f} ms "
+          f"({served/dt:.0f} qps), recall@1={recall:.3f}, "
+          f"comps/query={comps:.0f}")
 
 
 def main() -> None:
@@ -117,6 +127,11 @@ def main() -> None:
                     help="[ann] query batches to serve")
     ap.add_argument("--index", default=None,
                     help="[ann] .npz graph path to load (or save after build)")
+    ap.add_argument("--r-tile", type=int, default=0,
+                    help="[ann] gather-kernel neighbor tile (0 = default)")
+    ap.add_argument("--stream-tile", type=int, default=0,
+                    help="[ann] split batches into this many queries per "
+                         "streamed tile (0 = one monolithic search per batch)")
     args = ap.parse_args()
 
     if args.arch == "ann":

@@ -1,0 +1,53 @@
+"""Regenerate golden_engine.npz — the locked search outputs tests/test_engine.py
+asserts bit-exact parity against.
+
+Run from the repo root (CPU, ref kernels — the default off-TPU):
+
+    PYTHONPATH=src python tests/data/make_golden.py
+
+Only rerun this when search semantics change ON PURPOSE (e.g. the PR 2
+``random_entries`` rework from a per-query permutation to a with-replacement
+draw); note every regeneration in CHANGES.md. The world below must stay in
+lock-step with the ``world`` fixture in tests/test_engine.py.
+"""
+import os
+
+import jax
+import numpy as np
+
+from repro.core import diversify, hnsw, nndescent
+
+OUT = os.path.join(os.path.dirname(__file__), "golden_engine.npz")
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(42)
+    base = jax.random.uniform(key, (2000, 16))
+    queries = jax.random.uniform(jax.random.fold_in(key, 1), (32, 16))
+    g = nndescent.build_knn_graph(
+        base, nndescent.NNDescentConfig(k=16, rounds=8), key=jax.random.PRNGKey(3)
+    )
+    gd = diversify.build_gd_graph(base, g)
+    idx = hnsw.build_hnsw(
+        base, hnsw.HnswConfig(M=8, knn_k=16, brute_threshold=4096),
+        key=jax.random.PRNGKey(5),
+    )
+
+    flat = hnsw.flat_search(queries, base, gd, ef=32, k=4,
+                            key=jax.random.PRNGKey(7), n_seeds=8)
+    hier = hnsw.hnsw_search(queries, base, idx, ef=32, k=4)
+    np.savez(
+        OUT,
+        flat_ids=np.asarray(flat.ids),
+        flat_dists=np.asarray(flat.dists),
+        flat_comps=np.asarray(flat.n_comps),
+        hier_ids=np.asarray(hier.ids),
+        hier_dists=np.asarray(hier.dists),
+        hier_comps=np.asarray(hier.n_comps),
+    )
+    print(f"wrote {OUT}: flat comps mean={float(flat.n_comps.mean()):.1f}, "
+          f"hier comps mean={float(hier.n_comps.mean()):.1f}")
+
+
+if __name__ == "__main__":
+    main()

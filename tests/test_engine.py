@@ -209,6 +209,47 @@ def test_expand_width_through_engine(world):
     assert rec4 >= rec1 - 0.05
 
 
+def test_search_stream_matches_monolithic(world):
+    """Streaming tiles through a key-deterministic seeder must return exactly
+    what one monolithic batch would — tiling is a throughput choice, not a
+    semantic one."""
+    base, queries, gd, idx, _ = world
+    searcher = Searcher.from_graph(base, gd)
+    spec = SearchSpec(ef=32, k=2, entry="projection")
+    mono = searcher.search(queries, spec)
+    # tile_q=10 forces ragged last-tile padding (32 = 3*10 + 2)
+    stream = searcher.search_stream(queries, spec, tile_q=10)
+    np.testing.assert_array_equal(np.asarray(mono.ids),
+                                  np.asarray(stream.ids))
+    np.testing.assert_array_equal(np.asarray(mono.dists),
+                                  np.asarray(stream.dists))
+    np.testing.assert_array_equal(np.asarray(mono.n_comps),
+                                  np.asarray(stream.n_comps))
+
+
+def test_search_stream_random_strategy_recall(world):
+    """Per-tile seed keys: the random strategy streams with fresh draws per
+    tile and still reaches monolithic-grade recall."""
+    base, queries, gd, idx, gt = world
+    searcher = Searcher.from_graph(base, gd)
+    spec = SearchSpec(ef=48, k=1, entry="random")
+    res = searcher.search_stream(queries, spec, tile_q=8)
+    assert res.ids.shape == (queries.shape[0], 1)
+    assert float((res.ids[:, 0] == gt[:, 0]).mean()) >= 0.9
+
+
+def test_r_tile_spec_is_result_invariant(world):
+    """r_tile only re-tiles the gather kernel; results cannot move."""
+    base, queries, gd, idx, _ = world
+    searcher = Searcher.from_hnsw(base, idx)
+    r_def = searcher.search(queries, SearchSpec(ef=32, entry="hierarchy"))
+    r_t4 = searcher.search(queries, SearchSpec(ef=32, entry="hierarchy",
+                                               r_tile=4))
+    np.testing.assert_array_equal(np.asarray(r_def.ids), np.asarray(r_t4.ids))
+    np.testing.assert_array_equal(np.asarray(r_def.n_comps),
+                                  np.asarray(r_t4.n_comps))
+
+
 def test_trace_includes_seed_cost(world):
     base, queries, gd, idx, _ = world
     searcher = Searcher.from_hnsw(base, idx)

@@ -100,6 +100,28 @@ def test_multi_expansion_fewer_steps(world):
     assert float(r4.n_comps.mean()) < 2 * float(r1.n_comps.mean())
 
 
+def test_default_max_steps_scales_with_expand_width():
+    """The step budget shrinks ~1/W for W-wide expansion: wide fixed-step
+    scans must not burn a 1-wide budget."""
+    assert beam_search.default_max_steps(48) == 4 * 48 + 64
+    assert beam_search.default_max_steps(48, 4) == 4 * 48 // 4 + 64
+    assert beam_search.default_max_steps(48, 4) < beam_search.default_max_steps(48)
+
+
+def test_random_entries_dedup_and_range(world):
+    """With-replacement draw: every entry is in range or INVALID, and rows
+    are dup-free among valid ids (required by the visited-bitmap scatter)."""
+    ent = beam_search.random_entries(jax.random.PRNGKey(3), 50, 200, 16)
+    e = np.asarray(ent)
+    assert e.shape == (200, 16)
+    assert ((e >= -1) & (e < 50)).all()
+    for row in e:
+        valid = row[row >= 0]
+        assert len(set(valid.tolist())) == len(valid)
+    # most seeds survive the dedup at E << n
+    assert (e >= 0).mean() > 0.7
+
+
 def test_projection_entries_valid(world):
     base, queries, gt, g = world
     import jax.numpy as jnp
