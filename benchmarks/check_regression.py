@@ -34,14 +34,24 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
         return [f"{msg}; rerun benchmarks/smoke.py with the baseline's "
                 f"world or regenerate the committed baseline"]
     violations = []
-    b_wall, f_wall = baseline["beam_core_wall_ms"], fresh["beam_core_wall_ms"]
-    out(f"[perf-guard] beam_core_wall_ms: {b_wall} -> {f_wall} "
-        f"(allowed <= {b_wall * max_wall_ratio:.2f})")
-    if f_wall > b_wall * max_wall_ratio:
-        violations.append(
-            f"beam_core_wall_ms regressed >{(max_wall_ratio-1)*100:.0f}%: "
-            f"{b_wall} -> {f_wall}"
-        )
+    # wall guards: the exact beam core and its compressed (pq-scored) twin,
+    # same policy. pq_beam_wall_ms is absent from pre-scorer baselines; the
+    # guard arms itself the first time a baseline carries it.
+    for wall_key in ("beam_core_wall_ms", "pq_beam_wall_ms"):
+        b_wall = baseline.get(wall_key)
+        if b_wall is None:
+            continue
+        f_wall = fresh.get(wall_key)
+        if f_wall is None:
+            violations.append(f"{wall_key} missing from fresh report")
+            continue
+        out(f"[perf-guard] {wall_key}: {b_wall} -> {f_wall} "
+            f"(allowed <= {b_wall * max_wall_ratio:.2f})")
+        if f_wall > b_wall * max_wall_ratio:
+            violations.append(
+                f"{wall_key} regressed >{(max_wall_ratio-1)*100:.0f}%: "
+                f"{b_wall} -> {f_wall}"
+            )
     for name, b in baseline.get("strategies", {}).items():
         f = fresh.get("strategies", {}).get(name)
         if f is None:
@@ -61,6 +71,35 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
                 f"{f['comps_per_query']} "
                 f"(allowed <= {b['comps_per_query'] * max_comps_ratio:.1f})"
             )
+    # pq sweep rows (matched by (d, pq_m)): recall and comps guarded per
+    # scorer with the strategy policy; wall stays informational (the sweep
+    # worlds are tiny, pq_beam_wall_ms above is the timed gate)
+    fresh_rows = {(r["d"], r["pq_m"]): r for r in fresh.get("pq_sweep", [])}
+    for b in baseline.get("pq_sweep", []):
+        f = fresh_rows.get((b["d"], b["pq_m"]))
+        tag = f"pq_sweep[d={b['d']},M={b['pq_m']}]"
+        if f is None:
+            violations.append(f"{tag} missing from fresh report")
+            continue
+        for sc in ("exact", "pq"):
+            out(f"[perf-guard] {tag} {sc}: recall "
+                f"{b[f'{sc}_recall_at_1']} -> {f[f'{sc}_recall_at_1']}, "
+                f"comps {b[f'{sc}_comps_per_query']} -> "
+                f"{f[f'{sc}_comps_per_query']}")
+            if f[f"{sc}_recall_at_1"] < b[f"{sc}_recall_at_1"] - max_recall_drop:
+                violations.append(
+                    f"{tag}: {sc}_recall_at_1 {b[f'{sc}_recall_at_1']} -> "
+                    f"{f[f'{sc}_recall_at_1']} "
+                    f"(allowed drop {max_recall_drop})"
+                )
+            if (f[f"{sc}_comps_per_query"]
+                    > b[f"{sc}_comps_per_query"] * max_comps_ratio):
+                violations.append(
+                    f"{tag}: {sc}_comps_per_query "
+                    f"{b[f'{sc}_comps_per_query']} -> "
+                    f"{f[f'{sc}_comps_per_query']} (allowed <= "
+                    f"{b[f'{sc}_comps_per_query'] * max_comps_ratio:.1f})"
+                )
     return violations
 
 

@@ -31,6 +31,50 @@ except ImportError:  # run as a plain script: python benchmarks/smoke.py
 # (no NN-Descent) so the sweep adds seconds, not minutes, to CI.
 STREAM_SWEEP = [(256, 3000, 16), (384, 2000, 32), (512, 1500, 24)]
 
+# Scorer sweep dimensions: (d, pq_M). Memory ratio of the scored base is
+# 4d/M — the curse-of-dimensionality axis the compressed traversal attacks.
+PQ_SWEEP = [(16, 8), (64, 8), (128, 16)]
+
+
+def _pq_sweep(key, n: int, q: int, ef: int, out) -> list[dict]:
+    """exact-vs-pq recall/comps/memory across d (DESIGN.md §8), same n as the
+    main world so the committed rows stay comparable with the perf guard."""
+    from repro.core import bruteforce as bf
+
+    rows = []
+    for i, (sd, M) in enumerate(PQ_SWEEP):
+        kw = jax.random.fold_in(key, 200 + i)
+        sbase = jax.random.uniform(kw, (n, sd))
+        squeries = jax.random.uniform(jax.random.fold_in(kw, 1), (q, sd))
+        g = bf.exact_knn_graph(sbase, 16)
+        gd = diversify.build_gd_graph(sbase, g)
+        s = Searcher.from_graph(sbase, gd, key=kw)
+        gt = bf.ground_truth(squeries, sbase, 1)
+        row = {"n": n, "d": sd, "pq_m": M,
+               "bytes_per_vec_exact": 4 * sd, "bytes_per_vec_pq": M,
+               "mem_ratio": round(4 * sd / M, 1)}
+        for scorer in ("exact", "pq"):
+            # random entries: comps then measure pure traversal work, so the
+            # exact-vs-pq comparison-count contrast is not drowned by the
+            # projection seeder's O(n*m/d) scan charge
+            spec = SearchSpec(ef=ef, k=1, entry="random", scorer=scorer,
+                              pq_m=M)
+            wall, res = timeit(lambda: s.search(squeries, spec), iters=3)
+            row[f"{scorer}_recall_at_1"] = round(
+                float((res.ids[:, 0] == gt[:, 0]).mean()), 4
+            )
+            row[f"{scorer}_comps_per_query"] = round(
+                float(res.n_comps.mean()), 1
+            )
+            row[f"{scorer}_wall_ms"] = round(wall * 1e3, 2)
+        rows.append(row)
+        out(f"smoke/pq d={sd} M={M} mem {row['mem_ratio']}x: "
+            f"exact recall={row['exact_recall_at_1']:.3f}/"
+            f"{row['exact_comps_per_query']:.0f} comps, "
+            f"pq recall={row['pq_recall_at_1']:.3f}/"
+            f"{row['pq_comps_per_query']:.0f} comps")
+    return rows
+
 
 def _stream_sweep(key, ef: int, tile_q: int, out) -> list[dict]:
     rows = []
@@ -97,8 +141,22 @@ def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
     )
     report["beam_core_wall_ms"] = round(wall * 1e3, 2)
 
+    # the compressed twin: same seeds, pq-scored traversal + exact rerank
+    # (code table trained off the timer; LUT build is part of serving cost)
+    pq_spec = SearchSpec(ef=ef, k=1, entry="random", scorer="pq")
+    searcher.pq_index(pq_spec)
+    wall, _ = timeit(
+        lambda: searcher.search(queries, pq_spec, entries=ent,
+                                entry_comps=extra),
+        iters=5,
+    )
+    report["pq_beam_wall_ms"] = round(wall * 1e3, 2)
+
     # streaming-vs-monolithic trajectory over (Q, n, d) — DESIGN.md §7
     report["streaming"] = _stream_sweep(key, ef, stream_tile, out)
+
+    # exact-vs-pq recall/comps/memory across d — DESIGN.md §8
+    report["pq_sweep"] = _pq_sweep(key, n, q, ef, out)
 
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)

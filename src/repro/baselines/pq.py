@@ -25,12 +25,17 @@ class PQIndex(NamedTuple):
 
 
 def _kmeans(key, x, k, iters=15):
-    """Lloyd's k-means, (n, d) -> (k, d). Empty clusters re-seeded randomly."""
+    """Lloyd's k-means, (n, d) -> (k, d). Empty clusters re-seeded randomly.
+
+    The re-seed key folds the iteration index: every retrain from the same
+    ``key`` walks the identical centroid trajectory, so PQ codebooks (and the
+    golden ``pq_*`` fixtures locked against them) are bit-reproducible.
+    """
     n = x.shape[0]
     init = jax.random.choice(key, n, shape=(k,), replace=False)
     cent = x[init]
 
-    def step(cent, _):
+    def step(cent, it):
         d = (
             jnp.sum(x * x, 1)[:, None]
             - 2 * x @ cent.T
@@ -39,10 +44,13 @@ def _kmeans(key, x, k, iters=15):
         assign = jnp.argmin(d, axis=1)
         sums = jax.ops.segment_sum(x, assign, num_segments=k)
         counts = jax.ops.segment_sum(jnp.ones((n,)), assign, num_segments=k)
-        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1), cent)
+        respawn = x[jax.random.randint(jax.random.fold_in(key, it), (k,), 0, n)]
+        new = jnp.where(
+            counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1), respawn
+        )
         return new, None
 
-    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    cent, _ = jax.lax.scan(step, cent, jnp.arange(iters))
     return cent
 
 
@@ -85,6 +93,37 @@ def build_pq(
     return PQIndex(codebooks=codebooks, codes=codes, M=M, K=K)
 
 
+@functools.partial(jax.jit, static_argnames=("metric",))
+def build_adc_luts(
+    queries: jax.Array, codebooks: jax.Array, metric: str = "l2"
+) -> jax.Array:
+    """Per-query ADC lookup tables: (Q, d) x (M, K, dsub) -> (Q, M, K).
+
+    ``sum_m lut[q, m, codes[i, m]]`` approximates the metric's distance from
+    query q to base vector i's reconstruction:
+
+    * l2  — exact on the reconstruction: sub-distances add.
+    * ip  — exact on the reconstruction: sub-inner-products add (negated).
+    * cos — the query is normalized and scored by inner product against the
+      un-normalized reconstruction (the reconstruction norm is not
+      sub-separable), shifted by 1/M per entry so the sum lands on the
+      familiar 1 - cos scale; ranking quality is what matters, the exact
+      rerank restores true cos distances.
+    """
+    M, K, dsub = codebooks.shape
+    Q = queries.shape[0]
+    q = queries[:, : M * dsub].astype(jnp.float32)
+    if metric == "cos":
+        q = q * jax.lax.rsqrt(jnp.maximum(jnp.sum(q * q, 1, keepdims=True), 1e-12))
+    sub_q = q.reshape(Q, M, dsub)
+    cross = jnp.einsum("qms,mks->qmk", sub_q, codebooks.astype(jnp.float32))
+    if metric in ("ip", "cos"):
+        return (1.0 / M if metric == "cos" else 0.0) - cross
+    qq = jnp.sum(sub_q * sub_q, axis=2)[:, :, None]           # (Q, M, 1)
+    cc = jnp.sum(codebooks * codebooks, axis=2)[None, :, :]   # (1, M, K)
+    return qq - 2.0 * cross + cc
+
+
 @functools.partial(jax.jit, static_argnames=("k", "rerank"))
 def pq_search(
     queries: jax.Array,
@@ -105,18 +144,15 @@ def pq_search(
     n = base.shape[0]
     M, K, dsub = index.codebooks.shape
 
-    def one(q):
-        sub_q = q[: M * dsub].reshape(M, dsub)
-        # (M, K) LUT of sub-distances
-        lut = jax.vmap(
-            lambda sq, cb: jnp.sum((cb - sq[None, :]) ** 2, axis=1)
-        )(sub_q, index.codebooks)
+    luts = build_adc_luts(queries, index.codebooks)  # (Q, M, K)
+
+    def one(q, lut):
         scores = ops.pq_adc(index.codes, lut)  # (n,)
         _, cand = topk_smallest(scores, rerank)
         exact = ops.gather_distance(q[None, :], cand[None, :], base)[0]
         dd, ii = topk_smallest(exact, k)
         return dd, cand[ii]
 
-    dists, ids = jax.vmap(one)(queries)
+    dists, ids = jax.vmap(one)(queries, luts)
     comps = jnp.full((Q,), int(n * M / d) + rerank, jnp.int32)
     return dists, ids, comps

@@ -22,6 +22,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .scorers import get_scorer
 from .topk import INVALID, topk_smallest
 
 INF = jnp.float32(jnp.inf)
@@ -62,6 +63,17 @@ def dedup_rows(ids: jax.Array) -> jax.Array:
     return jnp.where(dup, INVALID, srt)
 
 
+def _is_visited(visited: jax.Array, ids: jax.Array) -> jax.Array:
+    """Read bits for ids (Q, R) from the bit-packed bitmap; ids < 0 read
+    False (padding is never 'visited' — it is dropped by validity masks)."""
+    Q, W = visited.shape
+    safe = jnp.maximum(ids, 0)
+    q = jnp.broadcast_to(jnp.arange(Q)[:, None], ids.shape)
+    words = visited[q, jnp.minimum(safe >> 5, W - 1)]
+    seen = (words >> (safe & 31).astype(jnp.uint32)) & 1 > 0
+    return seen & (ids >= 0)
+
+
 def _mark_visited(visited: jax.Array, ids: jax.Array) -> jax.Array:
     """Set bits for ids (Q, R); ids < 0 are ignored. Rows must be dup-free
     among unvisited entries (guaranteed: adjacency rows are deduped)."""
@@ -74,18 +86,21 @@ def _mark_visited(visited: jax.Array, ids: jax.Array) -> jax.Array:
 
 
 def _init_state(queries, base, neighbors, entry_ids, ef, metric,
-                r_tile: int = 0) -> _State:
-    from repro.kernels import ops
-
+                r_tile: int = 0, scorer: str = "exact",
+                scorer_state=None) -> _State:
     Q = queries.shape[0]
     n = base.shape[0]
     W = (n + 31) // 32
     E = entry_ids.shape[1]
 
-    d0 = ops.gather_distance(queries, entry_ids, base, metric=metric,
-                             r_tile=r_tile)  # (Q, E)
-    visited = jnp.zeros((Q, W), jnp.uint32)
-    visited = _mark_visited(visited, entry_ids)
+    # seeds are scored in the scorer's own currency (ADC scores under pq):
+    # the candidate list must stay comparable across the whole traversal.
+    # The zero bitmap makes the masked call a plain scored gather.
+    d0, entry_ids = get_scorer(scorer).score(
+        scorer_state, queries, base, entry_ids,
+        jnp.zeros((Q, W), jnp.uint32), metric=metric, r_tile=r_tile,
+    )  # (Q, E)
+    visited = _mark_visited(jnp.zeros((Q, W), jnp.uint32), entry_ids)
 
     pad = ef - E
     cand_d = jnp.concatenate([d0, jnp.full((Q, pad), INF)], axis=1)
@@ -108,9 +123,8 @@ def _init_state(queries, base, neighbors, entry_ids, ef, metric,
 
 
 def _step(state: _State, queries, base, neighbors, metric,
-          expand_width: int = 1, r_tile: int = 0) -> _State:
-    from repro.kernels import ops
-
+          expand_width: int = 1, r_tile: int = 0, scorer: str = "exact",
+          scorer_state=None) -> _State:
     Q, ef = state.cand_ids.shape
     R = neighbors.shape[1]
 
@@ -146,11 +160,13 @@ def _step(state: _State, queries, base, neighbors, metric,
     if W > 1:
         nbrs = dedup_rows(nbrs)
 
-    # 3. score + mask + account + mark visited. The visited-bitmap test and
-    # the validity mask are fused into the kernel epilogue: the kernel
-    # returns (+inf, INVALID) for padding/visited entries directly.
-    nd, nbrs = ops.gather_distance_masked(
-        queries, nbrs, base, state.visited, metric=metric, r_tile=r_tile
+    # 3. score + mask + account + mark visited, through the scorer axis
+    # (DESIGN.md §8). The visited-bitmap test and the validity mask are fused
+    # into the kernel epilogue either way: the kernel returns (+inf, INVALID)
+    # for padding/visited entries directly.
+    nd, nbrs = get_scorer(scorer).score(
+        scorer_state, queries, base, nbrs, state.visited,
+        metric=metric, r_tile=r_tile,
     )                                                                # (Q, W*R)
     n_comps = state.n_comps + (nbrs >= 0).sum(axis=1, dtype=jnp.int32)
     visited = _mark_visited(state.visited, nbrs)
@@ -182,10 +198,41 @@ def _step(state: _State, queries, base, neighbors, metric,
     )
 
 
+def _finalize(state: _State, queries, base, k, metric, r_tile,
+              scorer: str, scorer_state, rerank: int) -> SearchResult:
+    """Loop epilogue. Exact scorer: slice the candidate list. Compressed
+    scorers: exact-rerank the top ``rerank`` survivors (0 = all ef) and
+    convert the scored-id count into the paper's comparison currency —
+    M/d per ADC score plus one full comparison per reranked candidate."""
+    sc = get_scorer(scorer)
+    if not sc.needs_rerank:
+        return SearchResult(
+            ids=state.cand_ids[:, :k],
+            dists=state.cand_dists[:, :k],
+            n_comps=state.n_comps,
+            n_steps=state.step,
+        )
+    from repro.kernels import ops
+
+    ef = state.cand_ids.shape[1]
+    r = ef if rerank <= 0 else max(k, min(rerank, ef))
+    cand = state.cand_ids[:, :r]                # ascending by ADC score
+    exact = ops.gather_distance(queries, cand, base, metric=metric,
+                                r_tile=r_tile)  # INVALID -> +inf
+    dd, sel = topk_smallest(exact, k)
+    n_comps = sc.scale_comps(scorer_state, state.n_comps, base.shape[1])
+    return SearchResult(
+        ids=jnp.take_along_axis(cand, sel, axis=1),
+        dists=dd,
+        n_comps=n_comps + (cand >= 0).sum(axis=1, dtype=jnp.int32),
+        n_steps=state.step,
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("ef", "k", "metric", "max_steps", "expand_width",
-                     "r_tile"),
+                     "r_tile", "scorer", "rerank"),
 )
 def beam_search(
     queries: jax.Array,
@@ -198,35 +245,37 @@ def beam_search(
     max_steps: int | None = None,
     expand_width: int = 1,
     r_tile: int = 0,
+    scorer: str = "exact",
+    scorer_state=None,
+    rerank: int = 0,
 ) -> SearchResult:
     """Best-first graph search. entry_ids (Q, E) seeds (E <= ef).
     expand_width > 1 expands several vertices per step (beyond-paper);
-    r_tile sets the gather kernel's neighbor tile (0 = kernel default)."""
+    r_tile sets the gather kernel's neighbor tile (0 = kernel default);
+    scorer picks the per-hop distance implementation (``core.scorers``) with
+    ``scorer_state`` its per-batch operand pytree, and compressed scorers
+    finish with an exact rerank of the ``rerank`` best survivors (0 = ef)."""
     if max_steps is None:
         max_steps = default_max_steps(ef, expand_width)
     state = _init_state(queries, base, neighbors, entry_ids, ef, metric,
-                        r_tile)
+                        r_tile, scorer, scorer_state)
 
     def cond(s: _State):
         return (~s.done.all()) & (s.step < max_steps)
 
     def body(s: _State):
         return _step(s, queries, base, neighbors, metric, expand_width,
-                     r_tile)
+                     r_tile, scorer, scorer_state)
 
     state = jax.lax.while_loop(cond, body, state)
-    return SearchResult(
-        ids=state.cand_ids[:, :k],
-        dists=state.cand_dists[:, :k],
-        n_comps=state.n_comps,
-        n_steps=state.step,
-    )
+    return _finalize(state, queries, base, k, metric, r_tile, scorer,
+                     scorer_state, rerank)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("ef", "k", "metric", "max_steps", "expand_width",
-                     "r_tile"),
+                     "r_tile", "scorer", "rerank"),
 )
 def search_with_trace(
     queries: jax.Array,
@@ -239,6 +288,9 @@ def search_with_trace(
     max_steps: int | None = None,
     expand_width: int = 1,
     r_tile: int = 0,
+    scorer: str = "exact",
+    scorer_state=None,
+    rerank: int = 0,
 ) -> tuple[SearchResult, jax.Array, jax.Array]:
     """Fixed-step variant recording the Fig. 6 statistics.
 
@@ -248,24 +300,23 @@ def search_with_trace(
 
     Returns (result, trace_dist (steps, Q), trace_comps (steps, Q)) where
     trace_dist[t, q] is the best distance reached after step t and
-    trace_comps[t, q] the cumulative distance computations.
+    trace_comps[t, q] the cumulative distance computations. Under a
+    compressed scorer the trace is in the scorer's own currency (ADC scores
+    and raw scored-id counts); only the final result is reranked/rescaled.
     """
     if max_steps is None:
         max_steps = default_max_steps(ef, expand_width)
     state = _init_state(queries, base, neighbors, entry_ids, ef, metric,
-                        r_tile)
+                        r_tile, scorer, scorer_state)
 
     def body(s: _State, _):
-        s2 = _step(s, queries, base, neighbors, metric, expand_width, r_tile)
+        s2 = _step(s, queries, base, neighbors, metric, expand_width, r_tile,
+                   scorer, scorer_state)
         return s2, (s2.cand_dists[:, 0], s2.n_comps)
 
     state, (td, tc) = jax.lax.scan(body, state, None, length=max_steps)
-    res = SearchResult(
-        ids=state.cand_ids[:, :k],
-        dists=state.cand_dists[:, :k],
-        n_comps=state.n_comps,
-        n_steps=state.step,
-    )
+    res = _finalize(state, queries, base, k, metric, r_tile, scorer,
+                    scorer_state, rerank)
     return res, td, tc
 
 

@@ -39,6 +39,7 @@ from .beam_search import (
     search_with_trace,
 )
 from .graph_index import HnswIndex, KnnGraph
+from .scorers import SCORERS, get_scorer, register_scorer  # noqa: F401
 from .topk import INVALID, topk_smallest
 
 
@@ -59,6 +60,12 @@ class SearchSpec(NamedTuple):
     proj_dim: int = 8           # sketch width for projection/lsh seeding
     lsh_probes: int = 64        # rerank candidates for the lsh seeder
     r_tile: int = 0             # gather-kernel neighbor tile (0 = default)
+    scorer: str = "exact"       # key into SCORERS (per-hop distance impl)
+    rerank: int = 0             # exact-reranked survivors under compressed
+                                # scorers (0 = all ef); ignored for exact
+    pq_m: int = 8               # PQ sub-vectors (bytes/vector of the codes)
+    pq_k: int = 256             # PQ codewords per sub-quantizer
+    pq_iters: int = 15          # k-means iterations at PQ train time
 
     @property
     def num_seeds(self) -> int:
@@ -234,13 +241,19 @@ class Searcher:
     """
 
     def __init__(self, base, neighbors, *, hierarchy: HnswIndex | None = None,
-                 metric: str = "l2", key: jax.Array | None = None):
+                 metric: str = "l2", key: jax.Array | None = None, pq=None):
         self.base = base
         self.neighbors = neighbors
         self.hierarchy = hierarchy
         self.metric = metric
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self._aux: dict[tuple, object] = {}
+        # PQ code tables backing the "pq" scorer: ``pq`` is an externally
+        # trained index attached at engine build time (served for any spec
+        # matching its (M, K) — train iterations are its trainer's business);
+        # lazily trained tables are cached per (M, K, iters).
+        self._pq_attached = pq
+        self._pq: dict[tuple, object] = {}
 
     # -- constructors ---------------------------------------------------------
 
@@ -258,9 +271,12 @@ class Searcher:
     @classmethod
     def build(cls, base, *, metric: str = "l2", key: jax.Array | None = None,
               graph_k: int = 20, with_hierarchy: bool = False,
+              with_pq: bool = False, pq_m: int = 8, pq_k: int = 256,
               verbose: bool = False) -> "Searcher":
         """Build the paper's hybrid index (NN-Descent + GD diversification),
-        optionally with HNSW upper layers for the ``hierarchy`` seeder."""
+        optionally with HNSW upper layers for the ``hierarchy`` seeder and/or
+        a PQ code table trained up front for the ``pq`` scorer (otherwise it
+        is trained lazily on first use, from the same derived key)."""
         from .diversify import build_gd_graph
         from .nndescent import NNDescentConfig, build_knn_graph
 
@@ -276,9 +292,13 @@ class Searcher:
                 HnswConfig(M=max(8, graph_k // 2), knn_k=graph_k),
                 metric=metric, key=key, bottom_graph=g, verbose=verbose,
             )
-            return cls.from_hnsw(base, idx, metric=metric, key=key)
-        gd = build_gd_graph(base, g, metric=metric)
-        return cls.from_graph(base, gd, metric=metric, key=key)
+            searcher = cls.from_hnsw(base, idx, metric=metric, key=key)
+        else:
+            gd = build_gd_graph(base, g, metric=metric)
+            searcher = cls.from_graph(base, gd, metric=metric, key=key)
+        if with_pq:
+            searcher.pq_index(SearchSpec(pq_m=pq_m, pq_k=pq_k))
+        return searcher
 
     # -- seeding --------------------------------------------------------------
 
@@ -320,6 +340,40 @@ class Searcher:
             key = self.key
         return strat.seed(aux, queries, self.base, spec, key)
 
+    # -- scorers --------------------------------------------------------------
+
+    def pq_index(self, spec: SearchSpec):
+        """The (spec.pq_m, spec.pq_k) PQ code table, trained on first use
+        from a key derived deterministically from the searcher's key (so a
+        rebuilt engine reproduces the same codebooks bit-for-bit)."""
+        from repro.baselines.pq import build_pq
+
+        a = self._pq_attached
+        if a is not None and (a.M, a.K) == (spec.pq_m, spec.pq_k):
+            return a
+        cache_key = (spec.pq_m, spec.pq_k, spec.pq_iters)
+        if cache_key not in self._pq:
+            kp = jax.random.fold_in(
+                self.key, zlib.crc32(b"scorer:pq") & 0x7FFFFFFF
+            )
+            self._pq[cache_key] = build_pq(
+                self.base, M=spec.pq_m, K=spec.pq_k, iters=spec.pq_iters,
+                key=kp,
+            )
+        return self._pq[cache_key]
+
+    def scorer_state(self, queries, spec: SearchSpec):
+        """Per-batch operand pytree for ``spec.scorer`` (None for exact):
+        the pq scorer pairs the code table with per-query ADC LUTs."""
+        get_scorer(spec.scorer)  # unknown names fail loudly, pre-trace
+        if spec.scorer != "pq":
+            return None
+        from repro.baselines.pq import build_adc_luts
+
+        idx = self.pq_index(spec)
+        luts = build_adc_luts(queries, idx.codebooks, spec.metric)
+        return (idx.codes, luts)
+
     # -- search ---------------------------------------------------------------
 
     def search(self, queries, spec: SearchSpec, key: jax.Array | None = None,
@@ -336,7 +390,9 @@ class Searcher:
             queries, self.base, self.neighbors, entries,
             ef=spec.ef, k=spec.k, metric=spec.metric,
             max_steps=spec.max_steps, expand_width=spec.expand_width,
-            r_tile=spec.r_tile,
+            r_tile=spec.r_tile, scorer=spec.scorer,
+            scorer_state=self.scorer_state(queries, spec),
+            rerank=spec.rerank,
         )
         if entry_comps is not None:
             res = res._replace(n_comps=res.n_comps + entry_comps)
@@ -361,6 +417,8 @@ class Searcher:
         if key is None:
             key = self.key
         self.prepare(spec)  # strategy state built once, outside the loop
+        if spec.scorer == "pq":
+            self.pq_index(spec)  # code table trained once, outside the loop
         ids, dists, comps = [], [], []
         n_steps = jnp.int32(0)
         for i, lo in enumerate(range(0, Q, tile_q)):
@@ -396,6 +454,9 @@ class Searcher:
             queries, self.base, self.neighbors, ent,
             ef=spec.ef, k=spec.k, metric=spec.metric, max_steps=max_steps,
             expand_width=spec.expand_width, r_tile=spec.r_tile,
+            scorer=spec.scorer,
+            scorer_state=self.scorer_state(queries, spec),
+            rerank=spec.rerank,
         )
         return res._replace(n_comps=res.n_comps + extra), td, tc + extra[None, :]
 
@@ -423,15 +484,20 @@ def shard_entries(key: jax.Array, n_shards: int, Q: int, per: int,
 
 
 def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
-                 axis: str, per: int):
+                 axis: str, per: int, scorer_state=None):
     """Per-shard body for ``shard_map``: the SAME beam core as single-host
     search, plus the all-gather merge. ``live`` False drops a failed or
-    straggling shard's contribution (degrades recall, never the query)."""
+    straggling shard's contribution (degrades recall, never the query).
+    ``scorer_state`` is this shard's operand pytree for ``spec.scorer``
+    (e.g. its local PQ codes + the batch LUTs); the rerank inside
+    ``beam_search`` runs against the local base, so merged distances are
+    exact regardless of scorer."""
     res = beam_search(
         queries, base, neighbors, entries,
         ef=spec.ef, k=spec.k, metric=spec.metric,
         max_steps=spec.max_steps, expand_width=spec.expand_width,
-        r_tile=spec.r_tile,
+        r_tile=spec.r_tile, scorer=spec.scorer, scorer_state=scorer_state,
+        rerank=spec.rerank,
     )
     sid = jax.lax.axis_index(axis)
     gids = globalize_ids(res.ids, sid, per)
@@ -449,9 +515,10 @@ def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
 
 
 def emulated_shard_search(queries, base_shards, nbr_shards, entries, live,
-                          spec: SearchSpec):
+                          spec: SearchSpec, scorer_states=None):
     """Host-side loop with identical semantics to ``shard_search`` for runs
     where logical shards exceed physical devices (CI, laptops).
+    ``scorer_states`` (optional) is a per-shard list of scorer operands.
 
     Returns (dists (Q, k), global ids (Q, k))."""
     per = base_shards.shape[1]
@@ -461,7 +528,9 @@ def emulated_shard_search(queries, base_shards, nbr_shards, entries, live,
             queries, base_shards[s], nbr_shards[s], entries[s],
             ef=spec.ef, k=spec.k, metric=spec.metric,
             max_steps=spec.max_steps, expand_width=spec.expand_width,
-            r_tile=spec.r_tile,
+            r_tile=spec.r_tile, scorer=spec.scorer,
+            scorer_state=None if scorer_states is None else scorer_states[s],
+            rerank=spec.rerank,
         )
         all_d.append(jnp.where(live[s], res.dists, jnp.inf))
         all_i.append(jnp.where(live[s], globalize_ids(res.ids, s, per), INVALID))

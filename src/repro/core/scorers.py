@@ -1,0 +1,102 @@
+"""Pluggable scorer axis for the beam core (DESIGN.md §8).
+
+The paper's closing finding is that per-hop cost is dominated by exact
+distance computation — linear in d no matter how clever the graph. The
+scorer axis attacks that term: ``beam_search._step`` dispatches every
+neighbor-expansion scoring through one of these objects instead of calling
+the exact gather directly, so the traversal can run on compressed
+representations while the engine reranks the surviving candidates exactly.
+
+Orthogonal to the entry-strategy axis: any seeder composes with any scorer.
+
+* ``exact`` — the fused float gather (``ops.gather_distance_masked``);
+  4d bytes fetched and d MACs per scored vertex. No rerank needed.
+* ``pq``    — PQ asymmetric distances (``ops.gather_adc_masked``): M bytes
+  fetched per vertex, scored against a per-query (M, K) LUT built once per
+  batch. Traversal distances are approximations of the metric on code
+  reconstructions; ``beam_search`` finishes with an exact rerank of the top
+  candidates, and comps are charged at M/d per ADC score plus one full
+  comparison per reranked candidate (the paper's currency, matching the
+  linear-scan PQ baseline's accounting).
+
+A scorer is (name, needs_rerank, score, scale_comps); ``state`` is the
+per-batch pytree the engine built (``Searcher.scorer_state``) and travels
+through jit/shard_map as an operand while ``name`` is the static cache key.
+"""
+from __future__ import annotations
+
+from typing import Protocol
+
+
+class Scorer(Protocol):
+    name: str
+    needs_rerank: bool
+
+    def score(self, state, queries, base, ids, visited, *, metric: str,
+              r_tile: int):
+        """(Q, R) ids -> (dists (Q, R), masked ids (Q, R)) with the
+        (+inf, INVALID) contract for padding/visited entries."""
+        ...
+
+    def scale_comps(self, state, n_comps, d: int):
+        """Convert the loop's scored-id count into the paper's full-d
+        comparison currency."""
+        ...
+
+
+SCORERS: dict[str, Scorer] = {}
+
+
+def get_scorer(name: str) -> Scorer:
+    if name not in SCORERS:
+        raise ValueError(
+            f"unknown scorer {name!r}; registered: {sorted(SCORERS)}"
+        )
+    return SCORERS[name]
+
+
+def register_scorer(scorer) -> Scorer:
+    """Register a scorer under ``scorer.name`` (class or instance) — the
+    beam core's second extension point, mirroring the entry-strategy
+    registry."""
+    inst = scorer() if isinstance(scorer, type) else scorer
+    SCORERS[inst.name] = inst
+    return scorer
+
+
+@register_scorer
+class _ExactScorer:
+    name = "exact"
+    needs_rerank = False
+
+    def score(self, state, queries, base, ids, visited, *, metric, r_tile):
+        from repro.kernels import ops
+
+        return ops.gather_distance_masked(
+            queries, ids, base, visited, metric=metric, r_tile=r_tile
+        )
+
+    def scale_comps(self, state, n_comps, d):
+        return n_comps
+
+
+@register_scorer
+class _PQScorer:
+    name = "pq"
+    needs_rerank = True
+
+    def score(self, state, queries, base, ids, visited, *, metric, r_tile):
+        from repro.kernels import ops
+
+        if state is None:
+            raise ValueError(
+                "scorer='pq' needs a (codes, luts) scorer_state — build it "
+                "via Searcher.scorer_state / build_adc_luts (or pass "
+                "scorer_states to emulated_shard_search)"
+            )
+        codes, luts = state
+        return ops.gather_adc_masked(ids, codes, luts, visited, r_tile=r_tile)
+
+    def scale_comps(self, state, n_comps, d):
+        codes, _ = state
+        return (n_comps * codes.shape[1]) // d

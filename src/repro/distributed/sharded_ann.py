@@ -67,10 +67,30 @@ def shard_graph(base, neighbors, n_shards: int, *, rebuild: bool = True,
     return jnp.stack(bs), jnp.stack(ns)
 
 
+def shard_pq(base_shards: jax.Array, M: int = 8, K: int = 256,
+             iters: int = 15, key=None):
+    """Per-shard PQ for the compressed scorer: each shard trains its OWN
+    codebooks on its local rows (mirroring ``shard_graph``'s per-shard
+    builds — a global codebook would need a training all-gather and would
+    drift as shards rebalance). Returns stacked
+    (codebooks (P, M, K, dsub), codes (P, n/P, M))."""
+    from repro.baselines.pq import build_pq
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    cbs, codes = [], []
+    for s in range(base_shards.shape[0]):
+        idx = build_pq(base_shards[s], M=M, K=K, iters=iters,
+                       key=jax.random.fold_in(key, s))
+        cbs.append(idx.codebooks)
+        codes.append(idx.codes)
+    return jnp.stack(cbs), jnp.stack(codes)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("ef", "k", "metric", "mesh", "axis", "expand_width",
-                     "r_tile"),
+                     "r_tile", "scorer", "rerank"),
 )
 def distributed_search(
     queries: jax.Array,       # (Q, d) replicated
@@ -86,12 +106,45 @@ def distributed_search(
     axis: str = "shards",
     expand_width: int = 1,
     r_tile: int = 0,
+    scorer: str = "exact",
+    rerank: int = 0,
+    pq_codebooks: jax.Array | None = None,  # (P, M, K, dsub), scorer="pq"
+    pq_codes: jax.Array | None = None,      # (P, n/P, M) uint8, scorer="pq"
 ):
     """Shard-and-merge search: each shard runs the SAME SearchEngine beam core
-    (``engine.shard_search``); this wrapper only binds the mesh layout."""
+    (``engine.shard_search``); this wrapper only binds the mesh layout.
+
+    scorer="pq" traverses each shard on its local code table (``shard_pq``):
+    the ADC LUTs are built inside the shard body from the replicated queries
+    and the shard's own codebooks, and the in-shard exact rerank restores
+    exact distances before the cross-shard merge — so the merge compares the
+    same currency as the exact path."""
     per = base_shards.shape[1]
     spec = SearchSpec(ef=ef, k=k, metric=metric, expand_width=expand_width,
-                      r_tile=r_tile)
+                      r_tile=r_tile, scorer=scorer, rerank=rerank)
+
+    if scorer == "pq":
+        if pq_codebooks is None or pq_codes is None:
+            raise ValueError("scorer='pq' needs pq_codebooks/pq_codes "
+                             "(see shard_pq)")
+        from repro.baselines.pq import build_adc_luts
+
+        def local(qs, b, nb, ent, live, cb, cd):
+            luts = build_adc_luts(qs, cb[0], metric)
+            return engine.shard_search(
+                qs, b[0], nb[0], ent[0], live[0], spec=spec, axis=axis,
+                per=per, scorer_state=(cd[0], luts),
+            )
+
+        return shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis),
+                      P(axis)),
+            out_specs=(P(), P(), P()),
+            check_vma=False,
+        )(queries, base_shards, nbr_shards, entry_ids, live_mask,
+          pq_codebooks, pq_codes)
 
     def local(qs, b, nb, ent, live):
         return engine.shard_search(

@@ -1,0 +1,128 @@
+"""Fused gather + ADC Pallas kernel — the compressed beam-search inner loop.
+
+The compressed twin of ``gather_distance_masked`` (DESIGN.md §8): instead of
+fetching (R_tile, d) float rows and contracting against the query, fetch
+(R_tile, M) uint8 PQ code rows from the HBM-resident (n, M) code table and
+score them against the query's VMEM-resident (M, K) ADC lookup table —
+M bytes of traffic per scored vertex instead of 4d.
+
+Layout mirrors the exact kernel: grid = (Q, R/R_tile), the code table stays
+in HBM (``pl.ANY``), each grid step issues R_tile row DMAs into a
+double-buffered (2, R_tile, M) VMEM scratch, and the per-query LUT's
+BlockSpec revisits the same (1, M, K) block across the inner tile loop. TPU
+has no fast per-lane gather, so the LUT lookup is recast as one-hot matmuls
+(as in ``pq_adc``): each code column m becomes onehot(codes[:, m]) @ lut[m],
+an (R_tile, K) x (K,) MXU contraction, K x M MACs per row vs d for exact.
+
+The epilogue is identical to the exact kernel's: padding ids (< 0) and
+bitmap-visited ids come back as (+inf, INVALID), so ``beam_search._step``
+consumes (dists, masked ids) directly regardless of the scorer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .gather_distance import (
+    DEFAULT_R_TILE,
+    _pad_ids,
+    fetch_rows_double_buffered,
+    mask_epilogue,
+)
+
+
+def _adc_tile_scores(tile, lut) -> jax.Array:
+    """(R_tile, M) int32 codes x (M, K) f32 LUT -> (1, R_tile) ADC scores."""
+    M, K = lut.shape
+    acc = jnp.zeros((tile.shape[0],), jnp.float32)
+    for m in range(M):  # static unroll; M is 8/16
+        onehot = (tile[:, m][:, None] == jnp.arange(K)[None, :]).astype(
+            jnp.float32
+        )
+        acc = acc + jax.lax.dot_general(
+            onehot, lut[m], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    return acc[None, :]
+
+
+def _ga_tiled_kernel(
+    # scalar prefetch
+    ids_sref,
+    # inputs
+    idv_ref,
+    lut_ref,
+    vis_ref,
+    codes_ref,
+    # outputs
+    d_ref,
+    oid_ref,
+    # scratch
+    rows,
+    sems,
+    *,
+    r_tile: int,
+):
+    slot = fetch_rows_double_buffered(ids_sref, codes_ref, rows, sems, r_tile)
+    lut = lut_ref[0].astype(jnp.float32)                   # (M, K)
+    tile = rows[pl.ds(slot, 1)][0].astype(jnp.int32)       # (R_tile, M)
+    d = _adc_tile_scores(tile, lut)                        # (1, R_tile)
+    mask_epilogue(idv_ref[...], d, d_ref, oid_ref, vis_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("r_tile", "interpret"))
+def gather_adc_masked(
+    ids: jax.Array,
+    codes: jax.Array,
+    luts: jax.Array,
+    visited: jax.Array,
+    r_tile: int = DEFAULT_R_TILE,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused code gather + ADC scoring + visited/validity masking.
+
+    ids (Q, R) into codes (n, M) uint8, per-query LUTs (Q, M, K), visited the
+    beam's (Q, ceil(n/32)) uint32 bitmap. Returns (adc dists (Q, R), masked
+    ids (Q, R)): padding (< 0) or already-visited entries come back as
+    (+inf, INVALID). Metric-agnostic — the LUT carries the metric
+    (``baselines.pq.build_adc_luts``).
+    """
+    Q, R = ids.shape
+    M = codes.shape[1]
+    K = luts.shape[2]
+    rt = max(1, min(r_tile, R))
+    ids_p, Rp = _pad_ids(ids, rt)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, Rp // rt),
+        in_specs=[
+            pl.BlockSpec((1, rt), lambda q, t, ids: (q, t)),   # ids tile
+            pl.BlockSpec((1, M, K), lambda q, t, ids: (q, 0, 0)),  # query LUT
+            pl.BlockSpec(
+                (1, visited.shape[1]), lambda q, t, ids: (q, 0)
+            ),                                                 # visited row
+            pl.BlockSpec(memory_space=pltpu.ANY),              # codes, HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rt), lambda q, t, ids: (q, t)),
+            pl.BlockSpec((1, rt), lambda q, t, ids: (q, t)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, rt, M), codes.dtype),
+            pltpu.SemaphoreType.DMA((2, rt)),
+        ],
+    )
+    dists, oids = pl.pallas_call(
+        functools.partial(_ga_tiled_kernel, r_tile=rt),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, Rp), jnp.float32),
+            jax.ShapeDtypeStruct((Q, Rp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids_p, ids_p, luts, visited, codes)
+    return dists[:, :R], oids[:, :R]

@@ -54,6 +54,63 @@ def _tile_distances(q, rows, metric: str) -> jax.Array:
     return jnp.maximum(qq - 2.0 * cross + rr, 0.0)
 
 
+def fetch_rows_double_buffered(ids_sref, src_ref, rows, sems, r_tile: int):
+    """Scattered-row double buffering shared by the gather kernels (exact and
+    ADC): on grid step (q, t), prefetch the NEXT tile's ``r_tile`` row DMAs
+    from HBM ``src_ref`` into the alternate VMEM buffer, drain this tile's,
+    and return the scratch slot holding its rows."""
+    qi, t = pl.program_id(0), pl.program_id(1)
+    nt = pl.num_programs(1)
+    step = qi * nt + t
+    last = pl.num_programs(0) * nt - 1
+
+    def row_dma(slot, j, flat_step):
+        qq, tt = flat_step // nt, flat_step % nt
+        rid = jnp.maximum(ids_sref[qq, tt * r_tile + j], 0)
+        return pltpu.make_async_copy(
+            src_ref.at[pl.ds(rid, 1), :],
+            rows.at[slot, pl.ds(j, 1), :],
+            sems.at[slot, j],
+        )
+
+    def start_fetch(slot, flat_step):
+        for j in range(r_tile):
+            row_dma(slot, j, flat_step).start()
+
+    # tile 0 warms up; every step prefetches the next tile into the
+    # alternate buffer before draining its own.
+    @pl.when(step == 0)
+    def _():
+        start_fetch(0, 0)
+
+    @pl.when(step < last)
+    def _():
+        start_fetch((step + 1) % 2, step + 1)
+
+    slot = step % 2
+    for j in range(r_tile):
+        row_dma(slot, j, step).wait()
+    return slot
+
+
+def mask_epilogue(ids_t, d, d_ref, oid_ref=None, vis_ref=None):
+    """Shared kernel epilogue: drop padding ids (< 0) — and, when ``vis_ref``
+    holds the query's bit-packed visited row, bitmap-visited ids — writing
+    (+inf, INVALID) to the outputs so callers never re-mask in XLA."""
+    drop = ids_t < 0
+    if vis_ref is not None:
+        safe = jnp.maximum(ids_t, 0)
+        W = vis_ref.shape[1]
+        words = jnp.take_along_axis(
+            vis_ref[...], jnp.minimum(safe >> 5, W - 1), axis=1
+        )
+        seen = (words >> (safe & 31).astype(jnp.uint32)) & 1 > 0
+        drop = drop | seen
+    if oid_ref is not None:
+        oid_ref[...] = jnp.where(drop, -1, ids_t)
+    d_ref[...] = jnp.where(drop, jnp.inf, d)
+
+
 def _gd_tiled_kernel(
     # scalar prefetch
     ids_sref,
@@ -68,56 +125,14 @@ def _gd_tiled_kernel(
     if masked:
         vis_ref, base_ref, d_ref, oid_ref, rows, sems = rest
     else:
+        vis_ref = oid_ref = None
         base_ref, d_ref, rows, sems = rest
 
-    qi, t = pl.program_id(0), pl.program_id(1)
-    nt = pl.num_programs(1)
-    step = qi * nt + t
-    last = pl.num_programs(0) * nt - 1
-
-    def row_dma(slot, j, flat_step):
-        qq, tt = flat_step // nt, flat_step % nt
-        rid = jnp.maximum(ids_sref[qq, tt * r_tile + j], 0)
-        return pltpu.make_async_copy(
-            base_ref.at[pl.ds(rid, 1), :],
-            rows.at[slot, pl.ds(j, 1), :],
-            sems.at[slot, j],
-        )
-
-    def start_fetch(slot, flat_step):
-        for j in range(r_tile):
-            row_dma(slot, j, flat_step).start()
-
-    # Double buffering: tile 0 warms up; every step prefetches the next tile
-    # into the alternate buffer before draining its own.
-    @pl.when(step == 0)
-    def _():
-        start_fetch(0, 0)
-
-    @pl.when(step < last)
-    def _():
-        start_fetch((step + 1) % 2, step + 1)
-
-    slot = step % 2
-    for j in range(r_tile):
-        row_dma(slot, j, step).wait()
-
+    slot = fetch_rows_double_buffered(ids_sref, base_ref, rows, sems, r_tile)
     q = q_ref[...].astype(jnp.float32)                    # (1, d)
     tile = rows[pl.ds(slot, 1)][0].astype(jnp.float32)    # (R_tile, d)
     d = _tile_distances(q, tile, metric)                  # (1, R_tile)
-
-    ids_t = idv_ref[...]                                  # (1, R_tile)
-    drop = ids_t < 0
-    if masked:
-        safe = jnp.maximum(ids_t, 0)
-        W = vis_ref.shape[1]
-        words = jnp.take_along_axis(
-            vis_ref[...], jnp.minimum(safe >> 5, W - 1), axis=1
-        )
-        seen = (words >> (safe & 31).astype(jnp.uint32)) & 1 > 0
-        drop = drop | seen
-        oid_ref[...] = jnp.where(drop, -1, ids_t)
-    d_ref[...] = jnp.where(drop, jnp.inf, d)
+    mask_epilogue(idv_ref[...], d, d_ref, oid_ref, vis_ref)
 
 
 def _pad_ids(ids: jax.Array, r_tile: int) -> tuple[jax.Array, int]:

@@ -20,6 +20,7 @@ import jax
 from . import ref
 from .distance_matrix import distance_matrix as _dm_pallas
 from .gather_distance import DEFAULT_R_TILE
+from .gather_adc import gather_adc_masked as _gam_pallas
 from .gather_distance import gather_distance as _gd_pallas
 from .gather_distance import gather_distance_masked as _gdm_pallas
 from .pq_adc import pq_adc as _adc_pallas
@@ -84,6 +85,23 @@ def gather_distance_masked(queries, ids, base, visited, metric: str = "l2",
                                               metric)
     return _gdm_pallas(
         queries, ids, base, visited, metric=metric,
+        r_tile=(r_tile or DEFAULT_R_TILE), interpret=(mode == "interpret"),
+    )
+
+
+def gather_adc_masked(ids, codes, luts, visited, r_tile: int = 0):
+    """Fused code gather + ADC + visited/validity mask -> (dists, masked ids).
+
+    The compressed scorer's per-step epilogue (DESIGN.md §8): same
+    (+inf, -1) contract as ``gather_distance_masked``, but scored against the
+    (n, M) uint8 code table with per-query (M, K) LUTs instead of the float
+    base — the LUT carries the metric, so there is no metric argument.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return ref.gather_adc_masked_ref(ids, codes, luts, visited)
+    return _gam_pallas(
+        ids, codes, luts, visited,
         r_tile=(r_tile or DEFAULT_R_TILE), interpret=(mode == "interpret"),
     )
 

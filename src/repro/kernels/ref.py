@@ -92,6 +92,28 @@ def gather_distance_masked_ref(
     return gather_distance_ref(queries, masked, base, metric), masked
 
 
+def gather_adc_ref(ids: jax.Array, codes: jax.Array, luts: jax.Array) -> jax.Array:
+    """ids (Q, R) into a code table (n, M) uint8, per-query LUTs (Q, M, K)
+    -> (Q, R) ADC scores: score[q, r] = sum_m luts[q, m, codes[ids[q, r], m]].
+
+    The compressed twin of ``gather_distance_ref``: padding ids (< 0) -> +inf.
+    """
+    rows = codes[jnp.maximum(ids, 0)].astype(jnp.int32)         # (Q, R, M)
+    picked = jnp.take_along_axis(
+        luts.astype(jnp.float32)[:, None], rows[..., None], axis=-1
+    )[..., 0]                                                   # (Q, R, M)
+    return jnp.where(ids >= 0, jnp.sum(picked, axis=-1), jnp.inf)
+
+
+def gather_adc_masked_ref(
+    ids: jax.Array, codes: jax.Array, luts: jax.Array, visited: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused compressed kernel: (adc dists, masked ids) where
+    padding and bitmap-visited entries come back as (+inf, -1)."""
+    masked = visited_mask_ref(ids, visited)
+    return gather_adc_ref(masked, codes, luts), masked
+
+
 def pq_adc_ref(codes: jax.Array, lut: jax.Array) -> jax.Array:
     """codes (n, M) uint8/int32, lut (M, K) f32 -> (n,) ADC scores.
 

@@ -55,6 +55,7 @@ def serve_ann(args) -> None:
         searcher = Searcher.build(
             base, metric="l2", key=key,
             with_hierarchy=(args.entry == "hierarchy"),
+            with_pq=(args.scorer == "pq"), pq_m=args.pq_m,
         )
         print(f"[serve-ann] built index over n={n} d={d} "
               f"in {time.time()-t0:.1f}s")
@@ -72,7 +73,17 @@ def serve_ann(args) -> None:
             print(f"[serve-ann] saved flat graph to {index_path}")
 
     spec = SearchSpec(ef=args.ef, k=args.topk, metric=searcher.metric,
-                      entry=args.entry, r_tile=args.r_tile)
+                      entry=args.entry, r_tile=args.r_tile,
+                      scorer=args.scorer, pq_m=args.pq_m, rerank=args.rerank)
+    if args.scorer == "pq":
+        # loaded indexes train their code table here (build-path engines
+        # already attached one via with_pq); either way serving never trains
+        t0 = time.time()
+        idx = searcher.pq_index(spec)
+        d_dim = searcher.base.shape[1]
+        print(f"[serve-ann] pq scorer ready in {time.time()-t0:.1f}s: "
+              f"M={idx.M} K={idx.K} ({idx.M} B/vector vs {4*d_dim} B exact, "
+              f"{4*d_dim/idx.M:.0f}x smaller scored base)")
     # --stream-tile T splits each incoming batch into T-row tiles that
     # pipeline through one compiled beam core (DESIGN.md §7); 0 = monolithic.
     if args.stream_tile:
@@ -129,6 +140,14 @@ def main() -> None:
                     help="[ann] .npz graph path to load (or save after build)")
     ap.add_argument("--r-tile", type=int, default=0,
                     help="[ann] gather-kernel neighbor tile (0 = default)")
+    ap.add_argument("--scorer", default="exact",
+                    help="[ann] per-hop scorer: exact|pq (pq = compressed "
+                         "ADC traversal + exact rerank)")
+    ap.add_argument("--pq-m", type=int, default=8,
+                    help="[ann] PQ sub-vectors = code bytes/vector")
+    ap.add_argument("--rerank", type=int, default=0,
+                    help="[ann] exact-reranked survivors under --scorer pq "
+                         "(0 = all ef)")
     ap.add_argument("--stream-tile", type=int, default=0,
                     help="[ann] split batches into this many queries per "
                          "streamed tile (0 = one monolithic search per batch)")

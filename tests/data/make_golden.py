@@ -36,6 +36,19 @@ def main() -> None:
     flat = hnsw.flat_search(queries, base, gd, ef=32, k=4,
                             key=jax.random.PRNGKey(7), n_seeds=8)
     hier = hnsw.hnsw_search(queries, base, idx, ef=32, k=4)
+
+    # pq-scored traversal + exact rerank, fixed-seed: the PQ code table is
+    # trained lazily from fold_in(PRNGKey(7), crc32("scorer:pq")) and k-means
+    # empty-cluster re-seeding folds the iteration index, so this rebuild is
+    # bit-reproducible (locked by test_pq_search_matches_golden).
+    from repro.core.engine import Searcher, SearchSpec
+
+    searcher = Searcher.from_graph(base, gd, key=jax.random.PRNGKey(7))
+    pq = searcher.search(
+        queries,
+        SearchSpec(ef=32, k=4, entry="projection", scorer="pq", pq_m=8,
+                   pq_k=64),
+    )
     np.savez(
         OUT,
         flat_ids=np.asarray(flat.ids),
@@ -44,9 +57,13 @@ def main() -> None:
         hier_ids=np.asarray(hier.ids),
         hier_dists=np.asarray(hier.dists),
         hier_comps=np.asarray(hier.n_comps),
+        pq_ids=np.asarray(pq.ids),
+        pq_dists=np.asarray(pq.dists),
+        pq_comps=np.asarray(pq.n_comps),
     )
     print(f"wrote {OUT}: flat comps mean={float(flat.n_comps.mean()):.1f}, "
-          f"hier comps mean={float(hier.n_comps.mean()):.1f}")
+          f"hier comps mean={float(hier.n_comps.mean()):.1f}, "
+          f"pq comps mean={float(pq.n_comps.mean()):.1f}")
 
 
 if __name__ == "__main__":

@@ -120,6 +120,84 @@ def test_ops_gather_dispatch_small_n():
     assert not ops._use_onehot(big_ids, base)
 
 
+# -- fused ADC gather kernel: the compressed twin of the masked gather ------
+
+
+def _adc_world(Q, R, n, M, K, d, metric, seed=0):
+    """ids/codes/visited plus a REAL metric LUT (built from trained PQ
+    codebooks over a (n, d) base) — the kernel is metric-agnostic but the
+    parity matrix exercises the LUTs the engine actually feeds it."""
+    from repro.baselines.pq import build_adc_luts, build_pq
+
+    k = jax.random.PRNGKey(seed + Q * R + M + d)
+    kq, kb, ki, kv = jax.random.split(k, 4)
+    base = jax.random.normal(kb, (n, d))
+    queries = jax.random.normal(kq, (Q, d))
+    idx = build_pq(base, M=M, K=K, iters=4, key=jax.random.fold_in(k, 5))
+    luts = build_adc_luts(queries, idx.codebooks, metric)
+    ids = jax.random.randint(ki, (Q, R), -1, n)
+    ids = ids.at[0].set(-1)  # one all-INVALID row (fully padded gather)
+    visited = jax.random.bits(kv, (Q, (n + 31) // 32), dtype=jnp.uint32)
+    return ids, idx.codes, luts, visited
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize(
+    "Q,R,n,M,K,d,r_tile",
+    [
+        (4, 8, 64, 8, 16, 16, 3),       # R % r_tile != 0 (ragged last tile)
+        (5, 33, 256, 4, 64, 60, 8),     # R and d both off-tile
+        (2, 5, 300, 8, 32, 136, 16),    # r_tile > R; dsub=17 off-lane split
+        (3, 24, 320, 16, 256, 208, 8),  # d % 128 != 0, full K=256 LUT
+    ],
+)
+def test_gather_adc_masked_kernel(metric, Q, R, n, M, K, d, r_tile):
+    """Interpret-mode parity of the fused code-gather + ADC + mask kernel vs
+    the jnp oracle, across l2/ip/cos LUTs, ragged R/R_tile, sub-vector splits
+    with d % 128 != 0, the all-INVALID id row, and the visited epilogue —
+    mirroring the exact kernel's matrix so CPU CI exercises it from day one.
+    """
+    from repro.kernels import gather_adc_masked
+
+    ids, codes, luts, visited = _adc_world(Q, R, n, M, K, d, metric)
+    gd, gi = gather_adc_masked(ids, codes, luts, visited, r_tile=r_tile,
+                               interpret=True)
+    wd, wi = ref.gather_adc_masked_ref(ids, codes, luts, visited)
+    np.testing.assert_allclose(gd, wd, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_gather_adc_masked_all_visited():
+    """A fully-visited bitmap drops every entry: (+inf, INVALID) across the
+    board — the contract ``beam_search._step`` relies on to stop expanding."""
+    from repro.kernels import gather_adc_masked
+
+    ids, codes, luts, _ = _adc_world(3, 9, 64, 8, 16, 16, "l2", seed=2)
+    visited = jnp.full((3, 2), jnp.uint32(0xFFFFFFFF))
+    gd, gi = gather_adc_masked(ids, codes, luts, visited, r_tile=4,
+                               interpret=True)
+    assert np.isinf(np.asarray(gd)).all()
+    assert (np.asarray(gi) == -1).all()
+
+
+def test_ops_gather_adc_dispatch(monkeypatch):
+    """ops.gather_adc_masked serves the ref oracle in ref mode and the Pallas
+    body under REPRO_PALLAS=interpret, matching to float tolerance."""
+    from repro.kernels import ops
+
+    ids, codes, luts, visited = _adc_world(4, 6, 100, 8, 16, 16, "l2", seed=3)
+    monkeypatch.setenv("REPRO_PALLAS", "ref")
+    rd, ri = ops.gather_adc_masked(ids, codes, luts, visited)
+    wd, wi = ref.gather_adc_masked_ref(ids, codes, luts, visited)
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(wi))
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    pd, pi = ops.gather_adc_masked(ids, codes, luts, visited)
+    np.testing.assert_allclose(np.asarray(pd), np.asarray(wd), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(wi))
+
+
 @pytest.mark.parametrize("n,M,K", [(64, 8, 256), (1000, 16, 256), (7, 4, 16)])
 def test_pq_adc(n, M, K):
     k = jax.random.PRNGKey(n)

@@ -105,6 +105,68 @@ def test_exact_search_matches_numpy_property(q, n, d, k, seed):
 
 
 @settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(16, 80),
+    M=st.sampled_from([2, 4, 8]),
+    dsub=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_pq_adc_self_distance_minimal(n, M, dsub, seed):
+    """ADC distance of a vector to its OWN code never exceeds its exact l2
+    distance to any other base vector's reconstruction: per sub-quantizer the
+    encoder picks the closest codeword, and l2 ADC is exact on
+    reconstructions, so sum_m lut[m, own_code[m]] is the minimum over every
+    code assignment the table contains."""
+    from repro.baselines.pq import build_adc_luts, build_pq
+
+    d = M * dsub
+    key = jax.random.PRNGKey(seed)
+    base = jax.random.normal(key, (n, d))
+    idx = build_pq(base, M=M, K=min(16, n), iters=3,
+                   key=jax.random.fold_in(key, 1))
+    luts = build_adc_luts(base, idx.codebooks, "l2")        # queries = base
+    recon = jnp.einsum(
+        "nmk,mkd->nmd",
+        jax.nn.one_hot(idx.codes.astype(jnp.int32), idx.K),
+        idx.codebooks,
+    ).reshape(n, d)
+    own = np.asarray(ref.gather_adc_ref(
+        jnp.arange(n)[:, None], idx.codes, luts
+    ))[:, 0]                                               # (n,) self scores
+    exact_to_recon = np.asarray(
+        ((np.asarray(base)[:, None, :] - np.asarray(recon)[None]) ** 2).sum(-1)
+    )                                                      # (n, n)
+    assert (own[:, None] <= exact_to_recon + 1e-4).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 70),
+    M=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_pq_adc_padding_never_leaks(n, M, seed):
+    """The pq_adc kernel pads n up to its block size; scores of real rows
+    must be independent of whatever the pad region contains — appending junk
+    rows cannot change the first n outputs."""
+    from repro.kernels.pq_adc import pq_adc
+
+    key = jax.random.PRNGKey(seed)
+    K = 16
+    codes = jax.random.randint(key, (n, M), 0, K).astype(jnp.uint8)
+    lut = jax.random.normal(jax.random.fold_in(key, 1), (M, K))
+    junk = jax.random.randint(jax.random.fold_in(key, 2), (5, M), 0, K
+                              ).astype(jnp.uint8)
+    got = pq_adc(codes, lut, block_n=32, interpret=True)
+    with_junk = pq_adc(jnp.concatenate([codes, junk]), lut, block_n=32,
+                       interpret=True)[:n]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(with_junk))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.pq_adc_ref(codes, lut)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**16), frac=st.floats(0.1, 0.9))
 def test_moe_capacity_drop_monotone(seed, frac):
     """Lower capacity factor can only drop more tokens (output moves toward
