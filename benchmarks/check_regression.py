@@ -6,6 +6,15 @@ any entry strategy's recall@1 drops, or when its comps/query grows — the
 committed file is the perf trajectory; regressions must be deliberate (update
 the baseline in the same PR and say why in CHANGES.md).
 
+Missing keys are violations with a named diff (which metric, which side,
+what the other side reported) — never a bare KeyError: a half-written
+baseline must fail the gate legibly, not crash it.
+
+``--profile`` selects a threshold bundle: ``default`` for the per-push
+smoke world, ``nightly`` for the scheduled large-n run (wider wall
+tolerance on shared night runners, but the full 3-point host-tier sweep is
+mandatory). Explicit threshold flags override the profile.
+
     PYTHONPATH=src python -m benchmarks.check_regression \
         --baseline /tmp/bench_baseline.json --fresh BENCH_engine.json
 """
@@ -17,9 +26,104 @@ import sys
 
 WORLD_KEYS = ("n", "d", "q", "ef")
 
+PROFILES = {
+    # per-push CI: tight wall, the host-tier sweep runs at the main-world n
+    "default": dict(max_wall_ratio=1.25, max_comps_ratio=1.10,
+                    max_recall_drop=0.02, min_host_tier_rows=1),
+    # scheduled large-n run: night runners are noisier (wall loosened), and
+    # the sweep must cover all three tier points incl. n=200k
+    "nightly": dict(max_wall_ratio=1.60, max_comps_ratio=1.10,
+                    max_recall_drop=0.02, min_host_tier_rows=3),
+}
+
+# host-tier invariants (checked on every FRESH row, baseline or not: the
+# large-n nightly rows have no committed twin — their gate is internal)
+HOST_TIER_MIN_RECALL_FRAC = 0.95   # host recall vs device-exact recall
+HOST_TIER_MIN_PARITY = 0.995       # host top-1 ids vs device-pq top-1 ids
+HOST_TIER_MIN_QPS_RATIO = 0.30     # bounded qps loss for the host gather
+
+
+def _metric(row: dict, key: str, side: str, other: dict | None, tag: str,
+            violations: list[str]):
+    """Guarded lookup: a missing metric becomes a named violation carrying
+    the other report's value for the diff, not a KeyError. ``other=None``
+    marks a baseline-independent check — the message then must not point
+    anyone at the committed baseline."""
+    if key not in row:
+        if other is None:
+            violations.append(
+                f"{tag}: metric {key!r} missing from {side} report "
+                f"(required by the host-tier invariants, no baseline "
+                f"involved)"
+            )
+            return None
+        have = other.get(key, "<also missing>")
+        violations.append(
+            f"{tag}: metric {key!r} missing from {side} report "
+            f"({'fresh' if side == 'baseline' else 'baseline'} has {have!r})"
+        )
+        return None
+    return row[key]
+
+
+def _pair(b: dict, f: dict, key: str, tag: str, violations: list[str]):
+    """(baseline, fresh) values for one metric, or (None, None) recording a
+    named violation per missing side."""
+    bv = _metric(b, key, "baseline", f, tag, violations)
+    fv = _metric(f, key, "fresh", b, tag, violations)
+    return (bv, fv) if bv is not None and fv is not None else (None, None)
+
+
+def check_host_tier(rows: list[dict], *, min_rows: int,
+                    out=print) -> list[str]:
+    """Baseline-independent invariants of the tiered-base sweep: recall
+    parity between placements, bounded qps loss, and host recall within
+    HOST_TIER_MIN_RECALL_FRAC of device-resident exact search."""
+    violations = []
+    if len(rows) < min_rows:
+        violations.append(
+            f"host_tier_sweep has {len(rows)} row(s); profile requires >= "
+            f"{min_rows} (run smoke with the full --host-tier-ns list)"
+        )
+    for r in rows:
+        tag = f"host_tier[n={r.get('n', '?')}]"
+        need = ("exact_recall_at_1", "host_recall_at_1",
+                "host_device_parity", "qps_ratio")
+        vals = {}
+        for key in need:
+            v = _metric(r, key, "fresh", None, tag, violations)
+            if v is None:
+                break
+            vals[key] = v
+        if len(vals) < len(need):
+            continue
+        out(f"[perf-guard] {tag}: host recall {vals['host_recall_at_1']} "
+            f"(exact {vals['exact_recall_at_1']}), parity "
+            f"{vals['host_device_parity']}, qps ratio {vals['qps_ratio']}")
+        floor = HOST_TIER_MIN_RECALL_FRAC * vals["exact_recall_at_1"]
+        if vals["host_recall_at_1"] < floor:
+            violations.append(
+                f"{tag}: host_recall_at_1 {vals['host_recall_at_1']} < "
+                f"{HOST_TIER_MIN_RECALL_FRAC} * exact "
+                f"({vals['exact_recall_at_1']})"
+            )
+        if vals["host_device_parity"] < HOST_TIER_MIN_PARITY:
+            violations.append(
+                f"{tag}: host_device_parity {vals['host_device_parity']} < "
+                f"{HOST_TIER_MIN_PARITY} (placements must return the same "
+                f"survivors)"
+            )
+        if vals["qps_ratio"] < HOST_TIER_MIN_QPS_RATIO:
+            violations.append(
+                f"{tag}: qps_ratio {vals['qps_ratio']} < "
+                f"{HOST_TIER_MIN_QPS_RATIO} (host gather tail too expensive)"
+            )
+    return violations
+
 
 def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
             max_comps_ratio: float, max_recall_drop: float,
+            min_host_tier_rows: int = 1,
             allow_world_mismatch: bool = False, out=print) -> list[str]:
     """Return a list of violation messages (empty = pass)."""
     if any(baseline.get(k) != fresh.get(k) for k in WORLD_KEYS):
@@ -54,51 +158,72 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
             )
     for name, b in baseline.get("strategies", {}).items():
         f = fresh.get("strategies", {}).get(name)
+        tag = f"strategy {name!r}"
         if f is None:
-            violations.append(f"strategy {name!r} missing from fresh report")
+            violations.append(f"{tag} missing from fresh report")
             continue
-        out(f"[perf-guard] {name}: recall {b['recall_at_1']} -> "
-            f"{f['recall_at_1']}, comps {b['comps_per_query']} -> "
-            f"{f['comps_per_query']}")
-        if f["recall_at_1"] < b["recall_at_1"] - max_recall_drop:
+        b_rec, f_rec = _pair(b, f, "recall_at_1", tag, violations)
+        b_cmp, f_cmp = _pair(b, f, "comps_per_query", tag, violations)
+        out(f"[perf-guard] {name}: recall {b_rec} -> {f_rec}, "
+            f"comps {b_cmp} -> {f_cmp}")
+        if b_rec is not None and f_rec < b_rec - max_recall_drop:
             violations.append(
-                f"{name}: recall_at_1 {b['recall_at_1']} -> "
-                f"{f['recall_at_1']} (allowed drop {max_recall_drop})"
+                f"{tag}: recall_at_1 {b_rec} -> {f_rec} "
+                f"(allowed drop {max_recall_drop})"
             )
-        if f["comps_per_query"] > b["comps_per_query"] * max_comps_ratio:
+        if b_cmp is not None and f_cmp > b_cmp * max_comps_ratio:
             violations.append(
-                f"{name}: comps_per_query {b['comps_per_query']} -> "
-                f"{f['comps_per_query']} "
-                f"(allowed <= {b['comps_per_query'] * max_comps_ratio:.1f})"
+                f"{tag}: comps_per_query {b_cmp} -> {f_cmp} "
+                f"(allowed <= {b_cmp * max_comps_ratio:.1f})"
             )
     # pq sweep rows (matched by (d, pq_m)): recall and comps guarded per
     # scorer with the strategy policy; wall stays informational (the sweep
     # worlds are tiny, pq_beam_wall_ms above is the timed gate)
-    fresh_rows = {(r["d"], r["pq_m"]): r for r in fresh.get("pq_sweep", [])}
+    fresh_rows = {(r.get("d"), r.get("pq_m")): r
+                  for r in fresh.get("pq_sweep", [])}
     for b in baseline.get("pq_sweep", []):
-        f = fresh_rows.get((b["d"], b["pq_m"]))
-        tag = f"pq_sweep[d={b['d']},M={b['pq_m']}]"
+        f = fresh_rows.get((b.get("d"), b.get("pq_m")))
+        tag = f"pq_sweep[d={b.get('d')},M={b.get('pq_m')}]"
         if f is None:
             violations.append(f"{tag} missing from fresh report")
             continue
         for sc in ("exact", "pq"):
-            out(f"[perf-guard] {tag} {sc}: recall "
-                f"{b[f'{sc}_recall_at_1']} -> {f[f'{sc}_recall_at_1']}, "
-                f"comps {b[f'{sc}_comps_per_query']} -> "
-                f"{f[f'{sc}_comps_per_query']}")
-            if f[f"{sc}_recall_at_1"] < b[f"{sc}_recall_at_1"] - max_recall_drop:
+            b_rec, f_rec = _pair(b, f, f"{sc}_recall_at_1", tag, violations)
+            b_cmp, f_cmp = _pair(b, f, f"{sc}_comps_per_query", tag,
+                                 violations)
+            out(f"[perf-guard] {tag} {sc}: recall {b_rec} -> {f_rec}, "
+                f"comps {b_cmp} -> {f_cmp}")
+            if b_rec is not None and f_rec < b_rec - max_recall_drop:
                 violations.append(
-                    f"{tag}: {sc}_recall_at_1 {b[f'{sc}_recall_at_1']} -> "
-                    f"{f[f'{sc}_recall_at_1']} "
+                    f"{tag}: {sc}_recall_at_1 {b_rec} -> {f_rec} "
                     f"(allowed drop {max_recall_drop})"
                 )
-            if (f[f"{sc}_comps_per_query"]
-                    > b[f"{sc}_comps_per_query"] * max_comps_ratio):
+            if b_cmp is not None and f_cmp > b_cmp * max_comps_ratio:
                 violations.append(
-                    f"{tag}: {sc}_comps_per_query "
-                    f"{b[f'{sc}_comps_per_query']} -> "
-                    f"{f[f'{sc}_comps_per_query']} (allowed <= "
-                    f"{b[f'{sc}_comps_per_query'] * max_comps_ratio:.1f})"
+                    f"{tag}: {sc}_comps_per_query {b_cmp} -> {f_cmp} "
+                    f"(allowed <= {b_cmp * max_comps_ratio:.1f})"
+                )
+    # host-tier sweep: internal invariants on every fresh row (large-n
+    # nightly rows have no baseline twin), plus recall drop vs the baseline
+    # rows that do exist (matched by n)
+    violations += check_host_tier(
+        fresh.get("host_tier_sweep", []), min_rows=min_host_tier_rows,
+        out=out,
+    )
+    fresh_tier = {r.get("n"): r for r in fresh.get("host_tier_sweep", [])}
+    for b in baseline.get("host_tier_sweep", []):
+        f = fresh_tier.get(b.get("n"))
+        tag = f"host_tier[n={b.get('n')}]"
+        if f is None:
+            violations.append(f"{tag} missing from fresh report")
+            continue
+        for key in ("exact_recall_at_1", "device_recall_at_1",
+                    "host_recall_at_1"):
+            b_rec, f_rec = _pair(b, f, key, tag, violations)
+            if b_rec is not None and f_rec < b_rec - max_recall_drop:
+                violations.append(
+                    f"{tag}: {key} {b_rec} -> {f_rec} "
+                    f"(allowed drop {max_recall_drop})"
                 )
     return violations
 
@@ -107,29 +232,39 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--fresh", required=True)
-    ap.add_argument("--max-wall-ratio", type=float, default=1.25,
+    ap.add_argument("--profile", choices=sorted(PROFILES), default="default",
+                    help="threshold bundle; explicit flags below override it")
+    ap.add_argument("--max-wall-ratio", type=float, default=None,
                     help="fail if beam_core_wall_ms exceeds baseline * ratio")
-    ap.add_argument("--max-comps-ratio", type=float, default=1.10)
-    ap.add_argument("--max-recall-drop", type=float, default=0.02)
+    ap.add_argument("--max-comps-ratio", type=float, default=None)
+    ap.add_argument("--max-recall-drop", type=float, default=None)
     ap.add_argument("--allow-world-mismatch", action="store_true",
                     help="skip (instead of fail) when the two reports were "
                          "produced with different (n, d, q, ef) worlds")
     args = ap.parse_args()
+    prof = PROFILES[args.profile]
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
     violations = compare(
-        baseline, fresh, max_wall_ratio=args.max_wall_ratio,
-        max_comps_ratio=args.max_comps_ratio,
-        max_recall_drop=args.max_recall_drop,
+        baseline, fresh,
+        max_wall_ratio=(args.max_wall_ratio if args.max_wall_ratio is not None
+                        else prof["max_wall_ratio"]),
+        max_comps_ratio=(args.max_comps_ratio
+                         if args.max_comps_ratio is not None
+                         else prof["max_comps_ratio"]),
+        max_recall_drop=(args.max_recall_drop
+                         if args.max_recall_drop is not None
+                         else prof["max_recall_drop"]),
+        min_host_tier_rows=prof["min_host_tier_rows"],
         allow_world_mismatch=args.allow_world_mismatch,
     )
     if violations:
         for v in violations:
             print(f"[perf-guard] FAIL: {v}")
         sys.exit(1)
-    print("[perf-guard] OK")
+    print(f"[perf-guard] OK (profile={args.profile})")
 
 
 if __name__ == "__main__":

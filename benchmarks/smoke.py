@@ -35,6 +35,100 @@ STREAM_SWEEP = [(256, 3000, 16), (384, 2000, 32), (512, 1500, 24)]
 # 4d/M — the curse-of-dimensionality axis the compressed traversal attacks.
 PQ_SWEEP = [(16, 8), (64, 8), (128, 16)]
 
+# Tiered-base sweep (DESIGN.md §9): fixed (d, M), n grows past what a
+# device-resident float base would allow. PR CI runs the main-world n only;
+# the nightly job passes --host-tier-ns 6000,60000,200000.
+HOST_TIER_D = 16
+HOST_TIER_M = 8
+
+
+def _build_graph(base, key):
+    """Exact k-NN graph below the brute-force knee, NN-Descent above it —
+    the host-tier worlds are the only smoke worlds big enough to need it."""
+    from repro.core import nndescent
+
+    if base.shape[0] <= 8000:
+        g = bruteforce.exact_knn_graph(base, 16)
+    else:
+        g = nndescent.build_knn_graph(
+            base, nndescent.NNDescentConfig(k=16, rounds=6), key=key
+        )
+    return diversify.build_gd_graph(base, g)
+
+
+def _host_tier_sweep(key, ns, q, ef, out, main_world=None) -> list[dict]:
+    """device-vs-host base placement at growing n (same graph, same PQ, same
+    seeds): recall must be bit-parity (identical survivors -> identical
+    rerank), qps loss bounded by the host-gather tail, and the device-side
+    float footprint replaced by M·n codes + adjacency.
+
+    ``main_world`` is the already-built (n, searcher, queries, gt) of the
+    main report: a sweep point at that n reuses it (per-push CI runs the
+    sweep at the main n only — rebuilding the world would double the
+    dominant graph-build/PQ-train cost of every tier1 leg)."""
+    rows = []
+    for i, n in enumerate(ns):
+        if main_world is not None and n == main_world[0] \
+                and main_world[1].base.shape[1] == HOST_TIER_D:
+            _, s, queries, gt = main_world
+            neighbors = s.neighbors
+        else:
+            kw = jax.random.fold_in(key, 300 + i)
+            base = jax.random.uniform(kw, (n, HOST_TIER_D))
+            queries = jax.random.uniform(
+                jax.random.fold_in(kw, 1), (q, HOST_TIER_D)
+            )
+            gd = _build_graph(base, jax.random.fold_in(kw, 2))
+            s = Searcher.from_graph(base, gd, key=kw)
+            neighbors = gd.neighbors
+            gt = bruteforce.ground_truth(queries, base, 1)
+
+        spec_ex = SearchSpec(ef=ef, k=1, entry="random")
+        spec_dev = SearchSpec(ef=ef, k=1, entry="random", scorer="pq",
+                              pq_m=HOST_TIER_M)
+        spec_host = spec_dev._replace(base_placement="host")
+        # one seed draw shared by all three runs: the device-vs-host contrast
+        # must be pure placement, and exact-vs-pq pure scorer
+        ent, extra = s.seed(queries, spec_dev)
+        s.pq_index(spec_dev)        # code table trained off the timer
+        s.base_store("host")        # host mirror materialized off the timer
+        run = lambda sp: s.search(queries, sp, entries=ent, entry_comps=extra)
+        _, res_ex = timeit(run, spec_ex, iters=1)
+        wall_dev, res_dev = timeit(run, spec_dev, iters=2)
+        wall_host, res_host = timeit(run, spec_host, iters=2)
+
+        parity = float((res_dev.ids[:, 0] == res_host.ids[:, 0]).mean())
+        row = {
+            "n": n, "d": HOST_TIER_D, "pq_m": HOST_TIER_M,
+            "exact_recall_at_1": round(
+                float((res_ex.ids[:, 0] == gt[:, 0]).mean()), 4),
+            "device_recall_at_1": round(
+                float((res_dev.ids[:, 0] == gt[:, 0]).mean()), 4),
+            "host_recall_at_1": round(
+                float((res_host.ids[:, 0] == gt[:, 0]).mean()), 4),
+            "host_device_parity": round(parity, 4),
+            "device_wall_ms": round(wall_dev * 1e3, 2),
+            "host_wall_ms": round(wall_host * 1e3, 2),
+            "device_qps": round(q / wall_dev, 1),
+            "host_qps": round(q / wall_host, 1),
+            "qps_ratio": round(wall_dev / wall_host, 4),
+            "host_kib_per_query": round(
+                float(res_host.host_bytes.mean()) / 1024, 2),
+            "device_float_mb": round(n * HOST_TIER_D * 4 / 2**20, 2),
+            "device_resident_mb": round(
+                (n * HOST_TIER_M + neighbors.size * 4) / 2**20, 2),
+        }
+        rows.append(row)
+        out(f"smoke/host_tier n={n}: recall exact={row['exact_recall_at_1']:.3f} "
+            f"dev={row['device_recall_at_1']:.3f} "
+            f"host={row['host_recall_at_1']:.3f} parity={parity:.3f} "
+            f"qps {row['device_qps']:.0f}->{row['host_qps']:.0f} "
+            f"({row['qps_ratio']:.2f}x), "
+            f"{row['host_kib_per_query']:.1f} KiB host/query, "
+            f"device {row['device_float_mb']:.1f}->"
+            f"{row['device_resident_mb']:.1f} MB")
+    return rows
+
 
 def _pq_sweep(key, n: int, q: int, ef: int, out) -> list[dict]:
     """exact-vs-pq recall/comps/memory across d (DESIGN.md §8), same n as the
@@ -108,7 +202,7 @@ def _stream_sweep(key, ef: int, tile_q: int, out) -> list[dict]:
 
 def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
         stream_tile: int = 128, out_path: str = "BENCH_engine.json",
-        out=print) -> dict:
+        host_tier_ns: list[int] | None = None, out=print) -> dict:
     key = jax.random.PRNGKey(0)
     base = jax.random.uniform(key, (n, d))
     queries = jax.random.uniform(jax.random.fold_in(key, 1), (q, d))
@@ -158,6 +252,13 @@ def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
     # exact-vs-pq recall/comps/memory across d — DESIGN.md §8
     report["pq_sweep"] = _pq_sweep(key, n, q, ef, out)
 
+    # device-vs-host base placement at growing n — DESIGN.md §9; a sweep
+    # point at the main n reuses the world built above
+    report["host_tier_sweep"] = _host_tier_sweep(
+        key, host_tier_ns or [n], q, ef, out,
+        main_world=(n, searcher, queries, gt),
+    )
+
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     out(f"smoke/engine written to {out_path}")
@@ -172,9 +273,16 @@ def main() -> None:
     ap.add_argument("--ef", type=int, default=48)
     ap.add_argument("--stream-tile", type=int, default=128)
     ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--host-tier-ns", default="",
+                    help="comma-separated n values for the tiered-base sweep "
+                         "(default: the main world's --n; nightly CI passes "
+                         "6000,60000,200000)")
     args = ap.parse_args()
+    tier_ns = ([int(v) for v in args.host_tier_ns.split(",") if v]
+               if args.host_tier_ns else None)
     run(n=args.n, d=args.d, q=args.q, ef=args.ef,
-        stream_tile=args.stream_tile, out_path=args.out)
+        stream_tile=args.stream_tile, out_path=args.out,
+        host_tier_ns=tier_ns)
 
 
 if __name__ == "__main__":

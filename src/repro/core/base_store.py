@@ -1,0 +1,143 @@
+"""Tiered base storage: where the float base lives (DESIGN.md §9).
+
+PR 3's scorer axis shrank the *scored* working set to M bytes/vertex — the
+hot loop streams the (n, M) uint8 code table, never the float base. What
+still pins the float base in device HBM is the exact-rerank tail, which
+touches only ``rerank`` rows per query. This module makes that placement a
+first-class axis:
+
+* ``device`` — the base matrix is a device array (today's behavior); the
+  rerank gathers rows in-HBM. Parity-clean: nothing changes.
+* ``host``   — the base matrix stays in host memory (a C-contiguous numpy
+  array; on TPU runtimes the ``device_put`` below streams from it
+  asynchronously). Device HBM holds only the PQ code table + the graph
+  adjacency, so per-query device footprint drops from 4·d·n bytes to
+  M·n + adjacency — the first ``n ≫ HBM`` configuration.
+
+The host path's only device traffic is the rerank gather:
+:meth:`BaseStore.gather` slices the top-``rerank`` survivor rows on the host
+and issues one batched async ``jax.device_put`` per query batch — the copy
+overlaps the next tile's LUT build in ``Searcher.search_stream``'s pipeline.
+Host traffic is charged alongside the paper's comparison currency:
+``SearchResult.host_bytes`` reports bytes fetched from host per query, and
+the store keeps running totals for serving stats.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .topk import topk_smallest
+
+PLACEMENTS = ("device", "host")
+
+
+def check_placement(placement: str) -> str:
+    if placement not in PLACEMENTS:
+        raise ValueError(
+            f"unknown base_placement {placement!r}; one of {PLACEMENTS}"
+        )
+    return placement
+
+
+class BaseStore:
+    """The float base matrix behind one placement policy.
+
+    ``device``: wraps a device array; gathers are device-side fancy
+    indexing (the rerank inside ``beam_search`` never sees this object —
+    the device path is byte-for-byte the pre-tiering code).
+
+    ``host``: wraps a host-resident float32 numpy array. :meth:`gather`
+    returns rows already on their way to the device (``device_put`` is
+    async — callers that interleave other work before touching the result
+    overlap the copy), plus per-query host-traffic bytes.
+    """
+
+    def __init__(self, base, placement: str = "device"):
+        self.placement = check_placement(placement)
+        if placement == "host":
+            # float32, C-contiguous: row slices are single memcpy spans, and
+            # the dtype matches what the device-side rerank math expects.
+            self._host = np.ascontiguousarray(np.asarray(base, np.float32))
+            self._dev = None
+        else:
+            self._dev = jnp.asarray(base)
+            self._host = None
+        arr = self._host if self._host is not None else self._dev
+        self.n, self.d = arr.shape
+        self.row_bytes = self.d * 4
+        # running totals (serving stats; per-query accounting rides the
+        # SearchResult)
+        self.gathered_rows = 0
+        self.gathered_bytes = 0
+
+    @classmethod
+    def wrap(cls, base, placement: str = "device") -> "BaseStore":
+        if isinstance(base, BaseStore):
+            if base.placement != placement:
+                raise ValueError(
+                    f"BaseStore placement {base.placement!r} != requested "
+                    f"{placement!r}"
+                )
+            return base
+        return cls(base, placement)
+
+    @property
+    def nbytes(self) -> int:
+        return self.n * self.row_bytes
+
+    def device_view(self) -> jax.Array:
+        """The full base as a device array — only valid under ``device``
+        placement (uploading a host-tier base wholesale would defeat it)."""
+        if self._dev is None:
+            raise ValueError(
+                "base_placement='host': the float base is host-resident; "
+                "use gather(ids) for the rerank rows instead of device_view()"
+            )
+        return self._dev
+
+    def gather(self, ids) -> tuple[jax.Array, jax.Array]:
+        """ids (Q, R) int32 (INVALID < 0 allowed) -> (rows (Q, R, d) float32
+        on device, host_bytes (Q,) int32).
+
+        Host placement: the row slice happens on the host (ids are synced —
+        they are the traversal's output and already need materializing) and
+        the result is enqueued with one async ``device_put``; INVALID ids
+        fetch row 0 and must be masked by the caller's id validity (the
+        rerank scores them +inf). Device placement: in-HBM gather, zero host
+        traffic.
+        """
+        if self._dev is not None:
+            rows = self._dev[jnp.maximum(ids, 0)]
+            return rows, jnp.zeros(ids.shape[:1], jnp.int32)
+        ids_np = np.asarray(ids)
+        rows_np = np.take(self._host, np.maximum(ids_np, 0), axis=0)
+        valid = (ids_np >= 0).sum(axis=1, dtype=np.int64)
+        self.gathered_rows += int(valid.sum())
+        self.gathered_bytes += int(valid.sum()) * self.row_bytes
+        rows = jax.device_put(rows_np)  # async: overlaps the caller's work
+        return rows, jnp.asarray((valid * self.row_bytes).astype(np.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def rerank_gathered(queries, cand, rows, k: int, metric: str = "l2"):
+    """Exact rerank over pre-gathered rows: cand (Q, r) ids, rows (Q, r, d)
+    -> (dists (Q, k), ids (Q, k)) ascending.
+
+    Same distance formula as the reference gather kernel
+    (``kernels.ref._distances_from_rows``), so a host-tier rerank over
+    ``BaseStore.gather`` rows is bit-identical to the device path's
+    ``_finalize`` rerank on the ref/one-hot dispatch paths (CPU default,
+    CI, the golden fixtures) — same survivors in, same answers out. On
+    kernel backends (native/interpret) the device rerank computes l2 in
+    the kernel's expanded-norm MXU form, so distances may differ in the
+    low float32 bits (~1e-6 relative); survivor ids only move on exact
+    ties. INVALID (< 0) candidates score +inf and never win."""
+    from repro.kernels.ref import _distances_from_rows
+
+    exact = _distances_from_rows(queries, cand, rows, metric)
+    dd, sel = topk_smallest(exact, k)
+    return dd, jnp.take_along_axis(cand, sel, axis=1)

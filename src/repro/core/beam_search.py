@@ -33,6 +33,21 @@ class SearchResult(NamedTuple):
     dists: jax.Array      # (Q, k)
     n_comps: jax.Array    # (Q,) distance computations (paper's cost currency)
     n_steps: jax.Array    # () loop iterations executed
+    # bytes fetched from host memory per query (tiered rerank under
+    # base_placement='host', DESIGN.md §9); 0 for device-resident runs
+    host_bytes: jax.Array | int = 0
+
+
+class TraverseResult(NamedTuple):
+    """A finished traversal before the rerank tail: the full candidate list
+    in the scorer's own currency. ``beam_traverse`` returns this so the
+    tiered-base path (``core.base_store``) can gather the survivor rows from
+    host memory OUTSIDE the jitted loop and finish the exact rerank there."""
+
+    cand_ids: jax.Array    # (Q, ef) ascending by scorer distance
+    cand_dists: jax.Array  # (Q, ef) scorer currency (ADC under pq)
+    n_comps: jax.Array     # (Q,) raw scored-id count (unscaled)
+    n_steps: jax.Array     # ()
 
 
 class _State(NamedTuple):
@@ -89,7 +104,10 @@ def _init_state(queries, base, neighbors, entry_ids, ef, metric,
                 r_tile: int = 0, scorer: str = "exact",
                 scorer_state=None) -> _State:
     Q = queries.shape[0]
-    n = base.shape[0]
+    # n comes from the adjacency, not the base: under base_placement='host'
+    # the traversal runs with base=None (the float rows never reach the
+    # device; the scorer reads the code table from scorer_state instead).
+    n = neighbors.shape[0]
     W = (n + 31) // 32
     E = entry_ids.shape[1]
 
@@ -215,7 +233,7 @@ def _finalize(state: _State, queries, base, k, metric, r_tile,
     from repro.kernels import ops
 
     ef = state.cand_ids.shape[1]
-    r = ef if rerank <= 0 else max(k, min(rerank, ef))
+    r = rerank_slice(ef, k, rerank)
     cand = state.cand_ids[:, :r]                # ascending by ADC score
     exact = ops.gather_distance(queries, cand, base, metric=metric,
                                 r_tile=r_tile)  # INVALID -> +inf
@@ -270,6 +288,66 @@ def beam_search(
     state = jax.lax.while_loop(cond, body, state)
     return _finalize(state, queries, base, k, metric, r_tile, scorer,
                      scorer_state, rerank)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ef", "metric", "max_steps", "expand_width", "r_tile",
+                     "scorer"),
+)
+def beam_traverse(
+    queries: jax.Array,
+    neighbors: jax.Array,
+    entry_ids: jax.Array,
+    ef: int,
+    metric: str = "l2",
+    max_steps: int | None = None,
+    expand_width: int = 1,
+    r_tile: int = 0,
+    scorer: str = "pq",
+    scorer_state=None,
+) -> TraverseResult:
+    """The beam loop WITHOUT the rerank tail — the device half of a tiered
+    search (DESIGN.md §9). No ``base`` operand: the scorer must be base-free
+    (``needs_base=False``, i.e. it scores hops off device-resident state such
+    as the PQ code table), so the only device-resident per-index arrays are
+    that state and ``neighbors``. The caller finishes with an exact rerank of
+    ``cand_ids`` against wherever the float rows live (``BaseStore.gather``).
+    Numerics are identical to ``beam_search``'s loop — same ``_init_state`` /
+    ``_step`` bodies, same operands."""
+    sc = get_scorer(scorer)
+    if getattr(sc, "needs_base", True):
+        raise ValueError(
+            f"beam_traverse needs a base-free scorer (got {scorer!r}): the "
+            "float base is not an operand here — use beam_search, or "
+            "scorer='pq'"
+        )
+    if max_steps is None:
+        max_steps = default_max_steps(ef, expand_width)
+    state = _init_state(queries, None, neighbors, entry_ids, ef, metric,
+                        r_tile, scorer, scorer_state)
+
+    def cond(s: _State):
+        return (~s.done.all()) & (s.step < max_steps)
+
+    def body(s: _State):
+        return _step(s, queries, None, neighbors, metric, expand_width,
+                     r_tile, scorer, scorer_state)
+
+    state = jax.lax.while_loop(cond, body, state)
+    return TraverseResult(
+        cand_ids=state.cand_ids,
+        cand_dists=state.cand_dists,
+        n_comps=state.n_comps,
+        n_steps=state.step,
+    )
+
+
+def rerank_slice(ef: int, k: int, rerank: int) -> int:
+    """How many ADC survivors the exact rerank touches — ``_finalize``'s
+    policy (0 = the whole ef list), shared with the tiered host rerank so
+    both placements rerank the SAME survivor set."""
+    return ef if rerank <= 0 else max(k, min(rerank, ef))
 
 
 @functools.partial(

@@ -31,11 +31,15 @@ from typing import NamedTuple, Protocol
 import jax
 import jax.numpy as jnp
 
+from .base_store import BaseStore, check_placement, rerank_gathered
 from .beam_search import (
     SearchResult,
+    TraverseResult,
     beam_search,
+    beam_traverse,
     projection_entries,
     random_entries,
+    rerank_slice,
     search_with_trace,
 )
 from .graph_index import HnswIndex, KnnGraph
@@ -66,10 +70,31 @@ class SearchSpec(NamedTuple):
     pq_m: int = 8               # PQ sub-vectors (bytes/vector of the codes)
     pq_k: int = 256             # PQ codewords per sub-quantizer
     pq_iters: int = 15          # k-means iterations at PQ train time
+    base_placement: str = "device"  # where the float base lives (§9):
+                                # "device" = HBM-resident (status quo);
+                                # "host" = host-resident, device keeps only
+                                # codes + adjacency, rerank gathers from host
 
     @property
     def num_seeds(self) -> int:
         return min(self.n_entries, self.ef)
+
+
+class _HostPending(NamedTuple):
+    """An in-flight host-tier search: traversal done, survivor rows on their
+    way from host memory (async ``device_put``). ``Searcher._host_finish``
+    turns it into a :class:`SearchResult`; holding several of these is how
+    ``search_stream`` pipelines copies against compute."""
+
+    spec: SearchSpec
+    queries: jax.Array
+    trav: TraverseResult
+    cand: jax.Array        # (Q, r) survivor slice the rerank scores
+    rows: jax.Array        # (Q, r, d) gathered float rows (possibly in flight)
+    host_bytes: jax.Array  # (Q,) host traffic this query paid
+    scorer_state: object
+    entry_comps: jax.Array | None
+    d: int
 
 
 class EntryStrategy(Protocol):
@@ -254,6 +279,10 @@ class Searcher:
         # lazily trained tables are cached per (M, K, iters).
         self._pq_attached = pq
         self._pq: dict[tuple, object] = {}
+        # BaseStore per placement (the "host" store is a one-time host copy
+        # of the base; under a true n >> HBM deployment, construct the
+        # Searcher from a host numpy base and the copy is free)
+        self._stores: dict[str, BaseStore] = {}
 
     # -- constructors ---------------------------------------------------------
 
@@ -374,6 +403,70 @@ class Searcher:
         luts = build_adc_luts(queries, idx.codebooks, spec.metric)
         return (idx.codes, luts)
 
+    # -- tiered base (DESIGN.md §9) -------------------------------------------
+
+    def base_store(self, placement: str = "device") -> BaseStore:
+        """The float base behind ``placement``, built once and cached."""
+        check_placement(placement)
+        if placement not in self._stores:
+            self._stores[placement] = BaseStore(self.base, placement)
+        return self._stores[placement]
+
+    def _check_tier(self, spec: SearchSpec) -> None:
+        check_placement(spec.base_placement)
+        if spec.base_placement == "device":
+            return
+        sc = get_scorer(spec.scorer)
+        if getattr(sc, "needs_base", True) or not sc.needs_rerank:
+            raise ValueError(
+                f"base_placement='host' traverses device-resident compressed "
+                f"state and reranks from the host base; scorer="
+                f"{spec.scorer!r} reads the float base per hop — use "
+                f"scorer='pq'"
+            )
+
+    def _host_start(self, queries, spec: SearchSpec,
+                    key: jax.Array | None = None, *,
+                    entries: jax.Array | None = None,
+                    entry_comps: jax.Array | None = None) -> "_HostPending":
+        """Device half of a host-tier search: seed, traverse on the code
+        table, and ISSUE the async host->device gather of the top-``rerank``
+        survivor rows. Returns a pending handle whose copy is in flight —
+        finishing it later (``_host_finish``) lets the next tile's LUT build
+        and traversal overlap the transfer (``search_stream``)."""
+        self._check_metric(spec)
+        self._check_tier(spec)
+        store = self.base_store(spec.base_placement)
+        if entries is None:
+            entries, entry_comps = self.seed(queries, spec, key)
+        state = self.scorer_state(queries, spec)
+        trav = beam_traverse(
+            queries, self.neighbors, entries,
+            ef=spec.ef, metric=spec.metric, max_steps=spec.max_steps,
+            expand_width=spec.expand_width, r_tile=spec.r_tile,
+            scorer=spec.scorer, scorer_state=state,
+        )
+        cand = trav.cand_ids[:, :rerank_slice(spec.ef, spec.k, spec.rerank)]
+        rows, host_bytes = store.gather(cand)
+        return _HostPending(spec=spec, queries=queries, trav=trav, cand=cand,
+                            rows=rows, host_bytes=host_bytes,
+                            scorer_state=state, entry_comps=entry_comps,
+                            d=store.d)
+
+    def _host_finish(self, p: "_HostPending") -> SearchResult:
+        """Exact rerank over the gathered host rows — same survivor slice,
+        same distance formula, same comps bill as the device ``_finalize``,
+        so both placements return identical answers."""
+        dd, ids = rerank_gathered(p.queries, p.cand, p.rows, k=p.spec.k,
+                                  metric=p.spec.metric)
+        sc = get_scorer(p.spec.scorer)
+        n_comps = sc.scale_comps(p.scorer_state, p.trav.n_comps, p.d)
+        n_comps = n_comps + (p.cand >= 0).sum(axis=1, dtype=jnp.int32)
+        if p.entry_comps is not None:
+            n_comps = n_comps + p.entry_comps
+        return SearchResult(ids=ids, dists=dd, n_comps=n_comps,
+                            n_steps=p.trav.n_steps, host_bytes=p.host_bytes)
+
     # -- search ---------------------------------------------------------------
 
     def search(self, queries, spec: SearchSpec, key: jax.Array | None = None,
@@ -384,6 +477,10 @@ class Searcher:
         Passing ``entries``/``entry_comps`` lets benchmarks time the beam
         core separately from seed generation."""
         self._check_metric(spec)
+        if spec.base_placement != "device":
+            return self._host_finish(self._host_start(
+                queries, spec, key, entries=entries, entry_comps=entry_comps
+            ))
         if entries is None:
             entries, entry_comps = self.seed(queries, spec, key)
         res = beam_search(
@@ -409,7 +506,13 @@ class Searcher:
         Per-tile seeding keys are folded from ``key``, so key-deterministic
         strategies (projection / hierarchy / lsh) return exactly what
         :meth:`search` would; ``random`` draws per-tile seeds.
-        ``n_steps`` sums the tiles' sequential loop iterations."""
+        ``n_steps`` sums the tiles' sequential loop iterations.
+
+        Under ``base_placement='host'`` the tiles pipeline against the
+        host->device rerank traffic: tile i's survivor-row copy is issued
+        asynchronously, tile i+1 seeds / builds its LUTs / traverses while
+        that copy is in flight, and only then is tile i's rerank finished —
+        the §9 prefetch overlap."""
         self._check_metric(spec)
         Q = queries.shape[0]
         if Q <= tile_q:
@@ -419,8 +522,20 @@ class Searcher:
         self.prepare(spec)  # strategy state built once, outside the loop
         if spec.scorer == "pq":
             self.pq_index(spec)  # code table trained once, outside the loop
-        ids, dists, comps = [], [], []
+        tiered = spec.base_placement != "device"
+        ids, dists, comps, hbytes = [], [], [], []
         n_steps = jnp.int32(0)
+        pending: tuple[_HostPending, int] | None = None
+
+        def finish(p: _HostPending, take: int):
+            nonlocal n_steps
+            res = self._host_finish(p)
+            ids.append(res.ids[:take])
+            dists.append(res.dists[:take])
+            comps.append(res.n_comps[:take])
+            hbytes.append(res.host_bytes[:take])
+            n_steps = n_steps + res.n_steps
+
         for i, lo in enumerate(range(0, Q, tile_q)):
             tile = queries[lo:lo + tile_q]
             pad = tile_q - tile.shape[0]
@@ -428,17 +543,27 @@ class Searcher:
                 tile = jnp.concatenate(
                     [tile, jnp.broadcast_to(tile[-1:], (pad, tile.shape[1]))]
                 )
-            res = self.search(tile, spec, jax.random.fold_in(key, i))
             take = tile_q - pad
+            kt = jax.random.fold_in(key, i)
+            if tiered:
+                p = self._host_start(tile, spec, kt)  # copy now in flight
+                if pending is not None:
+                    finish(*pending)  # previous tile, its copy long overlapped
+                pending = (p, take)
+                continue
+            res = self.search(tile, spec, kt)
             ids.append(res.ids[:take])
             dists.append(res.dists[:take])
             comps.append(res.n_comps[:take])
             n_steps = n_steps + res.n_steps
+        if pending is not None:
+            finish(*pending)
         return SearchResult(
             ids=jnp.concatenate(ids),
             dists=jnp.concatenate(dists),
             n_comps=jnp.concatenate(comps),
             n_steps=n_steps,
+            host_bytes=jnp.concatenate(hbytes) if tiered else 0,
         )
 
     def search_with_trace(self, queries, spec: SearchSpec,
@@ -447,6 +572,12 @@ class Searcher:
         """Fig. 6 instrumentation through the same seeding path.
         ``spec.max_steps`` (when set) overrides ``max_steps``; when both are
         unset the core's expand_width-aware default applies."""
+        if spec.base_placement != "device":
+            # the fixed-step scan reranks inside jit — instrumentation is a
+            # device-resident tool; tiered runs trace with placement="device"
+            raise ValueError(
+                "search_with_trace requires base_placement='device'"
+            )
         ent, extra = self.seed(queries, spec, key)
         if spec.max_steps is not None:
             max_steps = spec.max_steps
@@ -492,6 +623,12 @@ def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
     (e.g. its local PQ codes + the batch LUTs); the rerank inside
     ``beam_search`` runs against the local base, so merged distances are
     exact regardless of scorer."""
+    if spec.base_placement != "device":
+        raise ValueError(
+            "shard_search reranks in-shard against a device-resident base; "
+            "for base_placement='host' use shard_traverse + the caller-side "
+            "host rerank (distributed_search(base_placement='host'))"
+        )
     res = beam_search(
         queries, base, neighbors, entries,
         ef=spec.ef, k=spec.k, metric=spec.metric,
@@ -514,6 +651,35 @@ def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
     return md, mi, comps
 
 
+def shard_traverse(queries, neighbors, entries, live, *, spec: SearchSpec,
+                   axis: str, per: int, r: int, scorer_state):
+    """Per-shard body for the HOST-TIER distributed path (DESIGN.md §9):
+    traverse on the shard's device-resident code table only (no float base
+    operand at all), globalize the top-``r`` ADC survivors, and all-gather
+    them — the exact rerank runs OUTSIDE shard_map against the host
+    :class:`~repro.core.base_store.BaseStore`, which holds the one global
+    float base no shard could fit.
+
+    Returns ((Q, P*r) replicated global survivor ids, (Q,) psum'd RAW
+    scored-id counts — the caller scales them to the paper's currency once
+    it knows the store's d)."""
+    trav = beam_traverse(
+        queries, neighbors, entries,
+        ef=spec.ef, metric=spec.metric, max_steps=spec.max_steps,
+        expand_width=spec.expand_width, r_tile=spec.r_tile,
+        scorer=spec.scorer, scorer_state=scorer_state,
+    )
+    sid = jax.lax.axis_index(axis)
+    gids = globalize_ids(trav.cand_ids[:, :r], sid, per)
+    gids = jnp.where(live, gids, INVALID)  # dead shard -> no survivors
+    all_i = jax.lax.all_gather(gids, axis)               # (P, Q, r) — tiny
+    Pn = all_i.shape[0]
+    Q = queries.shape[0]
+    flat_i = all_i.transpose(1, 0, 2).reshape(Q, Pn * r)
+    comps = jax.lax.psum(jnp.where(live, trav.n_comps, 0), axis)
+    return flat_i, comps
+
+
 def emulated_shard_search(queries, base_shards, nbr_shards, entries, live,
                           spec: SearchSpec, scorer_states=None):
     """Host-side loop with identical semantics to ``shard_search`` for runs
@@ -521,6 +687,12 @@ def emulated_shard_search(queries, base_shards, nbr_shards, entries, live,
     ``scorer_states`` (optional) is a per-shard list of scorer operands.
 
     Returns (dists (Q, k), global ids (Q, k))."""
+    if spec.base_placement != "device":
+        raise ValueError(
+            "emulated_shard_search reranks in-shard against device-resident "
+            "base shards; the host tier goes through "
+            "distributed_search(base_placement='host')"
+        )
     per = base_shards.shape[1]
     all_d, all_i = [], []
     for s in range(base_shards.shape[0]):

@@ -19,9 +19,13 @@ Orthogonal to the entry-strategy axis: any seeder composes with any scorer.
   comparison per reranked candidate (the paper's currency, matching the
   linear-scan PQ baseline's accounting).
 
-A scorer is (name, needs_rerank, score, scale_comps); ``state`` is the
-per-batch pytree the engine built (``Searcher.scorer_state``) and travels
-through jit/shard_map as an operand while ``name`` is the static cache key.
+A scorer is (name, needs_rerank, needs_base, score, scale_comps); ``state``
+is the per-batch pytree the engine built (``Searcher.scorer_state``) and
+travels through jit/shard_map as an operand while ``name`` is the static
+cache key. ``needs_base`` declares whether ``score`` reads the float base
+per hop: base-free scorers (pq) are the ones ``base_placement='host'`` can
+traverse with — the float rows then never enter device memory until the
+rerank tail gathers the survivors (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -31,6 +35,9 @@ from typing import Protocol
 class Scorer(Protocol):
     name: str
     needs_rerank: bool
+    # True when score() dereferences the float base per hop; False means the
+    # traversal can run with base=None (host-tier placement, beam_traverse)
+    needs_base: bool
 
     def score(self, state, queries, base, ids, visited, *, metric: str,
               r_tile: int):
@@ -68,6 +75,7 @@ def register_scorer(scorer) -> Scorer:
 class _ExactScorer:
     name = "exact"
     needs_rerank = False
+    needs_base = True
 
     def score(self, state, queries, base, ids, visited, *, metric, r_tile):
         from repro.kernels import ops
@@ -84,6 +92,7 @@ class _ExactScorer:
 class _PQScorer:
     name = "pq"
     needs_rerank = True
+    needs_base = False  # ADC reads codes from scorer_state, never the base
 
     def score(self, state, queries, base, ids, visited, *, metric, r_tile):
         from repro.kernels import ops

@@ -23,6 +23,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.distributed._compat import shard_map
 
 from repro.core import engine
+from repro.core.base_store import BaseStore, check_placement, rerank_gathered
+from repro.core.beam_search import rerank_slice
 from repro.core.engine import SearchSpec
 
 
@@ -87,14 +89,10 @@ def shard_pq(base_shards: jax.Array, M: int = 8, K: int = 256,
     return jnp.stack(cbs), jnp.stack(codes)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("ef", "k", "metric", "mesh", "axis", "expand_width",
-                     "r_tile", "scorer", "rerank"),
-)
 def distributed_search(
     queries: jax.Array,       # (Q, d) replicated
-    base_shards: jax.Array,   # (P, n/P, d) sharded on axis 0
+    base_shards: jax.Array,   # (P, n/P, d) sharded on axis 0 (device tier);
+                              # ignored under base_placement="host"
     nbr_shards: jax.Array,    # (P, n/P, R) sharded on axis 0
     entry_ids: jax.Array,     # (P, Q, E) local entries per shard
     live_mask: jax.Array,     # (P,) bool — False = failed/straggler shard
@@ -110,6 +108,8 @@ def distributed_search(
     rerank: int = 0,
     pq_codebooks: jax.Array | None = None,  # (P, M, K, dsub), scorer="pq"
     pq_codes: jax.Array | None = None,      # (P, n/P, M) uint8, scorer="pq"
+    base_placement: str = "device",
+    host_base=None,           # (n, d) host array / BaseStore, placement="host"
 ):
     """Shard-and-merge search: each shard runs the SAME SearchEngine beam core
     (``engine.shard_search``); this wrapper only binds the mesh layout.
@@ -118,7 +118,100 @@ def distributed_search(
     the ADC LUTs are built inside the shard body from the replicated queries
     and the shard's own codebooks, and the in-shard exact rerank restores
     exact distances before the cross-shard merge — so the merge compares the
-    same currency as the exact path."""
+    same currency as the exact path.
+
+    base_placement="host" (DESIGN.md §9) drops the float shards from device
+    memory entirely: the shard bodies traverse codes only and all-gather
+    their top-``rerank`` ADC survivors (``engine.shard_traverse``), then the
+    exact rerank + merge runs HERE, outside shard_map, against the one
+    host-resident ``host_base`` — the merge currency is still exact
+    distances, now paid for with host-gather bytes instead of per-shard HBM
+    residency."""
+    if base_placement == "device":
+        return _distributed_search_device(
+            queries, base_shards, nbr_shards, entry_ids, live_mask,
+            ef=ef, k=k, metric=metric, mesh=mesh, axis=axis,
+            expand_width=expand_width, r_tile=r_tile, scorer=scorer,
+            rerank=rerank, pq_codebooks=pq_codebooks, pq_codes=pq_codes,
+        )
+    check_placement(base_placement)
+    if pq_codebooks is None or pq_codes is None:
+        raise ValueError("base_placement='host' traverses per-shard code "
+                         "tables: pass scorer='pq' with pq_codebooks/"
+                         "pq_codes (see shard_pq)")
+    if host_base is None:
+        raise ValueError("base_placement='host' needs host_base= (the "
+                         "global float base, host-resident)")
+    store = BaseStore.wrap(host_base, "host")
+    spec = SearchSpec(ef=ef, k=k, metric=metric, expand_width=expand_width,
+                      r_tile=r_tile, scorer=scorer, rerank=rerank,
+                      base_placement=base_placement)
+    r = rerank_slice(ef, k, rerank)
+    flat_i, raw_comps = _distributed_traverse(
+        queries, nbr_shards, entry_ids, live_mask, pq_codebooks, pq_codes,
+        spec=spec, mesh=mesh, axis=axis, r=r,
+    )
+    rows, _ = store.gather(flat_i)          # async host->device, (Q, P*r, d)
+    md, mi = rerank_gathered(queries, flat_i, rows, k=k, metric=metric)
+    M = pq_codes.shape[2]
+    comps = (raw_comps * M) // store.d      # ADC hops at M/d of a comparison
+    comps = comps + (flat_i >= 0).sum(axis=1, dtype=jnp.int32)
+    return md, mi, comps
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "mesh", "axis", "r"),
+)
+def _distributed_traverse(queries, nbr_shards, entry_ids, live_mask,
+                          pq_codebooks, pq_codes, *, spec: SearchSpec,
+                          mesh: Mesh, axis: str, r: int):
+    """shard_map half of the host-tier path: code-only traversal per shard,
+    replicated (Q, P*r) global survivor ids + raw scored-id counts out."""
+    from repro.baselines.pq import build_adc_luts
+
+    per = nbr_shards.shape[1]
+
+    def local(qs, nb, ent, live, cb, cd):
+        luts = build_adc_luts(qs, cb[0], spec.metric)
+        return engine.shard_traverse(
+            qs, nb[0], ent[0], live[0], spec=spec, axis=axis, per=per, r=r,
+            scorer_state=(cd[0], luts),
+        )
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )(queries, nbr_shards, entry_ids, live_mask, pq_codebooks, pq_codes)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ef", "k", "metric", "mesh", "axis", "expand_width",
+                     "r_tile", "scorer", "rerank"),
+)
+def _distributed_search_device(
+    queries: jax.Array,
+    base_shards: jax.Array,
+    nbr_shards: jax.Array,
+    entry_ids: jax.Array,
+    live_mask: jax.Array,
+    *,
+    ef: int,
+    k: int,
+    metric: str = "l2",
+    mesh: Mesh,
+    axis: str = "shards",
+    expand_width: int = 1,
+    r_tile: int = 0,
+    scorer: str = "exact",
+    rerank: int = 0,
+    pq_codebooks: jax.Array | None = None,
+    pq_codes: jax.Array | None = None,
+):
     per = base_shards.shape[1]
     spec = SearchSpec(ef=ef, k=k, metric=metric, expand_width=expand_width,
                       r_tile=r_tile, scorer=scorer, rerank=rerank)

@@ -74,7 +74,17 @@ def serve_ann(args) -> None:
 
     spec = SearchSpec(ef=args.ef, k=args.topk, metric=searcher.metric,
                       entry=args.entry, r_tile=args.r_tile,
-                      scorer=args.scorer, pq_m=args.pq_m, rerank=args.rerank)
+                      scorer=args.scorer, pq_m=args.pq_m, rerank=args.rerank,
+                      base_placement=args.base_placement)
+    if args.base_placement == "host" and args.scorer != "pq":
+        raise SystemExit("--base-placement host traverses device-resident "
+                         "PQ codes; add --scorer pq")
+    if args.base_placement == "host":
+        # the float base moves to host up front; from here the device only
+        # ever sees the code table, the adjacency, and per-batch rerank rows
+        store = searcher.base_store("host")
+        print(f"[serve-ann] base host-resident: {store.nbytes / 2**20:.1f} "
+              f"MiB off-device; device keeps codes + adjacency")
     if args.scorer == "pq":
         # loaded indexes train their code table here (build-path engines
         # already attached one via with_pq); either way serving never trains
@@ -120,6 +130,13 @@ def serve_ann(args) -> None:
           f"mode={mode}: {served} queries in {dt*1e3:.0f} ms "
           f"({served/dt:.0f} qps), recall@1={recall:.3f}, "
           f"comps/query={comps:.0f}")
+    if args.base_placement == "host":
+        store = searcher.base_store("host")
+        print(f"[serve-ann] host tier: "
+              f"{store.gathered_bytes / max(served, 1) / 1024:.1f} KiB "
+              f"host-gathered/query ({store.gathered_rows} rerank rows "
+              f"total) vs {store.nbytes / 2**20:.1f} MiB base kept "
+              f"off-device")
 
 
 def main() -> None:
@@ -151,6 +168,11 @@ def main() -> None:
     ap.add_argument("--stream-tile", type=int, default=0,
                     help="[ann] split batches into this many queries per "
                          "streamed tile (0 = one monolithic search per batch)")
+    ap.add_argument("--base-placement", default="device",
+                    choices=["device", "host"],
+                    help="[ann] where the float base lives (DESIGN.md §9): "
+                         "host keeps only PQ codes + adjacency on device and "
+                         "gathers rerank rows from host (needs --scorer pq)")
     args = ap.parse_args()
 
     if args.arch == "ann":

@@ -9,8 +9,17 @@ Only rerun this when search semantics change ON PURPOSE (e.g. the PR 2
 ``random_entries`` rework from a per-query permutation to a with-replacement
 draw); note every regeneration in CHANGES.md. The world below must stay in
 lock-step with the ``world`` fixture in tests/test_engine.py.
+
+``--check`` regenerates into a temp file and diffs it against the committed
+golden instead of overwriting — the CI golden-drift guard: if the generator
+and the committed fixture disagree (silent seed skew, a semantics change
+that forgot to regenerate, a stale generator), it fails with the first
+divergent array named.
 """
+import argparse
 import os
+import sys
+import tempfile
 
 import jax
 import numpy as np
@@ -20,7 +29,7 @@ from repro.core import diversify, hnsw, nndescent
 OUT = os.path.join(os.path.dirname(__file__), "golden_engine.npz")
 
 
-def main() -> None:
+def generate(out: str) -> None:
     key = jax.random.PRNGKey(42)
     base = jax.random.uniform(key, (2000, 16))
     queries = jax.random.uniform(jax.random.fold_in(key, 1), (32, 16))
@@ -50,7 +59,7 @@ def main() -> None:
                    pq_k=64),
     )
     np.savez(
-        OUT,
+        out,
         flat_ids=np.asarray(flat.ids),
         flat_dists=np.asarray(flat.dists),
         flat_comps=np.asarray(flat.n_comps),
@@ -61,9 +70,64 @@ def main() -> None:
         pq_dists=np.asarray(pq.dists),
         pq_comps=np.asarray(pq.n_comps),
     )
-    print(f"wrote {OUT}: flat comps mean={float(flat.n_comps.mean()):.1f}, "
+    print(f"wrote {out}: flat comps mean={float(flat.n_comps.mean()):.1f}, "
           f"hier comps mean={float(hier.n_comps.mean()):.1f}, "
           f"pq comps mean={float(pq.n_comps.mean()):.1f}")
+
+
+def diff_golden(fresh_path: str, committed_path: str = OUT) -> list[str]:
+    """Array-by-array comparison; returns human-readable divergences."""
+    fresh = np.load(fresh_path)
+    committed = np.load(committed_path)
+    problems = []
+    for name in sorted(set(fresh.files) | set(committed.files)):
+        if name not in committed.files:
+            problems.append(f"{name}: in regenerated output but not in the "
+                            f"committed golden")
+            continue
+        if name not in fresh.files:
+            problems.append(f"{name}: committed but no longer generated")
+            continue
+        a, b = committed[name], fresh[name]
+        if a.shape != b.shape or a.dtype != b.dtype:
+            problems.append(f"{name}: committed {a.dtype}{a.shape} vs "
+                            f"regenerated {b.dtype}{b.shape}")
+        elif not np.array_equal(a, b):
+            i = np.argwhere(a != b)[0]
+            problems.append(
+                f"{name}: first divergence at {tuple(int(v) for v in i)} "
+                f"(committed {a[tuple(i)]!r} vs regenerated {b[tuple(i)]!r})"
+            )
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=OUT,
+                    help="where to write the regenerated golden")
+    ap.add_argument("--check", action="store_true",
+                    help="regenerate into a temp file and fail (exit 1) if "
+                         "it diverges from the committed golden — the CI "
+                         "drift guard; never overwrites")
+    args = ap.parse_args()
+    if not args.check:
+        generate(args.out)
+        return
+    with tempfile.TemporaryDirectory() as td:
+        fresh = os.path.join(td, "golden_engine.npz")
+        generate(fresh)
+        problems = diff_golden(fresh)
+    if problems:
+        print("[golden-drift] committed golden_engine.npz diverges from a "
+              "fresh regeneration:")
+        for p in problems:
+            print(f"[golden-drift]   {p}")
+        print("[golden-drift] either a semantics change forgot to "
+              "regenerate the golden (do it ON PURPOSE and note it in "
+              "CHANGES.md) or the generator drifted")
+        sys.exit(1)
+    print("[golden-drift] OK: regeneration is bit-identical to the "
+          "committed golden")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,151 @@
+"""Tiered base store (DESIGN.md §9): placement parity, host-gather
+accounting, and the streaming prefetch pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bruteforce, diversify
+from repro.core.base_store import BaseStore, check_placement, rerank_gathered
+from repro.core.beam_search import INVALID, beam_traverse
+from repro.core.engine import Searcher, SearchSpec
+
+PQ = dict(scorer="pq", pq_m=8, pq_k=64)
+
+
+@pytest.fixture(scope="module")
+def world():
+    key = jax.random.PRNGKey(17)
+    base = jax.random.uniform(key, (1500, 16))
+    queries = jax.random.uniform(jax.random.fold_in(key, 1), (24, 16))
+    g = bruteforce.exact_knn_graph(base, 16)
+    gd = diversify.build_gd_graph(base, g)
+    gt = bruteforce.ground_truth(queries, base, 1)
+    return base, queries, gd, gt
+
+
+def test_placement_validation(world):
+    base, *_ = world
+    with pytest.raises(ValueError, match="base_placement"):
+        check_placement("disk")
+    host = BaseStore(base, "host")
+    with pytest.raises(ValueError, match="host-resident"):
+        host.device_view()
+    with pytest.raises(ValueError, match="placement"):
+        BaseStore.wrap(host, "device")
+    assert BaseStore.wrap(host, "host") is host
+
+
+def test_gather_parity_and_accounting(world):
+    """Host and device stores return identical rows; only the host store
+    bills host traffic, at 4d bytes per VALID id."""
+    base, *_ = world
+    dev = BaseStore(base, "device")
+    host = BaseStore(base, "host")
+    ids = jnp.asarray([[0, 3, INVALID, 7], [9, INVALID, INVALID, 2]],
+                      jnp.int32)
+    r_dev, b_dev = dev.gather(ids)
+    r_host, b_host = host.gather(ids)
+    np.testing.assert_array_equal(np.asarray(r_dev), np.asarray(r_host))
+    np.testing.assert_array_equal(np.asarray(b_dev), [0, 0])
+    np.testing.assert_array_equal(np.asarray(b_host),
+                                  [3 * host.row_bytes, 2 * host.row_bytes])
+    assert host.gathered_rows == 5
+    assert host.gathered_bytes == 5 * host.row_bytes
+    assert dev.gathered_bytes == 0
+
+
+def test_host_search_matches_device_exactly(world):
+    """The acceptance bar: same survivors -> same rerank. ids, dists AND the
+    comps bill are bit-identical across placements; only the host run pays
+    host-gather bytes."""
+    base, queries, gd, _ = world
+    s = Searcher.from_graph(base, gd, key=jax.random.PRNGKey(2))
+    spec = SearchSpec(ef=32, k=4, entry="projection", **PQ)
+    dev = s.search(queries, spec)
+    host = s.search(queries, spec._replace(base_placement="host"))
+    np.testing.assert_array_equal(np.asarray(dev.ids), np.asarray(host.ids))
+    np.testing.assert_array_equal(np.asarray(dev.dists),
+                                  np.asarray(host.dists))
+    np.testing.assert_array_equal(np.asarray(dev.n_comps),
+                                  np.asarray(host.n_comps))
+    assert dev.host_bytes == 0
+    # all ef survivors reranked at 4d bytes each (rerank=0 -> whole list)
+    np.testing.assert_array_equal(np.asarray(host.host_bytes),
+                                  np.full(queries.shape[0], 32 * 16 * 4))
+
+
+def test_host_requires_base_free_scorer(world):
+    base, queries, gd, _ = world
+    s = Searcher.from_graph(base, gd)
+    with pytest.raises(ValueError, match="scorer"):
+        s.search(queries, SearchSpec(ef=16, base_placement="host"))
+    with pytest.raises(ValueError, match="base_placement"):
+        s.search(queries, SearchSpec(ef=16, base_placement="disk", **PQ))
+    with pytest.raises(ValueError, match="device"):
+        s.search_with_trace(
+            queries, SearchSpec(ef=16, base_placement="host", **PQ)
+        )
+
+
+def test_beam_traverse_rejects_base_bound_scorer(world):
+    base, queries, gd, _ = world
+    ent = jnp.zeros((queries.shape[0], 1), jnp.int32)
+    with pytest.raises(ValueError, match="base-free"):
+        beam_traverse(queries, gd.neighbors, ent, ef=8, scorer="exact")
+
+
+def test_host_stream_pipeline_matches_monolithic(world):
+    """The §9 prefetch pipeline (tile i's host rows in flight while tile i+1
+    builds LUTs and traverses) is a throughput choice, not a semantic one —
+    including the per-query host-traffic bill."""
+    base, queries, gd, _ = world
+    s = Searcher.from_graph(base, gd, key=jax.random.PRNGKey(2))
+    spec = SearchSpec(ef=32, k=2, entry="projection", base_placement="host",
+                      **PQ)
+    mono = s.search(queries, spec)
+    # tile_q=10 forces ragged last-tile padding (24 = 2*10 + 4)
+    stream = s.search_stream(queries, spec, tile_q=10)
+    np.testing.assert_array_equal(np.asarray(mono.ids),
+                                  np.asarray(stream.ids))
+    np.testing.assert_array_equal(np.asarray(mono.dists),
+                                  np.asarray(stream.dists))
+    np.testing.assert_array_equal(np.asarray(mono.n_comps),
+                                  np.asarray(stream.n_comps))
+    np.testing.assert_array_equal(np.asarray(mono.host_bytes),
+                                  np.asarray(stream.host_bytes))
+
+
+def test_rerank_budget_bounds_host_traffic(world):
+    """spec.rerank caps the survivor slice, and with it the host bytes per
+    query — the knob that trades recall headroom for host bandwidth."""
+    base, queries, gd, gt = world
+    s = Searcher.from_graph(base, gd, key=jax.random.PRNGKey(2))
+    full = s.search(queries, SearchSpec(ef=48, k=1, entry="projection",
+                                        base_placement="host", **PQ))
+    lean = s.search(queries, SearchSpec(ef=48, k=1, entry="projection",
+                                        base_placement="host", rerank=8,
+                                        **PQ))
+    assert int(lean.host_bytes.max()) == 8 * 16 * 4
+    assert int(lean.host_bytes.sum()) < int(full.host_bytes.sum())
+    assert float((lean.ids[:, 0] == gt[:, 0]).mean()) >= 0.9
+    # the searcher-level store totals accumulated both runs
+    st = s.base_store("host")
+    assert st.gathered_bytes == int(full.host_bytes.sum() +
+                                    lean.host_bytes.sum())
+
+
+def test_rerank_gathered_matches_bruteforce(world):
+    """The host rerank helper reproduces exact distances (ref formula) and
+    sends INVALID survivors to the bottom."""
+    base, queries, _, _ = world
+    cand = jnp.asarray(
+        np.r_[np.arange(7), [INVALID]][None].repeat(queries.shape[0], 0),
+        jnp.int32,
+    )
+    store = BaseStore(base, "host")
+    rows, _ = store.gather(cand)
+    dd, ii = rerank_gathered(queries, cand, rows, k=3, metric="l2")
+    ref = np.asarray(bruteforce.ground_truth(queries, base[:7], 3))
+    np.testing.assert_array_equal(np.asarray(ii), ref)
+    assert np.isfinite(np.asarray(dd)).all()

@@ -85,6 +85,41 @@ def test_distributed_search_pq_scorer(ann_world):
         )
 
 
+def test_distributed_search_host_tier(ann_world):
+    """base_placement='host' through the shard_map path (DESIGN.md §9): the
+    shard bodies traverse code tables only (no float shards on device), the
+    rerank runs outside shard_map against the one host-resident base — and
+    the answers match the device-tier pq run exactly (same survivors, same
+    exact rerank)."""
+    from repro.distributed.sharded_ann import shard_pq
+
+    base, queries, nbrs, gt = ann_world
+    mesh = make_flat_mesh()
+    P = mesh.devices.size  # 1 on CI
+    bs, ns = shard_graph(base, nbrs, P, rebuild=(P > 1))
+    cbs, codes = shard_pq(bs, M=8, K=64, key=jax.random.PRNGKey(5))
+    key = jax.random.PRNGKey(3)
+    ent = jax.random.randint(key, (P, 50, 8), 0, bs.shape[1], dtype=jnp.int32)
+    live = jnp.ones((P,), bool)
+    kw = dict(ef=48, k=1, mesh=mesh, axis=mesh.axis_names[0], scorer="pq",
+              pq_codebooks=cbs, pq_codes=codes)
+    d_dev, i_dev, c_dev = distributed_search(queries, bs, ns, ent, live, **kw)
+    d_host, i_host, c_host = distributed_search(
+        queries, None, ns, ent, live, base_placement="host",
+        host_base=np.asarray(base), **kw,
+    )
+    np.testing.assert_array_equal(np.asarray(i_dev), np.asarray(i_host))
+    np.testing.assert_allclose(np.asarray(d_dev), np.asarray(d_host),
+                               rtol=1e-5, atol=1e-6)
+    # comps: device scales M/d per shard before the psum, host scales the
+    # psum'd total — floor division may differ by < 1 per shard
+    np.testing.assert_allclose(np.asarray(c_dev), np.asarray(c_host),
+                               atol=float(P))
+    with pytest.raises(ValueError, match="host_base"):
+        distributed_search(queries, None, ns, ent, live,
+                           base_placement="host", **kw)
+
+
 def test_shard_dropout_degrades_not_fails(ann_world):
     """Straggler/failure policy: masking shards lowers recall proportionally
     but the merged answer stays valid (emulated multi-shard merge)."""

@@ -331,6 +331,25 @@ def test_pq_search_matches_golden(world):
     np.testing.assert_array_equal(np.asarray(res.n_comps), gold["pq_comps"])
 
 
+def test_host_placement_matches_golden(world):
+    """base_placement='host' reruns the golden pq world off a host-resident
+    base and must land on the committed pq_* outputs bit-for-bit — the
+    tiered rerank is the same survivors, same distance formula, same bill
+    (DESIGN.md §9)."""
+    base, queries, gd, idx, _ = world
+    gold = np.load(GOLDEN)
+    searcher = Searcher.from_graph(base, gd, key=jax.random.PRNGKey(7))
+    res = searcher.search(
+        queries,
+        SearchSpec(ef=32, k=4, entry="projection", base_placement="host",
+                   **PQ_TEST_SPEC),
+    )
+    np.testing.assert_array_equal(np.asarray(res.ids), gold["pq_ids"])
+    np.testing.assert_array_equal(np.asarray(res.dists), gold["pq_dists"])
+    np.testing.assert_array_equal(np.asarray(res.n_comps), gold["pq_comps"])
+    assert int(res.host_bytes.min()) > 0
+
+
 def test_unknown_scorer_raises(world):
     base, queries, gd, idx, _ = world
     searcher = Searcher.from_graph(base, gd)
