@@ -2,9 +2,11 @@
 
 Compares a freshly produced benchmark report against the committed baseline
 and fails when the beam core slows down by more than the allowed ratio, when
-any entry strategy's recall@1 drops, or when its comps/query grows — the
-committed file is the perf trajectory; regressions must be deliberate (update
-the baseline in the same PR and say why in CHANGES.md).
+any entry strategy's recall@1 drops, when its comps/query grows, or — the
+build side of the trajectory — when a ``build_sweep`` row's wall-clock
+regresses past the same ratio or its graph-recall proxy drops: the committed
+file is the perf trajectory; regressions must be deliberate (update the
+baseline in the same PR and say why in CHANGES.md).
 
 Missing keys are violations with a named diff (which metric, which side,
 what the other side reported) — never a bare KeyError: a half-written
@@ -203,6 +205,39 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
                     f"{tag}: {sc}_comps_per_query {b_cmp} -> {f_cmp} "
                     f"(allowed <= {b_cmp * max_comps_ratio:.1f})"
                 )
+    # build sweep rows (matched by (construct, diversify)): build wall-clock
+    # guarded with the beam-wall policy (the build side of the perf
+    # trajectory — a >25% slower NN-Descent/prune is a regression like a
+    # slower beam core), graph-recall proxy and search recall with the
+    # recall policy
+    fresh_build = {(r.get("construct"), r.get("diversify")): r
+                   for r in fresh.get("build_sweep", [])}
+    for b in baseline.get("build_sweep", []):
+        f = fresh_build.get((b.get("construct"), b.get("diversify")))
+        tag = f"build_sweep[{b.get('construct')}·{b.get('diversify')}]"
+        if f is None:
+            violations.append(f"{tag} missing from fresh report")
+            continue
+        b_wall, f_wall = _pair(b, f, "build_wall_ms", tag, violations)
+        b_px, f_px = _pair(b, f, "graph_recall_proxy", tag, violations)
+        b_rec, f_rec = _pair(b, f, "recall_at_1", tag, violations)
+        out(f"[perf-guard] {tag}: wall {b_wall} -> {f_wall}, "
+            f"proxy {b_px} -> {f_px}, recall {b_rec} -> {f_rec}")
+        if b_wall is not None and f_wall > b_wall * max_wall_ratio:
+            violations.append(
+                f"{tag}: build_wall_ms regressed "
+                f">{(max_wall_ratio-1)*100:.0f}%: {b_wall} -> {f_wall}"
+            )
+        if b_px is not None and f_px < b_px - max_recall_drop:
+            violations.append(
+                f"{tag}: graph_recall_proxy {b_px} -> {f_px} "
+                f"(allowed drop {max_recall_drop})"
+            )
+        if b_rec is not None and f_rec < b_rec - max_recall_drop:
+            violations.append(
+                f"{tag}: recall_at_1 {b_rec} -> {f_rec} "
+                f"(allowed drop {max_recall_drop})"
+            )
     # host-tier sweep: internal invariants on every fresh row (large-n
     # nightly rows have no baseline twin), plus recall drop vs the baseline
     # rows that do exist (matched by n)

@@ -41,6 +41,23 @@ PQ_SWEEP = [(16, 8), (64, 8), (128, 16)]
 HOST_TIER_D = 16
 HOST_TIER_M = 8
 
+# Build sweep (DESIGN.md §10): construct × diversify over the MAIN world
+# (same base/queries/gt so the search-recall column is comparable across
+# rows) — the paper's Fig. 4/5 axis: flat construct + diversification vs
+# the hierarchy, now swept through one BuildSpec per row. All rows search
+# with the same random-entry spec: the contrast is pure build choice.
+BUILD_SWEEP = [
+    ("exact", "none"),
+    ("exact", "gd"),
+    ("exact", "dpg"),
+    ("nndescent", "gd"),
+    ("nndescent", "dpg"),
+    ("hnsw", "none"),
+]
+BUILD_SWEEP_K = 16       # raw degree out of the construct stage
+BUILD_SWEEP_ROUNDS = 8   # NN-Descent budget (the smoke world converges well
+                         # before; the report's `rounds` column shows it)
+
 
 def _build_graph(base, key):
     """Exact k-NN graph below the brute-force knee, NN-Descent above it —
@@ -127,6 +144,49 @@ def _host_tier_sweep(key, ns, q, ef, out, main_world=None) -> list[dict]:
             f"{row['host_kib_per_query']:.1f} KiB host/query, "
             f"device {row['device_float_mb']:.1f}->"
             f"{row['device_resident_mb']:.1f} MB")
+    return rows
+
+
+def _build_sweep(base, queries, gt, ef: int, key, out) -> list[dict]:
+    """One BuildSpec per (construct, diversify) row, all over the main
+    world: build wall (per stage), graph-recall proxy, realized degree,
+    dropped reverse edges, memory, then search recall/comps at a fixed
+    random-entry spec — the build-side perf trajectory check_regression
+    guards (wall, proxy, recall)."""
+    from repro.core.build import BuildSpec, GraphBuilder
+
+    rows = []
+    for construct, diversify in BUILD_SWEEP:
+        spec = BuildSpec(construct=construct, diversify=diversify,
+                         graph_k=BUILD_SWEEP_K, nd_rounds=BUILD_SWEEP_ROUNDS)
+        res = GraphBuilder(spec).build(base, key=key)
+        rep = res.report
+        s = Searcher.from_build(base, res, key=key)
+        sres = s.search(queries, SearchSpec(ef=ef, k=1, entry="random"))
+        row = {
+            "construct": construct,
+            "diversify": diversify,
+            "build_wall_ms": round(rep.wall_total_s * 1e3, 1),
+            "construct_wall_ms": round(rep.wall_construct_s * 1e3, 1),
+            "diversify_wall_ms": round(rep.wall_diversify_s * 1e3, 1),
+            "rounds": rep.rounds,
+            "graph_recall_proxy": rep.graph_recall_proxy,
+            "degree_mean": rep.degree["mean"],
+            "degree_max": rep.degree["max"],
+            "dropped_reverse_edges": rep.dropped_reverse_edges,
+            "memory_mb": round(rep.memory_bytes / 2**20, 2),
+            "recall_at_1": round(
+                float((sres.ids[:, 0] == gt[:, 0]).mean()), 4),
+            "comps_per_query": round(float(sres.n_comps.mean()), 1),
+        }
+        rows.append(row)
+        out(f"smoke/build {construct}·{diversify}: "
+            f"wall={row['build_wall_ms']:.0f}ms "
+            f"proxy={row['graph_recall_proxy']:.3f} "
+            f"deg={row['degree_mean']:.1f}/{row['degree_max']} "
+            f"dropped={row['dropped_reverse_edges']} "
+            f"recall={row['recall_at_1']:.3f} "
+            f"comps={row['comps_per_query']:.0f}")
     return rows
 
 
@@ -251,6 +311,11 @@ def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
 
     # exact-vs-pq recall/comps/memory across d — DESIGN.md §8
     report["pq_sweep"] = _pq_sweep(key, n, q, ef, out)
+
+    # construct × diversify build trajectory over the main world — §10
+    report["build_sweep"] = _build_sweep(
+        base, queries, gt, ef, jax.random.fold_in(key, 400), out
+    )
 
     # device-vs-host base placement at growing n — DESIGN.md §9; a sweep
     # point at the main n reuses the world built above

@@ -1,16 +1,21 @@
-"""Quickstart: build the paper's hybrid index (KGraph + GD) and search it
-through the SearchEngine — one beam core, pluggable entry strategies.
+"""Quickstart: one BuildSpec builds the paper's hybrid index through the
+unified pipeline (construct · diversify · compress), persists it as an
+IndexArtifact, and searches it through the SearchEngine — one beam core,
+pluggable entry strategies (DESIGN.md §3, §10).
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
 import sys
-import time
+import tempfile
 
 sys.path.insert(0, "src")
 
 import jax  # noqa: E402
 
-from repro.core import bruteforce, diversify, nndescent  # noqa: E402
+from repro.core import bruteforce  # noqa: E402
+from repro.core import io as index_io  # noqa: E402
+from repro.core.build import BuildSpec, GraphBuilder  # noqa: E402
 from repro.core.engine import Searcher, SearchSpec  # noqa: E402
 from repro.data.synthetic import make_ann_dataset  # noqa: E402
 
@@ -20,25 +25,31 @@ def main():
     base, queries, metric = make_ann_dataset("SIFT1M", scale=0.02, n_queries=200)
     print(f"dataset: n={base.shape[0]} d={base.shape[1]} metric={metric}")
 
-    # 1. approximate k-NN graph via NN-Descent (KGraph)
-    t0 = time.time()
-    g = nndescent.build_knn_graph(
-        base, nndescent.NNDescentConfig(k=20), metric=metric, key=key, verbose=True
-    )
-    print(f"NN-Descent graph built in {time.time()-t0:.1f}s")
+    # 1. one spec = the whole build: NN-Descent (KGraph) -> GD diversification
+    #    (the paper's hybrid scheme) -> no compression. Swap any stage by
+    #    name: construct="exact"|"hnsw", diversify="dpg"|"none",
+    #    compress="pq".
+    spec = BuildSpec(construct="nndescent", diversify="gd", metric=metric,
+                     graph_k=20)
+    result = GraphBuilder(spec).build(base, key=key)
+    rep = result.report
+    print(f"built {spec.construct}·{spec.diversify}·{spec.compress} in "
+          f"{rep.wall_total_s:.1f}s: {rep.rounds} NN-Descent rounds "
+          f"(update curve {list(rep.update_curve)}), "
+          f"graph-recall proxy {rep.graph_recall_proxy:.3f}, "
+          f"degree mean {rep.degree['mean']} max {rep.degree['max']}, "
+          f"{rep.dropped_reverse_edges} reverse edges dropped, "
+          f"{rep.memory_bytes / 2**20:.1f} MiB")
 
-    # 2. the paper's hybrid scheme: occlusion pruning + reverse edges
-    gd = diversify.build_gd_graph(base, g, metric=metric)
-    print(f"GD-diversified: degree {g.degree} -> {gd.degree} (pruned+reverse)")
-
-    # 3. one engine, swappable seeding: random (the paper's flat-HNSW start)
-    #    vs projection (SRS-style sketch scan)
-    searcher = Searcher.from_graph(base, gd, metric=metric, key=key)
+    # 2. bind it to the engine and search: swappable seeding through the one
+    #    beam core — random (the paper's flat-HNSW start) vs projection
+    #    (SRS-style sketch scan)
+    searcher = Searcher.from_build(base, result, key=key)
     gt = bruteforce.ground_truth(queries, base, 1, metric)
     for entry in ("random", "projection"):
         for ef in (16, 32, 64):
-            spec = SearchSpec(ef=ef, k=1, metric=metric, entry=entry)
-            res = searcher.search(queries, spec)
+            sspec = SearchSpec(ef=ef, k=1, metric=metric, entry=entry)
+            res = searcher.search(queries, sspec)
             recall = float((res.ids[:, 0] == gt[:, 0]).mean())
             comps = float(res.n_comps.mean())
             print(
@@ -46,6 +57,23 @@ def main():
                 f"comps/query={comps:.0f} (exhaustive={base.shape[0]}, "
                 f"speedup={base.shape[0]/comps:.1f}x)"
             )
+
+    # 3. persist + reload: the artifact round-trips the graph, metric, key
+    #    and build provenance — a reloaded index answers bit-identically
+    with tempfile.TemporaryDirectory() as td:
+        path = index_io.save_index(
+            os.path.join(td, "quickstart_index"),
+            index_io.IndexArtifact.from_build(base, result, metric=metric,
+                                              key=key),
+        )
+        art = index_io.load_index(path)
+        sspec = SearchSpec(ef=32, k=1, metric=metric, entry="projection")
+        a = searcher.search(queries, sspec)
+        b = art.to_searcher().search(queries, sspec)
+        match = bool((a.ids == b.ids).all())
+        built_by = art.provenance["build_report"]["spec"]["construct"]
+        print(f"artifact round-trip via {os.path.basename(path)}: "
+              f"bit-identical={match} (built by: {built_by})")
 
 
 if __name__ == "__main__":

@@ -81,6 +81,18 @@ def _encode(base, codebooks):
     return jax.vmap(enc, in_axes=(1, 0), out_axes=1)(subs, codebooks)  # (n, M)
 
 
+def derive_pq_key(key: jax.Array) -> jax.Array:
+    """The ONE key derivation for scorer-backing PQ tables: both the
+    engine's lazy path (``Searcher.pq_index``) and the build pipeline's
+    compress stage (``core.build``) train from this, which is what makes a
+    build-time attached table bit-identical to a lazily trained one — and
+    artifact round-trips unable to flip a search result. Change it here or
+    nowhere."""
+    import zlib
+
+    return jax.random.fold_in(key, zlib.crc32(b"scorer:pq") & 0x7FFFFFFF)
+
+
 def build_pq(
     base: jax.Array, M: int = 8, K: int = 256, iters: int = 15,
     key: jax.Array | None = None,

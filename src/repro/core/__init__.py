@@ -1,1 +1,1 @@
-from . import bruteforce, distances, graph_index, lid, topk  # noqa: F401
+from . import bruteforce, build, distances, graph_index, io, lid, topk  # noqa: F401

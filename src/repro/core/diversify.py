@@ -16,6 +16,7 @@ selection is a lax.fori over L with a kept-mask carry, vmapped over vertices.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -27,13 +28,37 @@ from .topk import INVALID, sort_by_distance
 # -- reverse-edge union -------------------------------------------------------
 
 
-def add_reverse_edges(neighbors: jax.Array, max_degree: int) -> jax.Array:
+class ReverseUnionStats(NamedTuple):
+    """Edge accounting of one reverse-edge union (BuildReport currency).
+
+    candidates   : valid forward edges = reverse-edge candidates offered
+    dropped_slot : candidates that overflowed the r reverse slots a target
+                   row reserves (the scatter's fixed-shape bound)
+    dropped_cap  : surviving unique ids evicted by the final max_degree
+                   truncation (forward or reverse — both count: they are
+                   edges the unbounded paper union would have kept)
+    """
+
+    candidates: int
+    dropped_slot: int
+    dropped_cap: int
+
+    @property
+    def dropped(self) -> int:
+        return self.dropped_slot + self.dropped_cap
+
+
+def add_reverse_edges_with_stats(
+    neighbors: jax.Array, max_degree: int
+) -> tuple[jax.Array, ReverseUnionStats]:
     """Union adjacency with its reverse edges, capped at max_degree.
 
     Slot assignment is deterministic: incoming edges are ranked by source id
     (sort + cumcount) so rebuilds are reproducible; overflow beyond the cap is
     dropped (the paper takes the plain union; we bound the degree for fixed
-    shapes and report the realized degree distribution in benchmarks).
+    shapes). The returned :class:`ReverseUnionStats` counts every dropped
+    edge — ``BuildReport`` surfaces them next to the realized degree
+    distribution so a too-tight cap is visible, not silent.
     """
     n, r = neighbors.shape
     src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, r)).ravel()
@@ -68,7 +93,19 @@ def add_reverse_edges(neighbors: jax.Array, max_degree: int) -> jax.Array:
     key = jnp.where(ids_sorted == INVALID, jnp.iinfo(jnp.int32).max, 0)
     order2 = jnp.argsort(key, axis=1, stable=True)
     compact = jnp.take_along_axis(ids_sorted, order2, axis=1)
-    return compact[:, :max_degree]
+    stats = ReverseUnionStats(
+        candidates=int(valid.sum()),
+        dropped_slot=int(valid.sum()) - int(keep.sum()),
+        dropped_cap=int((compact[:, max_degree:] != INVALID).sum()),
+    )
+    return compact[:, :max_degree], stats
+
+
+def add_reverse_edges(neighbors: jax.Array, max_degree: int) -> jax.Array:
+    """Reverse-edge union without the accounting — see
+    :func:`add_reverse_edges_with_stats` (same adjacency, bit-identical)."""
+    merged, _ = add_reverse_edges_with_stats(neighbors, max_degree)
+    return merged
 
 
 # -- GD: occlusion pruning (HNSW heuristic) -----------------------------------

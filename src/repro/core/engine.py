@@ -279,6 +279,9 @@ class Searcher:
         # lazily trained tables are cached per (M, K, iters).
         self._pq_attached = pq
         self._pq: dict[tuple, object] = {}
+        # provenance of the build that produced this index (set by
+        # from_build; None for hand-assembled engines)
+        self.build_report = None
         # BaseStore per placement (the "host" store is a one-time host copy
         # of the base; under a true n >> HBM deployment, construct the
         # Searcher from a host numpy base and the copy is free)
@@ -298,36 +301,51 @@ class Searcher:
         return cls(base, index.layers_neighbors[0], hierarchy=index, **kw)
 
     @classmethod
+    def from_build(cls, base, result, *, metric: str | None = None,
+                   key: jax.Array | None = None) -> "Searcher":
+        """Bind a :class:`~repro.core.build.BuildResult` to an engine: the
+        flat graph feeds the beam, the hierarchy (if built) backs the
+        ``hierarchy`` seeder, and a build-time PQ table is attached (the
+        ``pq`` scorer then never trains at serve time). The report rides
+        along as ``searcher.build_report``."""
+        if metric is None:
+            metric = result.report.spec.metric
+        if result.hierarchy is not None:
+            searcher = cls.from_hnsw(base, result.hierarchy, metric=metric,
+                                     key=key, pq=result.pq)
+        else:
+            searcher = cls.from_graph(base, result.graph, metric=metric,
+                                      key=key, pq=result.pq)
+        searcher.build_report = result.report
+        return searcher
+
+    @classmethod
     def build(cls, base, *, metric: str = "l2", key: jax.Array | None = None,
               graph_k: int = 20, with_hierarchy: bool = False,
               with_pq: bool = False, pq_m: int = 8, pq_k: int = 256,
-              verbose: bool = False) -> "Searcher":
-        """Build the paper's hybrid index (NN-Descent + GD diversification),
-        optionally with HNSW upper layers for the ``hierarchy`` seeder and/or
-        a PQ code table trained up front for the ``pq`` scorer (otherwise it
-        is trained lazily on first use, from the same derived key)."""
-        from .diversify import build_gd_graph
-        from .nndescent import NNDescentConfig, build_knn_graph
+              verbose: bool = False, spec=None) -> "Searcher":
+        """Build the paper's hybrid index through the unified pipeline
+        (``core.build``): construct · diversify · compress. Pass a
+        :class:`~repro.core.build.BuildSpec` for full control; the legacy
+        keyword surface maps onto it (``with_hierarchy`` -> the ``hnsw``
+        constructor, default -> NN-Descent + GD, ``with_pq`` -> build-time
+        PQ training). Bit-identical to the pre-pipeline builds for every
+        configuration the old code could run (graph_k >= the NN-Descent
+        sample width, 12); smaller graph_k used to crash in the local join
+        and now works via the pipeline's sample clamp."""
+        from .build import BuildSpec, GraphBuilder
 
+        if spec is None:
+            spec = BuildSpec(
+                construct="hnsw" if with_hierarchy else "nndescent",
+                diversify="none" if with_hierarchy else "gd",
+                compress="pq" if with_pq else "none",
+                metric=metric, graph_k=graph_k, pq_m=pq_m, pq_k=pq_k,
+            )
         if key is None:
             key = jax.random.PRNGKey(0)
-        g = build_knn_graph(base, NNDescentConfig(k=graph_k), metric=metric,
-                            key=key, verbose=verbose)
-        if with_hierarchy:
-            from .hnsw import HnswConfig, build_hnsw
-
-            idx = build_hnsw(
-                base,
-                HnswConfig(M=max(8, graph_k // 2), knn_k=graph_k),
-                metric=metric, key=key, bottom_graph=g, verbose=verbose,
-            )
-            searcher = cls.from_hnsw(base, idx, metric=metric, key=key)
-        else:
-            gd = build_gd_graph(base, g, metric=metric)
-            searcher = cls.from_graph(base, gd, metric=metric, key=key)
-        if with_pq:
-            searcher.pq_index(SearchSpec(pq_m=pq_m, pq_k=pq_k))
-        return searcher
+        result = GraphBuilder(spec).build(base, key=key, verbose=verbose)
+        return cls.from_build(base, result, metric=spec.metric, key=key)
 
     # -- seeding --------------------------------------------------------------
 
@@ -371,23 +389,32 @@ class Searcher:
 
     # -- scorers --------------------------------------------------------------
 
+    @property
+    def pq(self):
+        """The PQ table this engine would serve WITHOUT training: the
+        attached build-time table, else the single lazily trained cache
+        entry, else None (what ``io.IndexArtifact.from_searcher`` persists
+        so a reloaded index never re-runs k-means)."""
+        if self._pq_attached is not None:
+            return self._pq_attached
+        if len(self._pq) == 1:
+            return next(iter(self._pq.values()))
+        return None
+
     def pq_index(self, spec: SearchSpec):
         """The (spec.pq_m, spec.pq_k) PQ code table, trained on first use
         from a key derived deterministically from the searcher's key (so a
         rebuilt engine reproduces the same codebooks bit-for-bit)."""
-        from repro.baselines.pq import build_pq
+        from repro.baselines.pq import build_pq, derive_pq_key
 
         a = self._pq_attached
         if a is not None and (a.M, a.K) == (spec.pq_m, spec.pq_k):
             return a
         cache_key = (spec.pq_m, spec.pq_k, spec.pq_iters)
         if cache_key not in self._pq:
-            kp = jax.random.fold_in(
-                self.key, zlib.crc32(b"scorer:pq") & 0x7FFFFFFF
-            )
             self._pq[cache_key] = build_pq(
                 self.base, M=spec.pq_m, K=spec.pq_k, iters=spec.pq_iters,
-                key=kp,
+                key=derive_pq_key(self.key),
             )
         return self._pq[cache_key]
 

@@ -70,6 +70,24 @@ def memory_bytes(graph_or_index) -> int:
     )
 
 
+def degree_distribution(neighbors: jax.Array) -> dict:
+    """Realized out-degree distribution of a padded adjacency.
+
+    Returns a JSON-able summary (min/mean/max + histogram over 0..R) — the
+    number ``add_reverse_edges``'s cap accounting is read against in
+    ``BuildReport`` and the build benchmarks."""
+    import numpy as np
+
+    deg = np.asarray((neighbors >= 0).sum(axis=1))
+    R = neighbors.shape[1]
+    return {
+        "min": int(deg.min()),
+        "mean": round(float(deg.mean()), 2),
+        "max": int(deg.max()),
+        "hist": np.bincount(deg, minlength=R + 1).tolist(),
+    }
+
+
 def pad_neighbors(neighbors: jax.Array, degree: int) -> jax.Array:
     """Pad/truncate (n, r) adjacency to (n, degree) with INVALID."""
     n, r = neighbors.shape

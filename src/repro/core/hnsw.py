@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from .beam_search import SearchResult
 from .bruteforce import exact_knn_graph
-from .diversify import add_reverse_edges, gd_prune
+from .diversify import add_reverse_edges_with_stats, gd_prune
 from .engine import Searcher, SearchSpec
 from .graph_index import HnswIndex, KnnGraph
 from .nndescent import NNDescentConfig, build_knn_graph
@@ -56,6 +56,74 @@ def _layer_graph(base_sub, k, cfg: HnswConfig, metric, key) -> KnnGraph:
     return build_knn_graph(base_sub, nd_cfg, metric=metric, key=key)
 
 
+def build_hnsw_with_stats(
+    base: jax.Array,
+    cfg: HnswConfig = HnswConfig(),
+    metric: str = "l2",
+    key: jax.Array | None = None,
+    bottom_graph: KnnGraph | None = None,
+    verbose: bool = False,
+) -> tuple[HnswIndex, list[dict]]:
+    """Build the layered index plus per-layer provenance for ``BuildReport``
+    (node count, degree cap, dropped reverse edges, graph source). The index
+    is bit-identical to :func:`build_hnsw` for equal inputs."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = base.shape[0]
+    klv, key = jax.random.split(key)
+    levels = assign_levels(klv, n, cfg)
+    num_layers = int(levels.max()) + 1
+
+    layers_neighbors, layers_nodes, layers_slot = [], [], []
+    layer_stats: list[dict] = []
+    for layer in range(num_layers):
+        nodes = jnp.nonzero(levels >= layer)[0].astype(jnp.int32)
+        n_l = int(nodes.shape[0])
+        if verbose:
+            print(f"[hnsw] layer {layer}: {n_l} nodes")
+        max_deg = cfg.m0_mult * cfg.M if layer == 0 else cfg.M
+        dropped = 0
+        if n_l <= 1:
+            nbrs_g = jnp.full((n_l, max_deg), INVALID, jnp.int32)
+            source = "trivial"
+        else:
+            key, kg = jax.random.split(key)
+            if layer == 0 and bottom_graph is not None:
+                g = bottom_graph
+                source = "bottom_graph"
+            else:
+                sub = base[nodes] if layer > 0 else base
+                g = _layer_graph(sub, cfg.knn_k, cfg, metric, kg)
+                source = ("brute" if n_l <= cfg.brute_threshold
+                          else "nndescent")
+            kept = gd_prune(
+                base[nodes] if layer > 0 else base, g, max_keep=cfg.M, metric=metric
+            )
+            merged, rstats = add_reverse_edges_with_stats(kept, max_deg)
+            dropped = rstats.dropped
+            # map local row ids back to global ids
+            nbrs_g = jnp.where(merged >= 0, nodes[jnp.maximum(merged, 0)], INVALID)
+        slot = jnp.full((n,), INVALID, jnp.int32).at[nodes].set(
+            jnp.arange(n_l, dtype=jnp.int32)
+        )
+        layers_neighbors.append(nbrs_g)
+        layers_nodes.append(nodes)
+        layers_slot.append(slot)
+        layer_stats.append({"layer": layer, "nodes": n_l,
+                            "max_degree": max_deg, "source": source,
+                            "dropped_reverse_edges": dropped})
+
+    entry = layers_nodes[-1][0]
+    idx = HnswIndex(
+        layers_neighbors=tuple(layers_neighbors),
+        layers_nodes=tuple(layers_nodes),
+        layers_slot=tuple(layers_slot),
+        entry_point=entry,
+        levels=levels,
+    )
+    return idx, layer_stats
+
+
 def build_hnsw(
     base: jax.Array,
     cfg: HnswConfig = HnswConfig(),
@@ -66,50 +134,9 @@ def build_hnsw(
 ) -> HnswIndex:
     """Build the layered index. ``bottom_graph`` lets experiments share one
     NN-Descent graph between HNSW / KGraph+GD / DPG (paper Sec. IV)."""
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    n = base.shape[0]
-    klv, key = jax.random.split(key)
-    levels = assign_levels(klv, n, cfg)
-    num_layers = int(levels.max()) + 1
-
-    layers_neighbors, layers_nodes, layers_slot = [], [], []
-    for layer in range(num_layers):
-        nodes = jnp.nonzero(levels >= layer)[0].astype(jnp.int32)
-        n_l = int(nodes.shape[0])
-        if verbose:
-            print(f"[hnsw] layer {layer}: {n_l} nodes")
-        max_deg = cfg.m0_mult * cfg.M if layer == 0 else cfg.M
-        if n_l <= 1:
-            nbrs_g = jnp.full((n_l, max_deg), INVALID, jnp.int32)
-        else:
-            key, kg = jax.random.split(key)
-            if layer == 0 and bottom_graph is not None:
-                g = bottom_graph
-            else:
-                sub = base[nodes] if layer > 0 else base
-                g = _layer_graph(sub, cfg.knn_k, cfg, metric, kg)
-            kept = gd_prune(
-                base[nodes] if layer > 0 else base, g, max_keep=cfg.M, metric=metric
-            )
-            merged = add_reverse_edges(kept, max_deg)
-            # map local row ids back to global ids
-            nbrs_g = jnp.where(merged >= 0, nodes[jnp.maximum(merged, 0)], INVALID)
-        slot = jnp.full((n,), INVALID, jnp.int32).at[nodes].set(
-            jnp.arange(n_l, dtype=jnp.int32)
-        )
-        layers_neighbors.append(nbrs_g)
-        layers_nodes.append(nodes)
-        layers_slot.append(slot)
-
-    entry = layers_nodes[-1][0]
-    return HnswIndex(
-        layers_neighbors=tuple(layers_neighbors),
-        layers_nodes=tuple(layers_nodes),
-        layers_slot=tuple(layers_slot),
-        entry_point=entry,
-        levels=levels,
-    )
+    idx, _ = build_hnsw_with_stats(base, cfg, metric=metric, key=key,
+                                   bottom_graph=bottom_graph, verbose=verbose)
+    return idx
 
 
 def hnsw_search(

@@ -1,0 +1,240 @@
+"""Persistent index artifacts — one .npz + embedded manifest (DESIGN.md §10).
+
+What PRs 1–4 could not save is exactly what this module round-trips: the
+flat adjacency AND the hierarchy's upper layers (serve's old .npz held only
+``{base, neighbors, metric}`` and refused ``--entry hierarchy``), the PQ
+codebooks + codes (so a loaded index never re-trains k-means at start), the
+metric, the searcher's PRNG key, and the build provenance
+(:class:`~repro.core.build.BuildReport` summary).
+
+Format: a single ``.npz`` whose ``manifest`` entry is a JSON document
+(format magic, schema version, shapes, pq geometry, provenance); array
+payloads live beside it under stable names (``hier{i}_*`` per layer,
+``pq_codebooks``/``pq_codes``). Loading validates the magic, rejects
+artifacts written by a NEWER schema, and cross-checks manifest shapes
+against the arrays so a truncated file fails loudly. Pre-manifest flat
+``.npz`` files (the old serve format) still load, as a version-0 artifact.
+
+Round-trip contract (locked by tests/test_io.py): a saved-then-loaded
+artifact yields bit-identical search results (ids/dists/n_comps) to the
+in-memory build for flat, diversified, hierarchical, and PQ-compressed
+indexes, under both base placements — arrays are persisted exactly and the
+PRNG key travels, so seeding, traversal, and rerank replay unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph_index import HnswIndex
+
+FORMAT_MAGIC = "repro/index-artifact"
+ARTIFACT_VERSION = 1
+
+
+@dataclasses.dataclass
+class IndexArtifact:
+    """Everything a Searcher is made of, in one persistable bundle."""
+
+    base: jax.Array               # (n, d) float32
+    neighbors: jax.Array          # (n, R) int32 flat adjacency (hier: layer 0)
+    metric: str
+    key: jax.Array | None = None  # searcher PRNG key (seeding determinism)
+    hierarchy: HnswIndex | None = None
+    pq: object | None = None      # baselines.pq.PQIndex
+    provenance: dict = dataclasses.field(default_factory=dict)
+    version: int = ARTIFACT_VERSION
+
+    @property
+    def n(self) -> int:
+        return self.base.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.base.shape[1]
+
+    # -- constructors ---------------------------------------------------------
+
+    @classmethod
+    def from_searcher(cls, searcher, provenance: dict | None = None
+                      ) -> "IndexArtifact":
+        """Snapshot a live engine: flat graph, hierarchy (if any), and the
+        PQ table it would serve without training (attached or the single
+        lazily trained entry — ``Searcher.pq``)."""
+        return cls(
+            base=searcher.base, neighbors=searcher.neighbors,
+            metric=searcher.metric, key=searcher.key,
+            hierarchy=searcher.hierarchy, pq=searcher.pq,
+            provenance=dict(provenance or {}),
+        )
+
+    @classmethod
+    def from_build(cls, base, result, metric: str,
+                   key: jax.Array | None = None) -> "IndexArtifact":
+        """Package a ``GraphBuilder`` output; provenance = the BuildReport
+        summary (spec, walls, degree distribution, dropped edges, ...)."""
+        return cls(
+            base=base, neighbors=result.graph.neighbors, metric=metric,
+            key=key, hierarchy=result.hierarchy, pq=result.pq,
+            provenance={"build_report": result.report.summary()},
+        )
+
+    def to_searcher(self):
+        """Rehydrate the engine: same adjacency, hierarchy, PQ table, metric
+        and key — searches replay bit-identically (no PQ retrain, no
+        hierarchy rebuild)."""
+        from .engine import Searcher
+
+        return Searcher(
+            jnp.asarray(self.base), jnp.asarray(self.neighbors),
+            hierarchy=self.hierarchy, metric=self.metric,
+            key=None if self.key is None else jnp.asarray(self.key),
+            pq=self.pq,
+        )
+
+
+def _key_payload(key):
+    """PRNG key -> (uint32 payload, impl tag). Handles both raw uint32 keys
+    (``jax.random.PRNGKey``) and typed key arrays (``jax.random.key``)."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return np.asarray(jax.random.key_data(key)), "typed"
+    return np.asarray(key), "raw"
+
+
+def normalize_path(path: str) -> str:
+    """np.savez appends .npz to suffix-less paths; normalize up front so the
+    path we report is the file we actually wrote/read."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def save_index(path: str, artifact: IndexArtifact) -> str:
+    """Write one .npz (manifest + arrays); returns the normalized path."""
+    path = normalize_path(path)
+    arrays: dict[str, np.ndarray] = {
+        "base": np.asarray(artifact.base, np.float32),
+        "neighbors": np.asarray(artifact.neighbors, np.int32),
+    }
+    manifest = {
+        "format": FORMAT_MAGIC,
+        "version": ARTIFACT_VERSION,
+        "metric": artifact.metric,
+        "n": int(arrays["base"].shape[0]),
+        "d": int(arrays["base"].shape[1]),
+        "degree": int(arrays["neighbors"].shape[1]),
+        "num_layers": 0,
+        "pq": None,
+        "key_impl": None,
+        "provenance": artifact.provenance,
+    }
+    if artifact.key is not None:
+        payload, impl = _key_payload(artifact.key)
+        arrays["key"] = payload
+        manifest["key_impl"] = impl
+    hier = artifact.hierarchy
+    if hier is not None:
+        manifest["num_layers"] = hier.num_layers
+        arrays["hier_entry"] = np.asarray(hier.entry_point, np.int32)
+        arrays["hier_levels"] = np.asarray(hier.levels, np.int32)
+        for i in range(hier.num_layers):
+            arrays[f"hier{i}_neighbors"] = np.asarray(
+                hier.layers_neighbors[i], np.int32)
+            arrays[f"hier{i}_nodes"] = np.asarray(hier.layers_nodes[i],
+                                                  np.int32)
+            arrays[f"hier{i}_slot"] = np.asarray(hier.layers_slot[i],
+                                                 np.int32)
+    if artifact.pq is not None:
+        manifest["pq"] = {"m": int(artifact.pq.M), "k": int(artifact.pq.K)}
+        arrays["pq_codebooks"] = np.asarray(artifact.pq.codebooks, np.float32)
+        arrays["pq_codes"] = np.asarray(artifact.pq.codes, np.uint8)
+    np.savez(path, manifest=np.array(json.dumps(manifest)), **arrays)
+    return path
+
+
+def _load_legacy(blob, path: str) -> IndexArtifact:
+    """Pre-manifest serve format: {base, neighbors, metric} only."""
+    missing = {"base", "neighbors", "metric"} - set(blob.files)
+    if missing:
+        raise ValueError(
+            f"{path} is neither an index artifact (no manifest) nor the "
+            f"legacy flat-graph format (missing {sorted(missing)})"
+        )
+    return IndexArtifact(
+        base=jnp.asarray(blob["base"]),
+        neighbors=jnp.asarray(blob["neighbors"]),
+        metric=str(blob["metric"]),
+        provenance={"legacy": True},
+        version=0,
+    )
+
+
+def load_index(path: str) -> IndexArtifact:
+    """Read an artifact back; validates magic/version/shapes."""
+    path = normalize_path(path)
+    blob = np.load(path, allow_pickle=False)
+    if "manifest" not in blob.files:
+        return _load_legacy(blob, path)
+    m = json.loads(str(blob["manifest"][()]))
+    if m.get("format") != FORMAT_MAGIC:
+        raise ValueError(
+            f"{path}: manifest format {m.get('format')!r} != {FORMAT_MAGIC!r}"
+        )
+    if m.get("version", 0) > ARTIFACT_VERSION:
+        raise ValueError(
+            f"{path}: artifact schema v{m['version']} is newer than this "
+            f"build supports (v{ARTIFACT_VERSION}) — upgrade, or rebuild "
+            f"the index with this version"
+        )
+    base = blob["base"]
+    neighbors = blob["neighbors"]
+    want = (m["n"], m["d"], m["degree"])
+    got = (*base.shape, neighbors.shape[1])
+    if want != got or neighbors.shape[0] != m["n"]:
+        raise ValueError(
+            f"{path}: manifest shapes {want} disagree with arrays "
+            f"{got} — truncated or corrupted artifact"
+        )
+
+    key = None
+    if m.get("key_impl") is not None:
+        key = jnp.asarray(blob["key"])
+        if m["key_impl"] == "typed":
+            key = jax.random.wrap_key_data(key)
+
+    hierarchy = None
+    if m.get("num_layers", 0) > 0:
+        L = m["num_layers"]
+        hierarchy = HnswIndex(
+            layers_neighbors=tuple(
+                jnp.asarray(blob[f"hier{i}_neighbors"]) for i in range(L)),
+            layers_nodes=tuple(
+                jnp.asarray(blob[f"hier{i}_nodes"]) for i in range(L)),
+            layers_slot=tuple(
+                jnp.asarray(blob[f"hier{i}_slot"]) for i in range(L)),
+            entry_point=jnp.asarray(blob["hier_entry"]),
+            levels=jnp.asarray(blob["hier_levels"]),
+        )
+
+    pq = None
+    if m.get("pq") is not None:
+        from repro.baselines.pq import PQIndex
+
+        pq = PQIndex(
+            codebooks=jnp.asarray(blob["pq_codebooks"]),
+            codes=jnp.asarray(blob["pq_codes"]),
+            M=int(m["pq"]["m"]), K=int(m["pq"]["k"]),
+        )
+
+    return IndexArtifact(
+        base=jnp.asarray(base), neighbors=jnp.asarray(neighbors),
+        metric=m["metric"], key=key, hierarchy=hierarchy, pq=pq,
+        provenance=m.get("provenance", {}), version=m["version"],
+    )
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(normalize_path(path))

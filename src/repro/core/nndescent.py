@@ -148,14 +148,34 @@ def _round_jit(base, ids, dists, isnew, key, cfg, metric):
     return _round(base, ids, dists, isnew, key, cfg, metric)
 
 
-def build_knn_graph(
+class NNDescentStats(NamedTuple):
+    """Convergence provenance of one NN-Descent run (BuildReport currency).
+
+    rounds       : rounds actually executed (<= cfg.rounds when the
+                   early-termination rule fired)
+    update_curve : per-round new-entry counts — the standard NN-Descent
+                   convergence diagnostic (monotone-ish decay to ~0)
+    converged    : True iff the delta * n * K early-termination threshold
+                   fired before the round budget ran out
+    threshold    : the realized update-count threshold (delta * n * K)
+    """
+
+    rounds: int
+    update_curve: tuple[int, ...]
+    converged: bool
+    threshold: float
+
+
+def build_knn_graph_with_stats(
     base: jax.Array,
     cfg: NNDescentConfig = NNDescentConfig(),
     metric: str = "l2",
     key: jax.Array | None = None,
     verbose: bool = False,
-) -> KnnGraph:
-    """Run NN-Descent to convergence; returns the KGraph-style k-NN graph."""
+) -> tuple[KnnGraph, NNDescentStats]:
+    """Run NN-Descent to convergence; returns the KGraph-style k-NN graph
+    plus its convergence stats (same loop as :func:`build_knn_graph` — the
+    graph is bit-identical for equal inputs)."""
     if key is None:
         key = jax.random.PRNGKey(0)
     n = base.shape[0]
@@ -166,15 +186,34 @@ def build_knn_graph(
     isnew = jnp.ones_like(ids, dtype=bool)
 
     threshold = cfg.delta * n * cfg.k
+    curve: list[int] = []
+    converged = False
     for r in range(cfg.rounds):
         key, kr = jax.random.split(key)
         ids, dists, isnew, n_up = _round_jit(base, ids, dists, isnew, kr, cfg, metric)
         n_up = int(n_up)
+        curve.append(n_up)
         if verbose:
             print(f"[nndescent] round {r}: {n_up} updates")
         if n_up <= threshold:
+            converged = True
             break
-    return KnnGraph(neighbors=ids, dists=dists)
+    stats = NNDescentStats(rounds=len(curve), update_curve=tuple(curve),
+                           converged=converged, threshold=threshold)
+    return KnnGraph(neighbors=ids, dists=dists), stats
+
+
+def build_knn_graph(
+    base: jax.Array,
+    cfg: NNDescentConfig = NNDescentConfig(),
+    metric: str = "l2",
+    key: jax.Array | None = None,
+    verbose: bool = False,
+) -> KnnGraph:
+    """Run NN-Descent to convergence; returns the KGraph-style k-NN graph."""
+    graph, _ = build_knn_graph_with_stats(base, cfg, metric=metric, key=key,
+                                          verbose=verbose)
+    return graph
 
 
 def graph_recall(graph: KnnGraph, exact: KnnGraph) -> float:

@@ -15,6 +15,7 @@ contribution (straggler mitigation by design).
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -28,44 +29,100 @@ from repro.core.beam_search import rerank_slice
 from repro.core.engine import SearchSpec
 
 
+class ShardBuildResult(NamedTuple):
+    """Output of :func:`shard_build` — drop-in operands for the existing
+    search paths: ``(base_shards, nbr_shards)`` feed ``distributed_search``
+    / ``shard_search`` / ``emulated_shard_search`` unchanged, the PQ stacks
+    (when ``spec.compress='pq'``) feed ``scorer='pq'`` / ``shard_traverse``
+    exactly like :func:`shard_pq`'s, and ``reports`` carries each shard's
+    :class:`~repro.core.build.BuildReport`."""
+
+    base_shards: jax.Array            # (P, n/P, d)
+    nbr_shards: jax.Array             # (P, n/P, R)
+    pq_codebooks: jax.Array | None    # (P, M, K, dsub) when compress='pq'
+    pq_codes: jax.Array | None        # (P, n/P, M) uint8 when compress='pq'
+    reports: tuple                    # per-shard BuildReport
+
+
+def shard_build(base, n_shards: int, *, spec=None, key=None
+                ) -> ShardBuildResult:
+    """Per-shard build pipeline: every shard runs the SAME
+    ``BuildSpec × (construct · diversify · compress)`` composition
+    (``core.build``) over its local rows, under a per-shard folded key —
+    sharded builds sweep the same axes as single-host builds, and a
+    shard's graph/codes are bit-reproducible from (spec, key, shard id).
+
+    ``construct='hnsw'`` is rejected: the shard bodies traverse flat
+    adjacency only (the hierarchy seeder has no per-shard plumbing — seed
+    shards with ``engine.shard_entries`` instead)."""
+    from repro.core.build import BuildSpec, GraphBuilder
+
+    if spec is None:
+        spec = BuildSpec()
+    if spec.construct == "hnsw":
+        raise ValueError(
+            "shard_build builds flat per-shard graphs; construct='hnsw' has "
+            "no sharded search path (shard_search walks flat adjacency) — "
+            "use construct='nndescent'|'exact'"
+        )
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = base.shape[0]
+    per = n // n_shards
+    spec = spec._replace(graph_k=min(spec.graph_k, per - 1))
+    builder = GraphBuilder(spec)
+    bs, ns, cbs, codes, reports = [], [], [], [], []
+    for s in range(n_shards):
+        shard_base = base[s * per : (s + 1) * per]
+        res = builder.build(shard_base, key=jax.random.fold_in(key, s))
+        bs.append(shard_base)
+        ns.append(res.graph.neighbors)
+        reports.append(res.report)
+        if res.pq is not None:
+            cbs.append(res.pq.codebooks)
+            codes.append(res.pq.codes)
+    return ShardBuildResult(
+        base_shards=jnp.stack(bs),
+        nbr_shards=jnp.stack(ns),
+        pq_codebooks=jnp.stack(cbs) if cbs else None,
+        pq_codes=jnp.stack(codes) if codes else None,
+        reports=tuple(reports),
+    )
+
+
 def shard_graph(base, neighbors, n_shards: int, *, rebuild: bool = True,
                 metric: str = "l2", key=None):
     """Partition base rows into contiguous shards and produce per-shard
     graphs.
 
     rebuild=True (production default): each shard builds its OWN k-NN+GD
-    graph over its local rows — masking a global graph would orphan most
-    vertices (cross-shard edges dominate a random partition) and collapse
-    recall; per-shard builds keep every shard internally navigable, which is
-    how shard-per-machine ANN deployments (DiskANN-class) operate.
+    graph over its local rows via :func:`shard_build` — masking a global
+    graph would orphan most vertices (cross-shard edges dominate a random
+    partition) and collapse recall; per-shard builds keep every shard
+    internally navigable, which is how shard-per-machine ANN deployments
+    (DiskANN-class) operate.
     rebuild=False keeps the masked-global-graph behaviour for ablation.
     Returns (base_shards (P, n/P, d), nbr_shards (P, n/P, R))."""
     n = base.shape[0]
     per = n // n_shards
+    if rebuild:
+        from repro.core.build import BuildSpec
+
+        res = shard_build(
+            base, n_shards,
+            spec=BuildSpec(construct="nndescent", diversify="gd",
+                           graph_k=20, nd_rounds=10, metric=metric,
+                           proxy_sample=0),
+            key=key,
+        )
+        return res.base_shards, res.nbr_shards
     bs, ns = [], []
-    if key is None:
-        key = jax.random.PRNGKey(0)
     for s in range(n_shards):
         lo = s * per
-        shard_base = base[lo : lo + per]
-        if rebuild:
-            from repro.core.diversify import build_gd_graph
-            from repro.core.nndescent import NNDescentConfig, build_knn_graph
-
-            k = min(20, per - 1)
-            g = build_knn_graph(
-                shard_base,
-                NNDescentConfig(k=k, rounds=10),
-                metric=metric,
-                key=jax.random.fold_in(key, s),
-            )
-            local = build_gd_graph(shard_base, g, metric=metric).neighbors
-        else:
-            local = neighbors[lo : lo + per]
-            inside = (local >= lo) & (local < lo + per)
-            local = jnp.where(inside, local - lo, -1)
-        ns.append(local)
-        bs.append(shard_base)
+        local = neighbors[lo : lo + per]
+        inside = (local >= lo) & (local < lo + per)
+        ns.append(jnp.where(inside, local - lo, -1))
+        bs.append(base[lo : lo + per])
     return jnp.stack(bs), jnp.stack(ns)
 
 

@@ -22,55 +22,71 @@ from repro.launch.mesh import make_production_mesh, make_test_mesh
 
 
 def serve_ann(args) -> None:
-    """ANN serving family: load (or build and save) a flat graph, then answer
-    batched query streams through the SearchEngine with the chosen entry
-    strategy. The same `Searcher.search` call serves every strategy."""
-    import numpy as np
-
+    """ANN serving family: load an index artifact (or build one through the
+    ``core.build`` pipeline and save it), then answer batched query streams
+    through the SearchEngine with the chosen entry strategy. The same
+    `Searcher.search` call serves every strategy."""
     from repro.core import bruteforce
+    from repro.core import io as index_io
+    from repro.core.build import BuildSpec, GraphBuilder
     from repro.core.engine import Searcher, SearchSpec
 
     key = jax.random.PRNGKey(0)
-    # np.savez appends .npz to suffix-less paths; normalize so the load-time
-    # exists() check sees the file the save actually wrote
-    index_path = (
-        args.index if not args.index or args.index.endswith(".npz")
-        else args.index + ".npz"
-    )
+    index_path = index_io.normalize_path(args.index) if args.index else None
+    save_path = (index_io.normalize_path(args.save_index)
+                 if args.save_index else index_path)
     if index_path and os.path.exists(index_path):
-        blob = np.load(index_path)
-        base = jnp.asarray(blob["base"])
-        searcher = Searcher(
-            base, jnp.asarray(blob["neighbors"]), metric=str(blob["metric"])
-        )
-        print(f"[serve-ann] loaded index {index_path}: n={base.shape[0]} "
-              f"d={base.shape[1]}")
-        if args.entry == "hierarchy":
-            raise SystemExit("--entry hierarchy needs a built index; rerun "
-                             "without --index or pick another strategy")
+        art = index_io.load_index(index_path)
+        searcher = art.to_searcher()
+        layers = 0 if art.hierarchy is None else art.hierarchy.num_layers
+        print(f"[serve-ann] loaded artifact {index_path} (v{art.version}): "
+              f"n={art.n} d={art.d} metric={art.metric} layers={layers} "
+              f"pq={'yes' if art.pq is not None else 'no'}")
+        if args.entry == "hierarchy" and searcher.hierarchy is None:
+            raise SystemExit(
+                "--entry hierarchy: this artifact has no hierarchy; rebuild "
+                "with --build-construct hnsw --save-index " + index_path
+            )
+        if args.save_index and save_path != index_path:
+            # re-save the loaded artifact (migrates legacy v0 flat .npz
+            # files to the current manifest format)
+            p = index_io.save_index(save_path,
+                                    index_io.IndexArtifact.from_searcher(
+                                        searcher, art.provenance))
+            print(f"[serve-ann] re-saved loaded index to {p} "
+                  f"(schema v{index_io.ARTIFACT_VERSION})")
     else:
         n, d = (20_000, 32) if args.smoke else (1_000_000, 64)
         base = jax.random.normal(key, (n, d))
-        t0 = time.time()
-        searcher = Searcher.build(
-            base, metric="l2", key=key,
-            with_hierarchy=(args.entry == "hierarchy"),
-            with_pq=(args.scorer == "pq"), pq_m=args.pq_m,
+        construct = args.build_construct
+        if construct == "auto":
+            construct = "hnsw" if args.entry == "hierarchy" else "nndescent"
+        diversify = args.diversify
+        if diversify is None:
+            diversify = "none" if construct == "hnsw" else "gd"
+        bspec = BuildSpec(
+            construct=construct, diversify=diversify,
+            compress="pq" if args.scorer == "pq" else "none",
+            metric="l2", graph_k=args.build_k, nd_rounds=args.build_rounds,
+            pq_m=args.pq_m,
         )
-        print(f"[serve-ann] built index over n={n} d={d} "
-              f"in {time.time()-t0:.1f}s")
-        if index_path and args.entry == "hierarchy":
-            # the .npz format holds only the flat graph; saving it here would
-            # make this exact command fail on reload (hierarchy needs the
-            # upper layers, which are rebuilt, not serialized)
-            print("[serve-ann] --index ignored for --entry hierarchy "
-                  "(upper layers are not serialized)")
-        elif index_path:
-            np.savez(
-                index_path, base=np.asarray(base),
-                neighbors=np.asarray(searcher.neighbors), metric="l2",
+        result = GraphBuilder(bspec).build(base, key=key)
+        searcher = Searcher.from_build(base, result, key=key)
+        rep = result.report
+        print(f"[serve-ann] built {bspec.construct}·{bspec.diversify}·"
+              f"{bspec.compress} over n={n} d={d} in {rep.wall_total_s:.1f}s "
+              f"(rounds={rep.rounds}, graph-recall~{rep.graph_recall_proxy}, "
+              f"degree mean={rep.degree['mean']}, "
+              f"dropped reverse={rep.dropped_reverse_edges})")
+        if save_path:
+            p = index_io.save_index(
+                save_path,
+                index_io.IndexArtifact.from_build(base, result, metric="l2",
+                                                  key=key),
             )
-            print(f"[serve-ann] saved flat graph to {index_path}")
+            print(f"[serve-ann] saved index artifact to {p} "
+                  f"(hierarchy and PQ persist: reloads skip both rebuild "
+                  f"and k-means)")
 
     spec = SearchSpec(ef=args.ef, k=args.topk, metric=searcher.metric,
                       entry=args.entry, r_tile=args.r_tile,
@@ -86,14 +102,16 @@ def serve_ann(args) -> None:
         print(f"[serve-ann] base host-resident: {store.nbytes / 2**20:.1f} "
               f"MiB off-device; device keeps codes + adjacency")
     if args.scorer == "pq":
-        # loaded indexes train their code table here (build-path engines
-        # already attached one via with_pq); either way serving never trains
         t0 = time.time()
+        attached = searcher.pq
         idx = searcher.pq_index(spec)
+        source = ("attached" if attached is not None
+                  and (attached.M, attached.K) == (idx.M, idx.K)
+                  else "trained at startup")
         d_dim = searcher.base.shape[1]
-        print(f"[serve-ann] pq scorer ready in {time.time()-t0:.1f}s: "
-              f"M={idx.M} K={idx.K} ({idx.M} B/vector vs {4*d_dim} B exact, "
-              f"{4*d_dim/idx.M:.0f}x smaller scored base)")
+        print(f"[serve-ann] pq scorer ready in {time.time()-t0:.1f}s "
+              f"({source}): M={idx.M} K={idx.K} ({idx.M} B/vector vs "
+              f"{4*d_dim} B exact, {4*d_dim/idx.M:.0f}x smaller scored base)")
     # --stream-tile T splits each incoming batch into T-row tiles that
     # pipeline through one compiled beam core (DESIGN.md §7); 0 = monolithic.
     if args.stream_tile:
@@ -154,7 +172,25 @@ def main() -> None:
     ap.add_argument("--batches", type=int, default=8,
                     help="[ann] query batches to serve")
     ap.add_argument("--index", default=None,
-                    help="[ann] .npz graph path to load (or save after build)")
+                    help="[ann] index-artifact .npz to load (or save after "
+                         "build); flat, hierarchical and PQ state all "
+                         "round-trip (core/io.py)")
+    ap.add_argument("--save-index", default=None,
+                    help="[ann] write the built artifact here (defaults to "
+                         "--index when that file does not exist yet)")
+    ap.add_argument("--build-construct", default="auto",
+                    choices=["auto", "nndescent", "exact", "hnsw"],
+                    help="[ann] construct stage of the build pipeline "
+                         "(auto = hnsw for --entry hierarchy, else "
+                         "nndescent)")
+    ap.add_argument("--build-k", type=int, default=20,
+                    help="[ann] raw k-NN degree out of the construct stage")
+    ap.add_argument("--build-rounds", type=int, default=15,
+                    help="[ann] NN-Descent round budget")
+    ap.add_argument("--diversify", default=None,
+                    choices=["none", "gd", "dpg"],
+                    help="[ann] diversify stage (default: gd; none for "
+                         "hnsw constructs)")
     ap.add_argument("--r-tile", type=int, default=0,
                     help="[ann] gather-kernel neighbor tile (0 = default)")
     ap.add_argument("--scorer", default="exact",

@@ -69,6 +69,11 @@ def generate(out: str) -> None:
         pq_ids=np.asarray(pq.ids),
         pq_dists=np.asarray(pq.dists),
         pq_comps=np.asarray(pq.n_comps),
+        # fixed-seed BUILD adjacency (tests/test_graph_build.py): silent
+        # drift in NN-Descent or the GD prune/reverse-union fails CI even
+        # when the search outputs above happen to survive it
+        build_knn_ids=np.asarray(g.neighbors),
+        build_gd_ids=np.asarray(gd.neighbors),
     )
     print(f"wrote {out}: flat comps mean={float(flat.n_comps.mean()):.1f}, "
           f"hier comps mean={float(hier.n_comps.mean()):.1f}, "

@@ -1,0 +1,191 @@
+"""IndexArtifact round-trip parity + on-disk format guards.
+
+The acceptance contract: a saved-then-loaded artifact yields BIT-IDENTICAL
+search results (ids/dists/n_comps) to the in-memory build — for flat,
+GD/DPG-diversified, hierarchical, and PQ-compressed indexes, under both
+base placements."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import io as rio
+from repro.core.build import BuildSpec, build_index
+from repro.core.engine import Searcher, SearchSpec
+
+PQ_BUILD = dict(compress="pq", pq_m=8, pq_k=32)
+PQ_SEARCH = dict(scorer="pq", pq_m=8, pq_k=32)
+
+# case -> (BuildSpec kwargs, SearchSpec kwargs). Every diversify scheme, the
+# hierarchy, and the compressed scorer under both placements are covered.
+CASES = {
+    "flat": (dict(construct="exact", diversify="none", graph_k=12),
+             dict(ef=32, k=2, entry="projection")),
+    "gd": (dict(construct="nndescent", diversify="gd", graph_k=12,
+                nd_rounds=6),
+           dict(ef=32, k=2, entry="random")),
+    "dpg": (dict(construct="exact", diversify="dpg", graph_k=12),
+            dict(ef=32, k=2, entry="lsh")),
+    "hier": (dict(construct="hnsw", diversify="none", graph_k=12),
+             dict(ef=32, k=2, entry="hierarchy")),
+    "pq_device": (dict(construct="exact", diversify="gd", graph_k=12,
+                       **PQ_BUILD),
+                  dict(ef=32, k=2, entry="projection", **PQ_SEARCH)),
+    "pq_host": (dict(construct="exact", diversify="gd", graph_k=12,
+                     **PQ_BUILD),
+                dict(ef=32, k=2, entry="projection", base_placement="host",
+                     **PQ_SEARCH)),
+}
+
+
+@pytest.fixture(scope="module")
+def world():
+    key = jax.random.PRNGKey(17)
+    base = jax.random.uniform(key, (800, 16))
+    queries = jax.random.uniform(jax.random.fold_in(key, 1), (16, 16))
+    return base, queries
+
+
+@pytest.fixture(scope="module")
+def built(world):
+    """One build per distinct BuildSpec (pq_device/pq_host share one)."""
+    base, _ = world
+    cache = {}
+    out = {}
+    for name, (bkw, _skw) in CASES.items():
+        spec = BuildSpec(**bkw)
+        if spec not in cache:
+            cache[spec] = build_index(base, spec, key=jax.random.PRNGKey(23))
+        out[name] = cache[spec]
+    return out
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_roundtrip_search_is_bit_identical(world, built, case, tmp_path):
+    base, queries = world
+    _bkw, skw = CASES[case]
+    res = built[case]
+    spec = SearchSpec(**skw)
+    mem = Searcher.from_build(base, res, key=jax.random.PRNGKey(23))
+    want = mem.search(queries, spec)
+
+    path = rio.save_index(
+        os.path.join(tmp_path, case),
+        rio.IndexArtifact.from_build(base, res, metric="l2",
+                                     key=jax.random.PRNGKey(23)),
+    )
+    got = rio.load_index(path).to_searcher().search(queries, spec)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(want.dists),
+                                  np.asarray(got.dists))
+    np.testing.assert_array_equal(np.asarray(want.n_comps),
+                                  np.asarray(got.n_comps))
+    if spec.base_placement == "host":
+        np.testing.assert_array_equal(np.asarray(want.host_bytes),
+                                      np.asarray(got.host_bytes))
+        assert int(got.host_bytes.min()) > 0
+
+
+def test_loaded_pq_never_retrains(world, built, tmp_path):
+    """The serve fix: a loaded artifact carries its code table — pq_index
+    returns it as-is instead of re-running k-means at startup."""
+    base, _ = world
+    res = built["pq_device"]
+    path = rio.save_index(
+        os.path.join(tmp_path, "pq"),
+        rio.IndexArtifact.from_build(base, res, metric="l2"),
+    )
+    s = rio.load_index(path).to_searcher()
+    idx = s.pq_index(SearchSpec(**PQ_SEARCH))
+    assert idx is s._pq_attached  # served, not trained
+    np.testing.assert_array_equal(np.asarray(idx.codes),
+                                  np.asarray(res.pq.codes))
+
+
+def test_manifest_contents(world, built, tmp_path):
+    base, _ = world
+    res = built["hier"]
+    path = rio.save_index(
+        os.path.join(tmp_path, "m"),
+        rio.IndexArtifact.from_build(base, res, metric="l2",
+                                     key=jax.random.PRNGKey(23)),
+    )
+    m = json.loads(str(np.load(path)["manifest"][()]))
+    assert m["format"] == rio.FORMAT_MAGIC
+    assert m["version"] == rio.ARTIFACT_VERSION
+    assert (m["n"], m["d"]) == (800, 16)
+    assert m["num_layers"] == res.hierarchy.num_layers
+    assert m["provenance"]["build_report"]["spec"]["construct"] == "hnsw"
+    assert m["provenance"]["build_report"]["degree"]["max"] >= 1
+
+
+def test_from_searcher_persists_lazily_trained_pq(world, tmp_path):
+    base, queries = world
+    s = Searcher.build(base, key=jax.random.PRNGKey(2), graph_k=10)
+    s.pq_index(SearchSpec(**PQ_SEARCH))  # lazy train
+    path = rio.save_index(os.path.join(tmp_path, "lazy"),
+                          rio.IndexArtifact.from_searcher(s))
+    art = rio.load_index(path)
+    assert art.pq is not None and (art.pq.M, art.pq.K) == (8, 32)
+    spec = SearchSpec(ef=24, k=1, entry="projection", **PQ_SEARCH)
+    want = s.search(queries, spec)
+    got = art.to_searcher().search(queries, spec)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+
+
+def test_legacy_flat_npz_still_loads(world, tmp_path):
+    """Pre-manifest serve format {base, neighbors, metric} loads as v0."""
+    base, queries = world
+    res = build_index(base, BuildSpec(construct="exact", graph_k=10))
+    path = os.path.join(tmp_path, "legacy.npz")
+    np.savez(path, base=np.asarray(base),
+             neighbors=np.asarray(res.graph.neighbors), metric="l2")
+    art = rio.load_index(path)
+    assert art.version == 0 and art.provenance.get("legacy")
+    r = art.to_searcher().search(queries,
+                                 SearchSpec(ef=24, k=1, entry="projection"))
+    assert r.ids.shape == (queries.shape[0], 1)
+
+
+def test_newer_schema_version_rejected(tmp_path):
+    path = os.path.join(tmp_path, "future.npz")
+    manifest = {"format": rio.FORMAT_MAGIC,
+                "version": rio.ARTIFACT_VERSION + 1,
+                "metric": "l2", "n": 1, "d": 1, "degree": 1}
+    np.savez(path, manifest=np.array(json.dumps(manifest)),
+             base=np.zeros((1, 1), np.float32),
+             neighbors=np.zeros((1, 1), np.int32))
+    with pytest.raises(ValueError, match="newer"):
+        rio.load_index(path)
+
+
+def test_wrong_magic_rejected(tmp_path):
+    path = os.path.join(tmp_path, "alien.npz")
+    np.savez(path, manifest=np.array(json.dumps({"format": "other"})))
+    with pytest.raises(ValueError, match="format"):
+        rio.load_index(path)
+
+
+def test_shape_mismatch_rejected(world, tmp_path):
+    """A manifest whose shapes disagree with the arrays (truncated write,
+    hand-edited file) must fail loudly, not search garbage."""
+    path = os.path.join(tmp_path, "corrupt.npz")
+    manifest = {"format": rio.FORMAT_MAGIC, "version": rio.ARTIFACT_VERSION,
+                "metric": "l2", "n": 999, "d": 16, "degree": 4}
+    np.savez(path, manifest=np.array(json.dumps(manifest)),
+             base=np.zeros((10, 16), np.float32),
+             neighbors=np.zeros((10, 4), np.int32))
+    with pytest.raises(ValueError, match="corrupt|disagree"):
+        rio.load_index(path)
+
+
+def test_suffixless_path_normalized(world, built, tmp_path):
+    base, _ = world
+    p = rio.save_index(os.path.join(tmp_path, "noext"),
+                       rio.IndexArtifact.from_build(base, built["flat"],
+                                                    metric="l2"))
+    assert p.endswith(".npz") and os.path.exists(p)
+    assert rio.load_index(os.path.join(tmp_path, "noext")).n == 800

@@ -166,6 +166,70 @@ def test_pq_adc_padding_never_leaks(n, M, seed):
                                rtol=1e-4, atol=1e-4)
 
 
+# Fixed shapes for the diversification properties: one jit compile per
+# prune scheme across every hypothesis example.
+_DIV_N, _DIV_D, _DIV_L = 64, 8, 12
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), use_dpg=st.booleans())
+def test_diversification_invariants(seed, use_dpg):
+    """Build-pipeline invariants of the GD/DPG stages (DESIGN.md §10):
+    kept edges ⊆ the candidate set, per-row keeps ≤ L/2, the reverse union
+    introduces no self-loops and respects the degree cap, and a re-run of
+    the same prune is bit-identical (pure function of its inputs)."""
+    from repro.core import bruteforce, diversify
+
+    key = jax.random.PRNGKey(seed)
+    base = jax.random.normal(key, (_DIV_N, _DIV_D))
+    g = bruteforce.exact_knn_graph(base, _DIV_L)
+    prune = diversify.dpg_prune if use_dpg else diversify.gd_prune
+    kept = prune(base, g)
+    kp, ids = np.asarray(kept), np.asarray(g.neighbors)
+    for r in range(_DIV_N):
+        row = kp[r][kp[r] >= 0]
+        assert len(row) <= _DIV_L // 2                       # keep cap
+        assert set(row.tolist()) <= set(ids[r][ids[r] >= 0].tolist())
+    merged, stats = diversify.add_reverse_edges_with_stats(kept, _DIV_L)
+    mg = np.asarray(merged)
+    assert ((mg >= 0).sum(1) <= _DIV_L).all()                # degree cap
+    self_ids = np.arange(_DIV_N)[:, None]
+    assert not ((mg == self_ids) & (mg >= 0)).any()          # no self-loops
+    assert stats.dropped_slot >= 0 and stats.dropped_cap >= 0
+    assert stats.candidates == int((kp >= 0).sum())
+    # determinism across rebuilds (fixed inputs -> identical prune)
+    np.testing.assert_array_equal(np.asarray(prune(base, g)), kp)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), cap=st.sampled_from([4, 8, 16]))
+def test_reverse_union_preserves_forward_within_cap(seed, cap):
+    """Forward (pruned) edges survive the union unless the cap is full, and
+    every reported drop is real: kept-edge count + dropped_cap equals the
+    unbounded union's edge count."""
+    from repro.core import bruteforce, diversify
+
+    key = jax.random.PRNGKey(seed)
+    base = jax.random.normal(key, (_DIV_N, _DIV_D))
+    g = bruteforce.exact_knn_graph(base, _DIV_L)
+    kept = diversify.gd_prune(base, g)
+    merged, stats = diversify.add_reverse_edges_with_stats(kept, cap)
+    kp, mg = np.asarray(kept), np.asarray(merged)
+    kept_edges = int((mg >= 0).sum())
+    for r in range(_DIV_N):
+        fwd = set(kp[r][kp[r] >= 0].tolist())
+        got = set(mg[r][mg[r] >= 0].tolist())
+        assert fwd <= got or len(got) == cap
+    # recount the unbounded union with the same slot policy
+    unbounded, ustats = diversify.add_reverse_edges_with_stats(
+        kept, _DIV_N  # cap can never bind at n
+    )
+    assert ustats.dropped_cap == 0
+    assert kept_edges + stats.dropped_cap == int(
+        (np.asarray(unbounded) >= 0).sum()
+    )
+
+
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**16), frac=st.floats(0.1, 0.9))
 def test_moe_capacity_drop_monotone(seed, frac):
