@@ -31,11 +31,13 @@ WORLD_KEYS = ("n", "d", "q", "ef")
 PROFILES = {
     # per-push CI: tight wall, the host-tier sweep runs at the main-world n
     "default": dict(max_wall_ratio=1.25, max_comps_ratio=1.10,
-                    max_recall_drop=0.02, min_host_tier_rows=1),
+                    max_recall_drop=0.02, min_host_tier_rows=1,
+                    min_serving_rows=3),
     # scheduled large-n run: night runners are noisier (wall loosened), and
     # the sweep must cover all three tier points incl. n=200k
     "nightly": dict(max_wall_ratio=1.60, max_comps_ratio=1.10,
-                    max_recall_drop=0.02, min_host_tier_rows=3),
+                    max_recall_drop=0.02, min_host_tier_rows=3,
+                    min_serving_rows=3),
 }
 
 # host-tier invariants (checked on every FRESH row, baseline or not: the
@@ -43,6 +45,13 @@ PROFILES = {
 HOST_TIER_MIN_RECALL_FRAC = 0.95   # host recall vs device-exact recall
 HOST_TIER_MIN_PARITY = 0.995       # host top-1 ids vs device-pq top-1 ids
 HOST_TIER_MIN_QPS_RATIO = 0.30     # bounded qps loss for the host gather
+
+# serving invariants (baseline-independent; DESIGN.md §11). Parity is 1.0
+# exactly — served answers are BIT-identical to direct search, not close.
+# The low-load p99 gate reads against the paced single-batch wall measured
+# on the same arrival schedule (serving_ref_wall_ms).
+SERVING_MIN_PARITY = 1.0
+SERVING_P99_WALL_FACTOR = 2.0
 
 
 def _metric(row: dict, key: str, side: str, other: dict | None, tag: str,
@@ -55,8 +64,8 @@ def _metric(row: dict, key: str, side: str, other: dict | None, tag: str,
         if other is None:
             violations.append(
                 f"{tag}: metric {key!r} missing from {side} report "
-                f"(required by the host-tier invariants, no baseline "
-                f"involved)"
+                f"(required by a baseline-independent invariant — "
+                f"host-tier or serving — no baseline involved)"
             )
             return None
         have = other.get(key, "<also missing>")
@@ -123,9 +132,67 @@ def check_host_tier(rows: list[dict], *, min_rows: int,
     return violations
 
 
+def check_serving(report: dict, *, min_rows: int, out=print) -> list[str]:
+    """Baseline-independent invariants of the serving sweep: bit-parity of
+    every served request against direct search, no shedding at the low-load
+    point, low-load p99 within SERVING_P99_WALL_FACTOR of the paced
+    single-batch wall, and served recall/comps at low load EQUAL to the
+    closed-batch twins (same requests, same keys — any drift means the
+    padding mask leaked into real rows)."""
+    violations = []
+    rows = report.get("serving_sweep", [])
+    if len(rows) < min_rows:
+        violations.append(
+            f"serving_sweep has {len(rows)} row(s); profile requires >= "
+            f"{min_rows} offered-QPS points"
+        )
+    for r in rows:
+        tag = f"serving[x{r.get('load_factor', '?')}]"
+        parity = _metric(r, "parity", "fresh", None, tag, violations)
+        if parity is not None and parity < SERVING_MIN_PARITY:
+            violations.append(
+                f"{tag}: parity {parity} < {SERVING_MIN_PARITY} (served "
+                f"answers must bit-match direct Searcher.search)"
+            )
+    if not rows:
+        return violations
+    low = min(rows, key=lambda r: r.get("load_factor", float("inf")))
+    tag = f"serving[x{low.get('load_factor', '?')}] (low load)"
+    ref_wall = _metric(report, "serving_ref_wall_ms", "fresh", None, tag,
+                       violations)
+    p99 = _metric(low, "p99_ms", "fresh", None, tag, violations)
+    shed = _metric(low, "shed", "fresh", None, tag, violations)
+    if ref_wall is not None and p99 is not None:
+        out(f"[perf-guard] {tag}: p99 {p99}ms vs paced single-batch wall "
+            f"{ref_wall}ms (allowed <= "
+            f"{SERVING_P99_WALL_FACTOR * ref_wall:.2f})")
+        if p99 > SERVING_P99_WALL_FACTOR * ref_wall:
+            violations.append(
+                f"{tag}: p99_ms {p99} > {SERVING_P99_WALL_FACTOR} * "
+                f"serving_ref_wall_ms ({ref_wall}) — serving-layer overhead "
+                f"no longer hides behind one batch wall"
+            )
+    if shed:
+        violations.append(
+            f"{tag}: shed {shed} request(s); the low-load point must admit "
+            f"everything"
+        )
+    for served_key, batch_key in (
+            ("recall_at_1", "serving_batch_recall_at_1"),
+            ("comps_per_query", "serving_batch_comps_per_query")):
+        sv = _metric(low, served_key, "fresh", None, tag, violations)
+        bv = _metric(report, batch_key, "fresh", None, tag, violations)
+        if sv is not None and bv is not None and sv != bv:
+            violations.append(
+                f"{tag}: served {served_key} {sv} != closed-batch twin "
+                f"{batch_key} {bv} (must be equal bit-for-bit at equal spec)"
+            )
+    return violations
+
+
 def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
             max_comps_ratio: float, max_recall_drop: float,
-            min_host_tier_rows: int = 1,
+            min_host_tier_rows: int = 1, min_serving_rows: int = 3,
             allow_world_mismatch: bool = False, out=print) -> list[str]:
     """Return a list of violation messages (empty = pass)."""
     if any(baseline.get(k) != fresh.get(k) for k in WORLD_KEYS):
@@ -260,6 +327,39 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
                     f"{tag}: {key} {b_rec} -> {f_rec} "
                     f"(allowed drop {max_recall_drop})"
                 )
+    # serving sweep: internal invariants on the fresh report (parity, low-
+    # load p99 vs the paced single-batch wall, served == closed-batch
+    # twins), then the latency profile vs the baseline at the REFERENCE
+    # offered-QPS point — the middle load factor, where the pipeline is
+    # busy but not overloaded (the overload point's p99 is shed-policy
+    # noise, not a perf trajectory). The guard arms itself the first time a
+    # baseline carries serving rows.
+    violations += check_serving(fresh, min_rows=min_serving_rows, out=out)
+    base_srv = sorted(baseline.get("serving_sweep", []),
+                      key=lambda r: r.get("load_factor", 0))
+    if base_srv:
+        ref = base_srv[len(base_srv) // 2]
+        lf = ref.get("load_factor")
+        tag = f"serving[x{lf}] (reference point)"
+        f = next((r for r in fresh.get("serving_sweep", [])
+                  if r.get("load_factor") == lf), None)
+        if f is None:
+            violations.append(f"{tag} missing from fresh report")
+        else:
+            b_p99, f_p99 = _pair(ref, f, "p99_ms", tag, violations)
+            b_sus, f_sus = _pair(ref, f, "sustained_qps", tag, violations)
+            out(f"[perf-guard] {tag}: p99 {b_p99} -> {f_p99}, "
+                f"sustained {b_sus} -> {f_sus}")
+            if b_p99 is not None and f_p99 > b_p99 * max_wall_ratio:
+                violations.append(
+                    f"{tag}: p99_ms regressed "
+                    f">{(max_wall_ratio-1)*100:.0f}%: {b_p99} -> {f_p99}"
+                )
+            if b_sus is not None and f_sus < b_sus / max_wall_ratio:
+                violations.append(
+                    f"{tag}: sustained_qps dropped "
+                    f">{(1-1/max_wall_ratio)*100:.0f}%: {b_sus} -> {f_sus}"
+                )
     return violations
 
 
@@ -293,6 +393,7 @@ def main() -> None:
                          if args.max_recall_drop is not None
                          else prof["max_recall_drop"]),
         min_host_tier_rows=prof["min_host_tier_rows"],
+        min_serving_rows=prof["min_serving_rows"],
         allow_world_mismatch=args.allow_world_mismatch,
     )
     if violations:

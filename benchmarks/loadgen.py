@@ -1,0 +1,330 @@
+"""Open-loop Poisson load generator for the ANN serving layer (§11).
+
+Closed-loop benchmarks (submit, wait, repeat) hide overload: the client
+slows down with the server and the measured latency stays flat. An OPEN
+loop draws arrival times from a seeded Poisson process and submits on
+schedule whether or not earlier requests finished — offered load is an
+input, latency and shed rate are outputs, which is the only way the
+"p99 vs offered QPS" curve a deployment is judged on can be measured
+(coordinated-omission-free by construction).
+
+Everything is deterministic per seed: request sizes and pool offsets come
+from one ``np.random.default_rng``; per-request PRNG keys fold the request
+index into a base key, so the bit-parity contract between served and
+direct ``Searcher.search`` answers is checkable request by request.
+
+    PYTHONPATH=src python -m benchmarks.loadgen --mode closed --requests 200
+
+runs the CI serving smoke: a closed-loop pass over a small world that
+exits nonzero unless every served request bit-matches direct search.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import NamedTuple
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.core import bruteforce, diversify  # noqa: E402
+from repro.core.engine import Searcher, SearchSpec  # noqa: E402
+from repro.launch.server import AnnServer, ServeConfig  # noqa: E402
+
+# Offered load as a fraction of measured closed-batch (serial) capacity.
+# 0.05x is the "low offered load" point the p99 <= 2x single-batch-wall gate
+# reads — sparse enough that Poisson bursts rarely stack more batches than
+# one service time covers. The continuous-batching pipeline sustains well
+# ABOVE 1x serial capacity (live batches overlap host seeding with device
+# execution), so exhibiting shedding against the shallow SWEEP_CONFIG queue
+# takes the 3x point.
+LOAD_FACTORS = (0.05, 0.5, 3.0)
+# deliberately NOT all bucket sizes: 3 pads to 4 and 6 pads to 8, so the
+# sweep's mean_fill column actually measures padding overhead
+REQUEST_SIZES = (1, 2, 3, 4, 6, 8)
+
+SWEEP_CONFIG = ServeConfig(buckets=(1, 2, 4, 8, 16),
+                           max_live_batches=4, max_queue_depth=16)
+
+
+class RequestSpec(NamedTuple):
+    """One request to be offered: real query rows + its PRNG key + where its
+    rows sit in the pool (for ground-truth lookup)."""
+
+    rows: np.ndarray
+    key: jax.Array
+    start: int
+
+
+def poisson_arrivals(qps: float, n: int, seed: int) -> np.ndarray:
+    """n arrival times (seconds from t0) of a Poisson process with the given
+    REQUEST rate — exponential inter-arrivals, deterministic per seed."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / qps, size=n))
+
+
+def make_requests(pool: np.ndarray, n_requests: int, sizes, seed: int,
+                  base_key: jax.Array) -> list[RequestSpec]:
+    """Ragged request stream over a query pool: sizes drawn uniformly from
+    ``sizes``, rows sliced at seeded offsets (no wraparound, so ground-truth
+    rows line up), key = fold_in(base_key, request index)."""
+    rng = np.random.default_rng(seed)
+    pool = np.asarray(pool, np.float32)
+    reqs = []
+    for i in range(n_requests):
+        sz = int(rng.choice(sizes))
+        start = int(rng.integers(0, pool.shape[0] - sz + 1))
+        reqs.append(RequestSpec(rows=pool[start:start + sz],
+                                key=jax.random.fold_in(base_key, i),
+                                start=start))
+    return reqs
+
+
+def run_open_loop(server: AnnServer, requests: list[RequestSpec],
+                  arrivals: np.ndarray) -> None:
+    """Submit each request at its scheduled arrival time regardless of
+    completions; poll the server while waiting so retire/admit keep moving.
+    Blocks until the stream drains."""
+    t0 = time.monotonic()
+    for req, at in zip(requests, arrivals):
+        while True:
+            dt = at - (time.monotonic() - t0)
+            if dt <= 0:
+                break
+            server.poll()
+            time.sleep(min(dt, 5e-4))
+        # >1ms behind schedule means the stream is outrunning the serving
+        # thread: enqueue/shed only (the listener half of a real server),
+        # don't steal admission time — that is what lets the queue actually
+        # fill and the shed path trigger under overload
+        server.submit(req.rows, req.key, advance=dt > -1e-3)
+    server.drain()
+
+
+def run_closed_loop(server: AnnServer, requests: list[RequestSpec]) -> None:
+    """Backpressured stream: a full queue blocks the client instead of
+    shedding — the CI smoke drives this path."""
+    for req in requests:
+        server.submit_wait(req.rows, req.key)
+    server.drain()
+
+
+def direct_baseline(searcher: Searcher, spec: SearchSpec,
+                    requests: list[RequestSpec]):
+    """The closed-batch twin: every request straight through
+    ``Searcher.search`` with its own key (untimed outputs + a timed pass).
+    Served answers must bit-match these; the timed walls give the capacity
+    the sweep's offered-QPS points are scaled from."""
+    results = []
+    for req in requests:  # untimed: outputs + compile warmup per shape
+        res = searcher.search(req.rows, spec, req.key)
+        jax.block_until_ready(res.ids)
+        results.append((np.asarray(res.ids), np.asarray(res.dists),
+                        np.asarray(res.n_comps)))
+    walls = []
+    for req in requests:  # timed: pure service time, compiles already paid
+        t = time.monotonic()
+        jax.block_until_ready(searcher.search(req.rows, spec, req.key).ids)
+        walls.append(time.monotonic() - t)
+    return results, np.array(walls)
+
+
+def paced_direct_walls(searcher: Searcher, spec: SearchSpec,
+                       requests: list[RequestSpec],
+                       arrivals: np.ndarray) -> np.ndarray:
+    """Single-batch search walls measured on the SAME arrival schedule the
+    low-load serving point runs: each request sleeps until its Poisson
+    arrival, then one blocking direct search. Idle gaps between requests
+    cool caches and clock frequency exactly as they do for the server, so
+    ``p99(serving) <= 2 * p99(these walls)`` isolates serving-layer overhead
+    (queue, padding, polling) instead of measuring machine idle effects."""
+    walls = []
+    t0 = time.monotonic()
+    for req, at in zip(requests, arrivals):
+        dt = at - (time.monotonic() - t0)
+        if dt > 0:
+            time.sleep(dt)
+        t = time.monotonic()
+        jax.block_until_ready(searcher.search(req.rows, spec, req.key).ids)
+        walls.append(time.monotonic() - t)
+    return np.array(walls)
+
+
+def check_parity(completed, baseline: dict) -> tuple[int, int]:
+    """(matched, checked) over ids/dists/n_comps of every completed request
+    against its direct-search twin — the bit-parity acceptance gate."""
+    ok = 0
+    for req in completed:
+        ids, dists, comps = baseline[req.rid]
+        if (np.array_equal(req.ids, ids)
+                and np.array_equal(req.dists, dists)
+                and np.array_equal(req.n_comps, comps)):
+            ok += 1
+    return ok, len(completed)
+
+
+def _recall_comps(reqs_done, requests: list[RequestSpec],
+                  gt: np.ndarray) -> tuple[float, float]:
+    hits, rows, comps = 0, 0, 0.0
+    for req in reqs_done:
+        spec_ = requests[req.rid]
+        g = gt[spec_.start:spec_.start + req.ids.shape[0], 0]
+        hits += int((req.ids[:, 0] == g).sum())
+        rows += req.ids.shape[0]
+        comps += float(req.n_comps.sum())
+    return hits / max(rows, 1), comps / max(rows, 1)
+
+
+def serving_sweep(searcher: Searcher, spec: SearchSpec, pool, gt,
+                  load_factors=LOAD_FACTORS, n_requests: int = 120,
+                  sizes=REQUEST_SIZES, config: ServeConfig = SWEEP_CONFIG,
+                  seed: int = 0, out=print) -> dict:
+    """Offered-QPS sweep: measure closed-batch capacity, then run the same
+    deterministic request stream open-loop at each load factor. Returns
+    {"serving_ref_wall_ms": .., "serving_capacity_qps": ..,
+     "serving_sweep": [row per load factor]} for BENCH_engine.json."""
+    pool = np.asarray(pool, np.float32)
+    gt = np.asarray(gt)
+    base_key = jax.random.fold_in(searcher.key, 777)
+    requests = make_requests(pool, n_requests, sizes, seed, base_key)
+
+    direct, walls = direct_baseline(searcher, spec, requests)
+    baseline = {i: r for i, r in enumerate(direct)}
+    total_rows = sum(r.rows.shape[0] for r in requests)
+    capacity_qps = total_rows / float(walls.sum())
+    mean_size = total_rows / n_requests
+    # the p99 <= 2x gate's reference: single-batch walls PACED at the
+    # low-load point's own schedule (same idle gaps, same seed)
+    low_arrivals = poisson_arrivals(
+        load_factors[0] * capacity_qps / mean_size, n_requests, seed * 1000
+    )
+    paced = paced_direct_walls(searcher, spec, requests, low_arrivals)
+    ref_wall_ms = float(np.percentile(paced, 99)) * 1e3
+    out(f"loadgen/baseline: capacity={capacity_qps:.0f} rows/s "
+        f"(hot back-to-back), paced single-batch wall "
+        f"p99={ref_wall_ms:.2f}ms over {n_requests} requests "
+        f"({total_rows} rows)")
+
+    rows = []
+    for li, lf in enumerate(load_factors):
+        offered_qps = lf * capacity_qps
+        arrivals = poisson_arrivals(offered_qps / mean_size, n_requests,
+                                    seed=seed * 1000 + li)
+        server = AnnServer(searcher, spec, config)
+        server.warmup()
+        run_open_loop(server, requests, arrivals)
+        st = server.stats()
+        ok, checked = check_parity(server.completed, baseline)
+        recall, comps = _recall_comps(server.completed, requests, gt)
+        row = {
+            "load_factor": lf,
+            "offered_qps": round(offered_qps, 1),
+            "n_requests": n_requests,
+            "completed": st["completed"],
+            "shed": st["shed"],
+            "shed_rate": round(st["shed"] / n_requests, 4),
+            "p50_ms": st.get("p50_ms"),
+            "p90_ms": st.get("p90_ms"),
+            "p99_ms": st.get("p99_ms"),
+            "mean_queue_ms": st.get("mean_queue_ms"),
+            "sustained_qps": st.get("sustained_qps"),
+            "parity": round(ok / max(checked, 1), 4),
+            "recall_at_1": round(recall, 4),
+            "comps_per_query": round(comps, 1),
+            "mean_fill": st["mean_fill"],
+            "bucket_counts": st["bucket_counts"],
+        }
+        rows.append(row)
+        out(f"loadgen/sweep x{lf}: offered={row['offered_qps']:.0f} "
+            f"p50={row['p50_ms']}ms p99={row['p99_ms']}ms "
+            f"sustained={row['sustained_qps']} shed={row['shed']} "
+            f"parity={row['parity']:.3f} fill={row['mean_fill']:.2f}")
+    # closed-batch twins of the served recall/comps: bit-parity means the
+    # low-load served columns must EQUAL these (check_regression enforces it)
+    b_recall, b_comps = _batch_twins(requests, baseline, gt)
+    return {
+        "serving_ref_wall_ms": round(ref_wall_ms, 3),
+        "serving_capacity_qps": round(capacity_qps, 1),
+        "serving_batch_recall_at_1": round(b_recall, 4),
+        "serving_batch_comps_per_query": round(b_comps, 1),
+        "serving_sweep": rows,
+    }
+
+
+def _batch_twins(requests, baseline, gt) -> tuple[float, float]:
+    hits, rows, comps = 0, 0, 0.0
+    for i, spec_ in enumerate(requests):
+        ids, _, n_comps = baseline[i]
+        g = gt[spec_.start:spec_.start + ids.shape[0], 0]
+        hits += int((ids[:, 0] == g).sum())
+        rows += ids.shape[0]
+        comps += float(n_comps.sum())
+    return hits / max(rows, 1), comps / max(rows, 1)
+
+
+def _build_world(n: int, d: int, pool_q: int, key):
+    base = jax.random.uniform(key, (n, d))
+    pool = jax.random.uniform(jax.random.fold_in(key, 1), (pool_q, d))
+    g = bruteforce.exact_knn_graph(base, 16)
+    gd = diversify.build_gd_graph(base, g)
+    searcher = Searcher.from_graph(base, gd, key=key)
+    gt = np.asarray(bruteforce.ground_truth(pool, base, 1))
+    return searcher, np.asarray(pool, np.float32), gt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("open", "closed"), default="closed")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--n", type=int, default=3000)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--pool-q", type=int, default=256)
+    ap.add_argument("--ef", type=int, default=32)
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="open mode: offered request rate (0 = 0.5x measured "
+                         "capacity)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(args.seed)
+    searcher, pool, gt = _build_world(args.n, args.d, args.pool_q, key)
+    spec = SearchSpec(ef=args.ef, k=1, entry="random")
+    requests = make_requests(pool, args.requests, REQUEST_SIZES, args.seed,
+                             jax.random.fold_in(searcher.key, 777))
+    direct, walls = direct_baseline(searcher, spec, requests)
+    baseline = {i: r for i, r in enumerate(direct)}
+
+    server = AnnServer(searcher, spec, SWEEP_CONFIG)
+    server.warmup()
+    if args.mode == "closed":
+        run_closed_loop(server, requests)
+    else:
+        total_rows = sum(r.rows.shape[0] for r in requests)
+        cap = total_rows / float(walls.sum())
+        req_rate = args.qps or 0.5 * cap / (total_rows / args.requests)
+        run_open_loop(server, requests,
+                      poisson_arrivals(req_rate, args.requests, args.seed))
+    st = server.stats()
+    ok, checked = check_parity(server.completed, baseline)
+    recall, comps = _recall_comps(server.completed, requests, gt)
+    print(f"loadgen/{args.mode}: completed={st['completed']} "
+          f"shed={st['shed']} p50={st.get('p50_ms')}ms "
+          f"p99={st.get('p99_ms')}ms sustained={st.get('sustained_qps')} "
+          f"parity={ok}/{checked} recall@1={recall:.3f} comps={comps:.0f} "
+          f"fill={st['mean_fill']:.2f} buckets={st['bucket_counts']}")
+    if args.mode == "closed" and (st["shed"] or checked != args.requests):
+        print("loadgen: FAIL — closed loop must complete every request")
+        raise SystemExit(1)
+    if ok != checked:
+        print(f"loadgen: FAIL — {checked - ok} served requests diverge from "
+              f"direct Searcher.search (bit-parity contract, DESIGN.md §11)")
+        raise SystemExit(1)
+    print("loadgen: OK — every served request bit-matches direct search")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,14 +18,17 @@ import sys
 sys.path.insert(0, "src")
 
 import jax  # noqa: E402
+import numpy as np  # noqa: E402
 
 from repro.core import bruteforce, diversify  # noqa: E402
 from repro.core.engine import ENTRY_STRATEGIES, Searcher, SearchSpec  # noqa: E402
 
 try:
     from .bench_util import timeit  # noqa: E402
+    from .loadgen import serving_sweep  # noqa: E402
 except ImportError:  # run as a plain script: python benchmarks/smoke.py
     from bench_util import timeit  # noqa: E402
+    from loadgen import serving_sweep  # noqa: E402
 
 # Streaming sweep worlds: (Q, n, d). Kept small — graphs here are exact k-NN
 # (no NN-Descent) so the sweep adds seconds, not minutes, to CI.
@@ -316,6 +319,13 @@ def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
     report["build_sweep"] = _build_sweep(
         base, queries, gt, ef, jax.random.fold_in(key, 400), out
     )
+
+    # open-loop served latency vs offered QPS — DESIGN.md §11. Same world,
+    # same random-entry spec as the beam-core tracker, ragged requests cut
+    # from the main query pool: the served-vs-closed-batch recall/comps
+    # columns are bit-comparable by construction.
+    report.update(serving_sweep(searcher, spec, np.asarray(queries),
+                                np.asarray(gt), out=out))
 
     # device-vs-host base placement at growing n — DESIGN.md §9; a sweep
     # point at the main n reuses the world built above

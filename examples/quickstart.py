@@ -4,12 +4,20 @@ IndexArtifact, and searches it through the SearchEngine — one beam core,
 pluggable entry strategies (DESIGN.md §3, §10).
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --serve
+
+``--serve`` runs the continuous-batching server (DESIGN.md §11) instead of
+closed batches: ragged requests arrive open-loop on a Poisson schedule,
+pad into bucketed compiled cores, and every answer still bit-matches
+direct search.
 """
+import argparse
 import os
 import sys
 import tempfile
 
 sys.path.insert(0, "src")
+sys.path.insert(0, ".")   # benchmarks/ (the --serve loadgen) lives at the root
 
 import jax  # noqa: E402
 
@@ -20,7 +28,48 @@ from repro.core.engine import Searcher, SearchSpec  # noqa: E402
 from repro.data.synthetic import make_ann_dataset  # noqa: E402
 
 
+def serve_demo(searcher, queries, metric):
+    """Open-loop serving over the built index: offered QPS in, p50/p99 and
+    shed rate out (DESIGN.md §11)."""
+    import numpy as np
+
+    from benchmarks.loadgen import (make_requests, poisson_arrivals,
+                                    run_open_loop)
+    from repro.launch.server import AnnServer, ServeConfig
+
+    spec = SearchSpec(ef=32, k=1, metric=metric, entry="random")
+    server = AnnServer(searcher, spec,
+                       ServeConfig(buckets=(1, 2, 4, 8, 16),
+                                   max_live_batches=4, max_queue_depth=16))
+    server.warmup()    # one compiled beam core per bucket, off the clock
+
+    pool = np.asarray(queries, np.float32)
+    requests = make_requests(pool, n_requests=150, sizes=(1, 2, 4, 8),
+                             seed=0,
+                             base_key=jax.random.fold_in(searcher.key, 777))
+    mean_size = sum(r.rows.shape[0] for r in requests) / len(requests)
+    for qps in (100.0, 400.0):
+        srv = AnnServer(server.searcher, spec, server.config)
+        srv.warmup()
+        run_open_loop(srv, requests,
+                      poisson_arrivals(qps / mean_size, len(requests), seed=1))
+        st = srv.stats()
+        print(f"serve @ {qps:>5.0f} offered qps: p50={st['p50_ms']}ms "
+              f"p90={st['p90_ms']}ms p99={st['p99_ms']}ms "
+              f"sustained={st['sustained_qps']} shed={st['shed']} "
+              f"fill={st['mean_fill']} buckets={st['bucket_counts']}")
+    # the §11 contract: a served request == direct search, bit for bit
+    req = srv.completed[0]
+    direct = srv.searcher.search(req.queries, spec, req.key)
+    assert (req.ids == direct.ids[:req.ids.shape[0]]).all()
+    print("served answers bit-match direct Searcher.search: True")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--serve", action="store_true",
+                    help="open-loop continuous-batching serving demo (§11)")
+    args = ap.parse_args()
     key = jax.random.PRNGKey(0)
     base, queries, metric = make_ann_dataset("SIFT1M", scale=0.02, n_queries=200)
     print(f"dataset: n={base.shape[0]} d={base.shape[1]} metric={metric}")
@@ -45,6 +94,9 @@ def main():
     #    beam core — random (the paper's flat-HNSW start) vs projection
     #    (SRS-style sketch scan)
     searcher = Searcher.from_build(base, result, key=key)
+    if args.serve:
+        serve_demo(searcher, queries, metric)
+        return
     gt = bruteforce.ground_truth(queries, base, 1, metric)
     for entry in ("random", "projection"):
         for ef in (16, 32, 64):

@@ -67,6 +67,19 @@ def default_max_steps(ef: int, expand_width: int = 1) -> int:
     return -(-4 * ef // expand_width) + 64
 
 
+def mask_padded_queries(entry_ids: jax.Array,
+                        q_valid: jax.Array | None) -> jax.Array:
+    """Padding-row seeding policy (DESIGN.md §11): rows with ``q_valid``
+    False get an all-INVALID entry row, so they score zero comparisons at
+    init, freeze on the first step (nothing expandable), and return
+    (INVALID, +inf, 0 comps). Every per-row statistic of a real row is
+    bit-identical to the unpadded search — the invariant bucketed serving
+    pads on. ``q_valid=None`` means all rows are real."""
+    if q_valid is None:
+        return entry_ids
+    return jnp.where(q_valid[:, None], entry_ids, INVALID)
+
+
 def dedup_rows(ids: jax.Array) -> jax.Array:
     """Sort each row and mark repeats INVALID — the dup-free-rows invariant
     ``_mark_visited``'s scatter-add requires. Order is not preserved."""
@@ -266,15 +279,19 @@ def beam_search(
     scorer: str = "exact",
     scorer_state=None,
     rerank: int = 0,
+    q_valid: jax.Array | None = None,
 ) -> SearchResult:
     """Best-first graph search. entry_ids (Q, E) seeds (E <= ef).
     expand_width > 1 expands several vertices per step (beyond-paper);
     r_tile sets the gather kernel's neighbor tile (0 = kernel default);
     scorer picks the per-hop distance implementation (``core.scorers``) with
     ``scorer_state`` its per-batch operand pytree, and compressed scorers
-    finish with an exact rerank of the ``rerank`` best survivors (0 = ef)."""
+    finish with an exact rerank of the ``rerank`` best survivors (0 = ef);
+    q_valid (Q,) bool marks real rows — padding rows (False) cost zero
+    comparisons and return (INVALID, +inf), see ``mask_padded_queries``."""
     if max_steps is None:
         max_steps = default_max_steps(ef, expand_width)
+    entry_ids = mask_padded_queries(entry_ids, q_valid)
     state = _init_state(queries, base, neighbors, entry_ids, ef, metric,
                         r_tile, scorer, scorer_state)
 
@@ -306,6 +323,7 @@ def beam_traverse(
     r_tile: int = 0,
     scorer: str = "pq",
     scorer_state=None,
+    q_valid: jax.Array | None = None,
 ) -> TraverseResult:
     """The beam loop WITHOUT the rerank tail — the device half of a tiered
     search (DESIGN.md §9). No ``base`` operand: the scorer must be base-free
@@ -324,6 +342,7 @@ def beam_traverse(
         )
     if max_steps is None:
         max_steps = default_max_steps(ef, expand_width)
+    entry_ids = mask_padded_queries(entry_ids, q_valid)
     state = _init_state(queries, None, neighbors, entry_ids, ef, metric,
                         r_tile, scorer, scorer_state)
 

@@ -455,7 +455,8 @@ class Searcher:
     def _host_start(self, queries, spec: SearchSpec,
                     key: jax.Array | None = None, *,
                     entries: jax.Array | None = None,
-                    entry_comps: jax.Array | None = None) -> "_HostPending":
+                    entry_comps: jax.Array | None = None,
+                    q_valid: jax.Array | None = None) -> "_HostPending":
         """Device half of a host-tier search: seed, traverse on the code
         table, and ISSUE the async host->device gather of the top-``rerank``
         survivor rows. Returns a pending handle whose copy is in flight —
@@ -466,12 +467,14 @@ class Searcher:
         store = self.base_store(spec.base_placement)
         if entries is None:
             entries, entry_comps = self.seed(queries, spec, key)
+        if q_valid is not None and entry_comps is not None:
+            entry_comps = jnp.where(q_valid, entry_comps, 0)
         state = self.scorer_state(queries, spec)
         trav = beam_traverse(
             queries, self.neighbors, entries,
             ef=spec.ef, metric=spec.metric, max_steps=spec.max_steps,
             expand_width=spec.expand_width, r_tile=spec.r_tile,
-            scorer=spec.scorer, scorer_state=state,
+            scorer=spec.scorer, scorer_state=state, q_valid=q_valid,
         )
         cand = trav.cand_ids[:, :rerank_slice(spec.ef, spec.k, spec.rerank)]
         rows, host_bytes = store.gather(cand)
@@ -498,25 +501,34 @@ class Searcher:
 
     def search(self, queries, spec: SearchSpec, key: jax.Array | None = None,
                *, entries: jax.Array | None = None,
-               entry_comps: jax.Array | None = None) -> SearchResult:
+               entry_comps: jax.Array | None = None,
+               q_valid: jax.Array | None = None) -> SearchResult:
         """Seed (unless ``entries`` pre-computed via :meth:`seed`) + beam.
 
         Passing ``entries``/``entry_comps`` lets benchmarks time the beam
-        core separately from seed generation."""
+        core separately from seed generation. ``q_valid`` (Q,) bool marks
+        real rows of a bucket-padded batch (DESIGN.md §11): padding rows
+        (False) seed all-INVALID, cost zero comparisons, and return
+        (INVALID, +inf, 0) without perturbing real rows — the serving layer
+        seeds each request on its real rows first (strategy parity), then
+        pads queries/entries up to the bucket and masks here."""
         self._check_metric(spec)
         if spec.base_placement != "device":
             return self._host_finish(self._host_start(
-                queries, spec, key, entries=entries, entry_comps=entry_comps
+                queries, spec, key, entries=entries, entry_comps=entry_comps,
+                q_valid=q_valid,
             ))
         if entries is None:
             entries, entry_comps = self.seed(queries, spec, key)
+        if q_valid is not None and entry_comps is not None:
+            entry_comps = jnp.where(q_valid, entry_comps, 0)
         res = beam_search(
             queries, self.base, self.neighbors, entries,
             ef=spec.ef, k=spec.k, metric=spec.metric,
             max_steps=spec.max_steps, expand_width=spec.expand_width,
             r_tile=spec.r_tile, scorer=spec.scorer,
             scorer_state=self.scorer_state(queries, spec),
-            rerank=spec.rerank,
+            rerank=spec.rerank, q_valid=q_valid,
         )
         if entry_comps is not None:
             res = res._replace(n_comps=res.n_comps + entry_comps)
@@ -566,19 +578,23 @@ class Searcher:
         for i, lo in enumerate(range(0, Q, tile_q)):
             tile = queries[lo:lo + tile_q]
             pad = tile_q - tile.shape[0]
-            if pad:  # keep the compiled shape fixed
+            if pad:  # keep the compiled shape fixed; padding rows are masked
+                # out via q_valid (§11) so they cost zero comparisons instead
+                # of redundantly re-searching the last real row
                 tile = jnp.concatenate(
-                    [tile, jnp.broadcast_to(tile[-1:], (pad, tile.shape[1]))]
+                    [tile, jnp.zeros((pad, tile.shape[1]), tile.dtype)]
                 )
             take = tile_q - pad
+            valid = jnp.arange(tile_q) < take
             kt = jax.random.fold_in(key, i)
             if tiered:
-                p = self._host_start(tile, spec, kt)  # copy now in flight
+                p = self._host_start(tile, spec, kt,
+                                     q_valid=valid)  # copy now in flight
                 if pending is not None:
                     finish(*pending)  # previous tile, its copy long overlapped
                 pending = (p, take)
                 continue
-            res = self.search(tile, spec, kt)
+            res = self.search(tile, spec, kt, q_valid=valid)
             ids.append(res.ids[:take])
             dists.append(res.dists[:take])
             comps.append(res.n_comps[:take])

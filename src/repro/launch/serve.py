@@ -21,6 +21,74 @@ from repro import configs
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 
 
+def serve_open_loop(searcher, spec, args, key) -> None:
+    """``--serve``: ragged Poisson request traffic through the continuous-
+    batching server (launch/server.py) instead of pre-formed equal batches —
+    bucketed compiled cores, admission cap, queue-depth shedding, p50/p99
+    over per-request enqueue->complete latency (DESIGN.md §11)."""
+    import numpy as np
+
+    from repro.core import bruteforce
+    from repro.launch.server import AnnServer, ServeConfig
+
+    try:
+        from benchmarks.loadgen import (make_requests, poisson_arrivals,
+                                        run_open_loop)
+    except ImportError as e:
+        raise SystemExit(
+            "--serve drives benchmarks/loadgen.py; run from the repo root "
+            "(PYTHONPATH=src python -m repro.launch.serve ...) so the "
+            "benchmarks package is importable"
+        ) from e
+
+    sizes = tuple(int(s) for s in args.request_sizes.split(","))
+    config = ServeConfig(
+        buckets=tuple(int(b) for b in args.serve_buckets.split(",")),
+        max_live_batches=args.max_live_batches,
+        max_queue_depth=args.queue_depth,
+    )
+    server = AnnServer(searcher, spec, config)
+    d_dim = searcher.base.shape[1]
+    pool = np.asarray(
+        jax.random.normal(jax.random.fold_in(key, 11), (256, d_dim)),
+        np.float32,
+    )
+    requests = make_requests(pool, args.serve_requests, sizes, seed=0,
+                             base_key=jax.random.fold_in(searcher.key, 777))
+    server.warmup()   # compile one beam core per bucket off the timed path
+
+    mean_size = sum(r.rows.shape[0] for r in requests) / len(requests)
+    arrivals = poisson_arrivals(args.serve_qps / mean_size, len(requests),
+                                seed=0)
+    run_open_loop(server, requests, arrivals)
+    st = server.stats()
+
+    # recall/comps over the actual served traffic (ground truth off the
+    # timed path, shed requests excluded — they never produced answers)
+    gt = np.asarray(
+        bruteforce.ground_truth(pool, searcher.base, 1, searcher.metric)
+    )
+    hits = rows = comps = 0
+    for req in server.completed:
+        g = gt[requests[req.rid].start:
+               requests[req.rid].start + req.ids.shape[0], 0]
+        hits += int((req.ids[:, 0] == g).sum())
+        rows += req.ids.shape[0]
+        comps += float(req.n_comps.sum())
+    print(f"[serve-ann] open loop: offered {args.serve_qps:.0f} qps over "
+          f"{len(requests)} requests (sizes {sizes}), buckets "
+          f"{config.buckets}, {config.max_live_batches} live / "
+          f"{config.max_queue_depth} queued max")
+    print(f"[serve-ann] served {st['completed']} requests "
+          f"({st['shed']} shed): p50={st.get('p50_ms')} ms "
+          f"p90={st.get('p90_ms')} ms p99={st.get('p99_ms')} ms, "
+          f"queue wait {st.get('mean_queue_ms')} ms, sustained "
+          f"{st.get('sustained_qps')} qps, fill {st['mean_fill']}, "
+          f"buckets {st['bucket_counts']}")
+    print(f"[serve-ann] served recall@1={hits / max(rows, 1):.3f}, "
+          f"comps/query={comps / max(rows, 1):.0f}")
+
+
 def serve_ann(args) -> None:
     """ANN serving family: load an index artifact (or build one through the
     ``core.build`` pipeline and save it), then answer batched query streams
@@ -126,20 +194,32 @@ def serve_ann(args) -> None:
     res = do_search(warm, qkey)                  # compile + strategy prep
     jax.block_until_ready(res.ids)
 
+    if args.serve:
+        serve_open_loop(searcher, spec, args, qkey)
+        return
+
+    # the query stream is materialized (and blocked on) BEFORE t0, for both
+    # batch and stream modes — reported qps measures search, not the
+    # jax.random.normal synthesis that used to run inside the timer
+    stream = [
+        jax.random.normal(jax.random.fold_in(qkey, b), (args.batch, d_dim))
+        for b in range(args.batches)
+    ]
+    skeys = [jax.random.fold_in(qkey, 1000 + b) for b in range(args.batches)]
+    jax.block_until_ready(stream)
+
     t0 = time.time()
-    served_q, served_ids, served_comps, served = [], [], [], 0
-    for b in range(args.batches):
-        q = jax.random.normal(jax.random.fold_in(qkey, b), (args.batch, d_dim))
-        res = do_search(q, jax.random.fold_in(qkey, 1000 + b))
+    served_ids, served_comps, served = [], [], 0
+    for q, kb in zip(stream, skeys):
+        res = do_search(q, kb)
         jax.block_until_ready(res.ids)
         served += args.batch
-        served_q.append(q)
         served_ids.append(res.ids[:, 0])
         served_comps.append(res.n_comps)
     dt = time.time() - t0
     # recall/comps over the actual served traffic (ground truth computed off
     # the timed path)
-    all_q = jnp.concatenate(served_q)
+    all_q = jnp.concatenate(stream)
     gt = bruteforce.ground_truth(all_q, searcher.base, 1, searcher.metric)
     recall = float((jnp.concatenate(served_ids) == gt[:, 0]).mean())
     comps = float(jnp.concatenate(served_comps).mean())
@@ -209,7 +289,30 @@ def main() -> None:
                     help="[ann] where the float base lives (DESIGN.md §9): "
                          "host keeps only PQ codes + adjacency on device and "
                          "gathers rerank rows from host (needs --scorer pq)")
+    ap.add_argument("--serve", action="store_true",
+                    help="[ann] open-loop serving mode (DESIGN.md §11): "
+                         "ragged Poisson request traffic through the "
+                         "continuous-batching server instead of pre-formed "
+                         "--batch x --batches blocks")
+    ap.add_argument("--serve-qps", type=float, default=500.0,
+                    help="[ann] offered load for --serve, query rows/s")
+    ap.add_argument("--serve-requests", type=int, default=200,
+                    help="[ann] requests in the offered stream")
+    ap.add_argument("--serve-buckets", default="1,2,4,8,16",
+                    help="[ann] sorted batch-size buckets; one compiled beam "
+                         "core each, requests pad to the smallest that fits")
+    ap.add_argument("--request-sizes", default="1,2,3,4,6,8",
+                    help="[ann] ragged request sizes drawn by the loadgen")
+    ap.add_argument("--max-live-batches", type=int, default=4,
+                    help="[ann] admission cap: batches in flight at once")
+    ap.add_argument("--queue-depth", type=int, default=16,
+                    help="[ann] backlog bound; submits past it are shed")
     args = ap.parse_args()
+
+    if args.serve and args.arch != "ann":
+        raise SystemExit("--serve is an --arch ann mode")
+    if args.serve and args.stream_tile:
+        raise SystemExit("--serve buckets requests itself; drop --stream-tile")
 
     if args.arch == "ann":
         serve_ann(args)

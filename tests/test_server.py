@@ -1,0 +1,194 @@
+"""Continuous-batching server (launch/server.py, DESIGN.md §11).
+
+The load-bearing invariant: a request padded up to its bucket and searched
+under the ``q_valid`` mask returns BIT-identical ids/dists/n_comps for its
+real rows vs direct ``Searcher.search`` on those rows alone — across every
+entry strategy, scorer, and base placement. Everything the server does
+(bucketing, admission, overlap) rests on that; the rest of the file locks
+the serving mechanics around it (bucket pick, shedding, timestamps, stats).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bruteforce, diversify
+from repro.core.engine import ENTRY_STRATEGIES, Searcher, SearchSpec
+from repro.core.topk import INVALID
+from repro.launch.server import AnnServer, Request, ServeConfig
+
+Q_REAL = 11     # deliberately not a bucket size
+BUCKET = 16
+
+
+@pytest.fixture(scope="module")
+def world():
+    key = jax.random.PRNGKey(9)
+    base = jax.random.uniform(key, (1500, 16))
+    queries = jax.random.uniform(jax.random.fold_in(key, 1), (32, 16))
+    searcher = Searcher.build(base, key=key, with_hierarchy=True)
+    gt = bruteforce.ground_truth(queries, base, 1)
+    return searcher, np.asarray(queries, np.float32), np.asarray(gt)
+
+
+def padded_search(searcher, rows, spec, key, bucket):
+    """The server's exact padding recipe (server._search_padded): seed on
+    the REAL rows with the request key, then pad queries with zeros,
+    entries with INVALID, entry comps with 0, and mask via q_valid."""
+    qn, d = rows.shape
+    dev = jnp.asarray(rows)
+    ent, ecomps = searcher.seed(dev, spec, key)
+    pad = bucket - qn
+    dev = jnp.concatenate([dev, jnp.zeros((pad, d), dev.dtype)])
+    ent = jnp.concatenate(
+        [ent, jnp.full((pad, ent.shape[1]), INVALID, jnp.int32)]
+    )
+    ecomps = jnp.concatenate([ecomps, jnp.zeros((pad,), ecomps.dtype)])
+    return searcher.search(dev, spec, entries=ent, entry_comps=ecomps,
+                           q_valid=jnp.arange(bucket) < qn)
+
+
+SCORER_PLACEMENTS = [("exact", "device"), ("pq", "device"), ("pq", "host")]
+
+
+@pytest.mark.parametrize("entry", sorted(ENTRY_STRATEGIES))
+@pytest.mark.parametrize("scorer,placement", SCORER_PLACEMENTS,
+                         ids=[f"{s}-{p}" for s, p in SCORER_PLACEMENTS])
+def test_padding_parity(world, entry, scorer, placement):
+    searcher, queries, _ = world
+    spec = SearchSpec(ef=32, k=4, entry=entry, scorer=scorer,
+                      base_placement=placement)
+    if scorer == "pq":
+        searcher.pq_index(spec)
+    key = jax.random.fold_in(searcher.key, 123)
+    rows = queries[:Q_REAL]
+
+    direct = searcher.search(jnp.asarray(rows), spec, key)
+    padded = padded_search(searcher, rows, spec, key, BUCKET)
+
+    np.testing.assert_array_equal(np.asarray(padded.ids)[:Q_REAL],
+                                  np.asarray(direct.ids))
+    np.testing.assert_array_equal(np.asarray(padded.dists)[:Q_REAL],
+                                  np.asarray(direct.dists))
+    np.testing.assert_array_equal(np.asarray(padded.n_comps)[:Q_REAL],
+                                  np.asarray(direct.n_comps))
+    # padding rows: zero comparisons, no answers
+    np.testing.assert_array_equal(np.asarray(padded.n_comps)[Q_REAL:], 0)
+    assert (np.asarray(padded.ids)[Q_REAL:] == INVALID).all()
+
+
+def test_all_true_mask_is_identity(world):
+    searcher, queries, _ = world
+    spec = SearchSpec(ef=32, k=4, entry="projection")
+    q = jnp.asarray(queries[:8])
+    ent, ecomps = searcher.seed(q, spec)
+    a = searcher.search(q, spec, entries=ent, entry_comps=ecomps)
+    b = searcher.search(q, spec, entries=ent, entry_comps=ecomps,
+                        q_valid=jnp.ones(8, bool))
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    np.testing.assert_array_equal(np.asarray(a.n_comps),
+                                  np.asarray(b.n_comps))
+
+
+def test_server_closed_loop_bit_matches_direct(world):
+    searcher, queries, _ = world
+    spec = SearchSpec(ef=32, k=4, entry="random")
+    server = AnnServer(searcher, spec,
+                       ServeConfig(buckets=(1, 2, 4, 8), max_live_batches=2,
+                                   max_queue_depth=8))
+    server.warmup()
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(24):
+        sz = int(rng.choice((1, 2, 3, 4, 5, 7, 8)))
+        start = int(rng.integers(0, queries.shape[0] - sz + 1))
+        reqs.append((queries[start:start + sz],
+                     jax.random.fold_in(searcher.key, 500 + i)))
+    for rows, key in reqs:
+        server.submit_wait(rows, key)
+    server.drain()
+
+    assert len(server.completed) == len(reqs)
+    assert not server.shed
+    for req in sorted(server.completed, key=lambda r: r.rid):
+        rows, key = reqs[req.rid]
+        direct = searcher.search(jnp.asarray(rows), spec, key)
+        np.testing.assert_array_equal(req.ids, np.asarray(direct.ids))
+        np.testing.assert_array_equal(req.dists, np.asarray(direct.dists))
+        np.testing.assert_array_equal(req.n_comps,
+                                      np.asarray(direct.n_comps))
+
+
+def test_pick_bucket():
+    searcher_free = ServeConfig(buckets=(1, 2, 4, 8))
+    srv = AnnServer.__new__(AnnServer)   # bucket logic needs no engine
+    srv.config = searcher_free
+    assert srv.pick_bucket(1) == 1
+    assert srv.pick_bucket(3) == 4
+    assert srv.pick_bucket(8) == 8
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        srv.pick_bucket(9)
+    with pytest.raises(ValueError, match=">= 1 query row"):
+        srv.pick_bucket(0)
+
+
+def test_config_validation(world):
+    searcher, _, _ = world
+    spec = SearchSpec(ef=16, k=1, entry="random")
+    with pytest.raises(ValueError, match="sorted unique positive"):
+        AnnServer(searcher, spec, ServeConfig(buckets=(4, 2)))
+    with pytest.raises(ValueError, match="sorted unique positive"):
+        AnnServer(searcher, spec, ServeConfig(buckets=()))
+    with pytest.raises(ValueError, match="max_live_batches"):
+        AnnServer(searcher, spec, ServeConfig(max_live_batches=0))
+
+
+def test_queue_depth_shedding(world):
+    searcher, queries, _ = world
+    spec = SearchSpec(ef=16, k=1, entry="random")
+    server = AnnServer(searcher, spec,
+                       ServeConfig(buckets=(1, 2), max_live_batches=1,
+                                   max_queue_depth=2))
+    server.warmup()
+    # a backlogged listener enqueues without advancing the pipeline: the
+    # queue holds 2, everything past that is shed (recorded, not dispatched)
+    for i in range(6):
+        server.submit(queries[i:i + 1], advance=False)
+    assert len(server.queue) == 2
+    assert len(server.shed) == 4
+    assert all(r.shed and r.ids is None for r in server.shed)
+    server.drain()
+    assert len(server.completed) == 2
+    st = server.stats()
+    assert st["completed"] == 2 and st["shed"] == 4
+
+
+def test_timestamps_and_stats(world):
+    searcher, queries, _ = world
+    spec = SearchSpec(ef=16, k=1, entry="random")
+    server = AnnServer(searcher, spec,
+                       ServeConfig(buckets=(1, 2, 4), max_live_batches=2,
+                                   max_queue_depth=8))
+    server.warmup()
+    for i in range(10):
+        server.submit_wait(queries[i:i + 1 + (i % 3)])
+    server.drain()
+    for req in server.completed:
+        assert (req.t_enqueue <= req.t_admit <= req.t_dispatch
+                <= req.t_complete)
+        assert req.latency_s >= 0 and req.queue_wait_s >= 0
+    st = server.stats()
+    assert st["completed"] == 10
+    assert st["p50_ms"] <= st["p90_ms"] <= st["p99_ms"]
+    assert st["real_rows"] == sum(1 + (i % 3) for i in range(10))
+    assert 0 < st["mean_fill"] <= 1
+    assert sum(st["bucket_counts"].values()) == 10
+
+
+def test_oversize_request_rejected(world):
+    searcher, queries, _ = world
+    spec = SearchSpec(ef=16, k=1, entry="random")
+    server = AnnServer(searcher, spec, ServeConfig(buckets=(1, 2, 4)))
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        server.submit(queries[:5])
