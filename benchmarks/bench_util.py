@@ -29,7 +29,7 @@ class AnnWorld:
     def __init__(self, base, queries, metric="l2", k_graph=20, key=None):
         self.base, self.queries, self.metric = base, queries, metric
         self.n = base.shape[0]
-        key = key or jax.random.PRNGKey(0)
+        key = jax.random.PRNGKey(0) if key is None else key
         self.gt = bruteforce.ground_truth(queries, base, 1, metric)
         self.exh_time, _ = timeit(
             lambda: bruteforce.exact_search(queries, base, 1, metric), iters=2

@@ -53,6 +53,17 @@ HOST_TIER_MIN_QPS_RATIO = 0.30     # bounded qps loss for the host gather
 SERVING_MIN_PARITY = 1.0
 SERVING_P99_WALL_FACTOR = 2.0
 
+# entry x termination invariants (baseline-independent; DESIGN.md §12).
+# hubs must buy what the hierarchy buys: recall within the slack at equal
+# (ef, term) and wall bounded by the factor — a hub shortlist scan that
+# costs more than the layer descent it replaces is a failed trade. stable
+# must spend FEWER comps than fixed for the same entry while staying
+# within the recall slack (the per-query early exit is only a win if the
+# saved steps were actually wasted).
+ENTRY_TERM_HUBS_RECALL_SLACK = 0.005
+ENTRY_TERM_HUBS_WALL_FACTOR = 1.5
+ENTRY_TERM_STABLE_RECALL_SLACK = 0.015
+
 
 def _metric(row: dict, key: str, side: str, other: dict | None, tag: str,
             violations: list[str]):
@@ -190,6 +201,71 @@ def check_serving(report: dict, *, min_rows: int, out=print) -> list[str]:
     return violations
 
 
+def check_entry_term(rows: list[dict], *, out=print) -> list[str]:
+    """Baseline-independent invariants of the entry x termination sweep:
+    hubs-vs-hierarchy at equal (ef, term) and stable-vs-fixed per entry.
+    Rows are keyed by (entry, term, restarts); restart rows are exempt from
+    the comps gate (restarts deliberately buy recall with extra comps)."""
+    violations = []
+    idx = {(r.get("entry"), r.get("term"), r.get("restarts", 0)): r
+           for r in rows}
+    hier = idx.get(("hierarchy", "fixed", 0))
+    hubs = idx.get(("hubs", "fixed", 0))
+    if hier is None or hubs is None:
+        violations.append(
+            "entry_term_sweep: missing the fixed-term hierarchy and/or hubs "
+            "row (required by the hubs-vs-hierarchy invariant)"
+        )
+    else:
+        tag = "entry_term[hubs vs hierarchy, fixed]"
+        out(f"[perf-guard] {tag}: recall {hubs.get('recall_at_k')} vs "
+            f"{hier.get('recall_at_k')}, wall {hubs.get('wall_ms')} vs "
+            f"{hier.get('wall_ms')}")
+        h_rec = _metric(hubs, "recall_at_k", "fresh", None, tag, violations)
+        r_rec = _metric(hier, "recall_at_k", "fresh", None, tag, violations)
+        if h_rec is not None and r_rec is not None \
+                and h_rec < r_rec - ENTRY_TERM_HUBS_RECALL_SLACK:
+            violations.append(
+                f"{tag}: hubs recall_at_k {h_rec} < hierarchy {r_rec} - "
+                f"{ENTRY_TERM_HUBS_RECALL_SLACK} at equal ef"
+            )
+        h_w = _metric(hubs, "wall_ms", "fresh", None, tag, violations)
+        r_w = _metric(hier, "wall_ms", "fresh", None, tag, violations)
+        if h_w is not None and r_w is not None \
+                and h_w > r_w * ENTRY_TERM_HUBS_WALL_FACTOR:
+            violations.append(
+                f"{tag}: hubs wall_ms {h_w} > {ENTRY_TERM_HUBS_WALL_FACTOR} "
+                f"* hierarchy wall_ms ({r_w})"
+            )
+    for entry in sorted({r.get("entry") for r in rows}):
+        fixed = idx.get((entry, "fixed", 0))
+        stable = idx.get((entry, "stable", 0))
+        if fixed is None or stable is None:
+            continue
+        tag = f"entry_term[{entry}: stable vs fixed]"
+        f_rec = _metric(fixed, "recall_at_k", "fresh", None, tag, violations)
+        s_rec = _metric(stable, "recall_at_k", "fresh", None, tag, violations)
+        f_cmp = _metric(fixed, "comps_per_query", "fresh", None, tag,
+                        violations)
+        s_cmp = _metric(stable, "comps_per_query", "fresh", None, tag,
+                        violations)
+        if None in (f_rec, s_rec, f_cmp, s_cmp):
+            continue
+        out(f"[perf-guard] {tag}: recall {f_rec} -> {s_rec}, "
+            f"comps {f_cmp} -> {s_cmp}")
+        if s_rec < f_rec - ENTRY_TERM_STABLE_RECALL_SLACK:
+            violations.append(
+                f"{tag}: stable recall_at_k {s_rec} < fixed {f_rec} - "
+                f"{ENTRY_TERM_STABLE_RECALL_SLACK}"
+            )
+        if s_cmp >= f_cmp:
+            violations.append(
+                f"{tag}: stable comps_per_query {s_cmp} >= fixed {f_cmp} — "
+                f"the per-query early exit saved nothing"
+            )
+    return violations
+
+
 def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
             max_comps_ratio: float, max_recall_drop: float,
             min_host_tier_rows: int = 1, min_serving_rows: int = 3,
@@ -304,6 +380,38 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
             violations.append(
                 f"{tag}: recall_at_1 {b_rec} -> {f_rec} "
                 f"(allowed drop {max_recall_drop})"
+            )
+    # entry x termination sweep: internal invariants on the fresh report
+    # (hubs-vs-hierarchy, stable-vs-fixed), plus recall/comps drift vs the
+    # baseline rows matched by (entry, term, restarts). The guard arms
+    # itself the first time a baseline carries the sweep.
+    if "entry_term_sweep" in fresh:
+        violations += check_entry_term(fresh["entry_term_sweep"], out=out)
+    elif "entry_term_sweep" in baseline:
+        violations.append("entry_term_sweep missing from fresh report")
+    fresh_et = {(r.get("entry"), r.get("term"), r.get("restarts", 0)): r
+                for r in fresh.get("entry_term_sweep", [])}
+    for b in baseline.get("entry_term_sweep", []):
+        bkey = (b.get("entry"), b.get("term"), b.get("restarts", 0))
+        tag = (f"entry_term[{bkey[0]}/{bkey[1]}"
+               f"{'+r' + str(bkey[2]) if bkey[2] else ''}]")
+        f = fresh_et.get(bkey)
+        if f is None:
+            violations.append(f"{tag} missing from fresh report")
+            continue
+        b_rec, f_rec = _pair(b, f, "recall_at_k", tag, violations)
+        b_cmp, f_cmp = _pair(b, f, "comps_per_query", tag, violations)
+        out(f"[perf-guard] {tag}: recall {b_rec} -> {f_rec}, "
+            f"comps {b_cmp} -> {f_cmp}")
+        if b_rec is not None and f_rec < b_rec - max_recall_drop:
+            violations.append(
+                f"{tag}: recall_at_k {b_rec} -> {f_rec} "
+                f"(allowed drop {max_recall_drop})"
+            )
+        if b_cmp is not None and f_cmp > b_cmp * max_comps_ratio:
+            violations.append(
+                f"{tag}: comps_per_query {b_cmp} -> {f_cmp} "
+                f"(allowed <= {b_cmp * max_comps_ratio:.1f})"
             )
     # host-tier sweep: internal invariants on every fresh row (large-n
     # nightly rows have no baseline twin), plus recall drop vs the baseline

@@ -284,6 +284,13 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=16)
     ap.add_argument("--pool-q", type=int, default=256)
     ap.add_argument("--ef", type=int, default=32)
+    ap.add_argument("--term", choices=("fixed", "stable"), default="fixed",
+                    help="per-query termination mode under test: the parity "
+                         "gate must hold with adaptive early-exit too")
+    ap.add_argument("--stable-steps", type=int, default=8)
+    ap.add_argument("--restarts", type=int, default=0,
+                    help="fresh-seed restarts per query (exercises the "
+                         "per-row restart-key parity path)")
     ap.add_argument("--qps", type=float, default=0.0,
                     help="open mode: offered request rate (0 = 0.5x measured "
                          "capacity)")
@@ -292,7 +299,8 @@ def main() -> None:
 
     key = jax.random.PRNGKey(args.seed)
     searcher, pool, gt = _build_world(args.n, args.d, args.pool_q, key)
-    spec = SearchSpec(ef=args.ef, k=1, entry="random")
+    spec = SearchSpec(ef=args.ef, k=1, entry="random", term=args.term,
+                      stable_steps=args.stable_steps, restarts=args.restarts)
     requests = make_requests(pool, args.requests, REQUEST_SIZES, args.seed,
                              jax.random.fold_in(searcher.key, 777))
     direct, walls = direct_baseline(searcher, spec, requests)

@@ -61,6 +61,17 @@ BUILD_SWEEP_K = 16       # raw degree out of the construct stage
 BUILD_SWEEP_ROUNDS = 8   # NN-Descent budget (the smoke world converges well
                          # before; the report's `rounds` column shows it)
 
+# Entry x termination sweep (DESIGN.md §12): the hot-path waste attack.
+# recall@k over a top-k objective (k=1 freezes too eagerly to be a fair
+# stability signal); stable rows run at a RAISED ef ceiling — the point of
+# per-query termination is that easy queries freeze early while hard ones
+# keep the larger budget, so the ceiling stops pricing every query.
+ENTRY_TERM_K = 10
+ENTRY_TERM_ENTRIES = ("random", "hierarchy", "hubs")
+ENTRY_TERM_EF_FACTOR = 2       # stable ceiling = factor * fixed ef
+ENTRY_TERM_STABLE_STEPS = 20   # patience: steps without top-k improvement
+ENTRY_TERM_RESTARTS = 2        # the one restarts>0 row (GNNS-style reseed)
+
 
 def _build_graph(base, key):
     """Exact k-NN graph below the brute-force knee, NN-Descent above it —
@@ -177,6 +188,8 @@ def _build_sweep(base, queries, gt, ef: int, key, out) -> list[dict]:
             "degree_mean": rep.degree["mean"],
             "degree_max": rep.degree["max"],
             "dropped_reverse_edges": rep.dropped_reverse_edges,
+            "lid": rep.lid,
+            "hub_mass": rep.in_degree.get("hub_mass"),
             "memory_mb": round(rep.memory_bytes / 2**20, 2),
             "recall_at_1": round(
                 float((sres.ids[:, 0] == gt[:, 0]).mean()), 4),
@@ -190,6 +203,70 @@ def _build_sweep(base, queries, gt, ef: int, key, out) -> list[dict]:
             f"dropped={row['dropped_reverse_edges']} "
             f"recall={row['recall_at_1']:.3f} "
             f"comps={row['comps_per_query']:.0f}")
+    return rows
+
+
+def _mean_steps(trace_comps) -> float:
+    """Mean per-query effective step count from a cumulative-comps trace:
+    the last scan step whose comparison counter still moved (+1 for the
+    seed-scoring init step). Frozen/done rows stop moving — this is the
+    column that shows term="stable" retiring rows early."""
+    tc = np.asarray(trace_comps)
+    changed = tc[1:] != tc[:-1]                       # (T-1, Q)
+    last = np.where(changed.any(axis=0),
+                    changed.shape[0] - 1 - changed[::-1].argmax(axis=0), -1)
+    return float((last + 2).mean())
+
+
+def _entry_term_sweep(searcher, queries, gt_k, ef: int, out) -> list[dict]:
+    """Seeding x termination matrix over the main world (DESIGN.md §12).
+
+    Rows: every entry in ENTRY_TERM_ENTRIES under term="fixed" at ef and
+    term="stable" at ENTRY_TERM_EF_FACTOR*ef, plus one restarts>0 row.
+    Walls time the FULL search — seeds inside the timer — so the hub
+    shortlist scan vs hierarchy descent cost difference lands in wall_ms,
+    not just in comps. check_regression reads three invariants off these
+    rows: hubs matches hierarchy recall at equal (ef, term) with bounded
+    wall, and per entry stable spends fewer comps than fixed at equal
+    recall."""
+    k = ENTRY_TERM_K
+    configs = []
+    for entry in ENTRY_TERM_ENTRIES:
+        configs.append(SearchSpec(ef=ef, k=k, entry=entry))
+        configs.append(SearchSpec(ef=ENTRY_TERM_EF_FACTOR * ef, k=k,
+                                  entry=entry, term="stable",
+                                  stable_steps=ENTRY_TERM_STABLE_STEPS))
+    configs.append(SearchSpec(ef=ENTRY_TERM_EF_FACTOR * ef, k=k,
+                              entry="hubs", term="stable",
+                              stable_steps=ENTRY_TERM_STABLE_STEPS,
+                              restarts=ENTRY_TERM_RESTARTS))
+    rows = []
+    q = queries.shape[0]
+    for spec in configs:
+        wall, res = timeit(lambda: searcher.search(queries, spec), iters=3)
+        _, _, tc = searcher.search_with_trace(queries, spec)
+        ids = np.asarray(res.ids[:, :k])
+        hits = sum(len(set(ids[i]) & set(gt_k[i])) for i in range(q))
+        row = {
+            "entry": spec.entry,
+            "term": spec.term,
+            "ef": spec.ef,
+            "k": k,
+            "stable_steps": (spec.stable_steps if spec.term == "stable"
+                             else None),
+            "restarts": spec.restarts,
+            "recall_at_k": round(hits / (q * k), 4),
+            "comps_per_query": round(float(res.n_comps.mean()), 1),
+            "wall_ms": round(wall * 1e3, 2),
+            "qps": round(q / wall, 1),
+            "mean_steps": round(_mean_steps(tc), 1),
+        }
+        rows.append(row)
+        out(f"smoke/entry_term {row['entry']}/{row['term']}"
+            f"{'+r' + str(row['restarts']) if row['restarts'] else ''} "
+            f"ef={row['ef']}: recall@{k}={row['recall_at_k']:.3f} "
+            f"comps={row['comps_per_query']:.0f} "
+            f"steps={row['mean_steps']:.0f} wall={row['wall_ms']:.1f}ms")
     return rows
 
 
@@ -318,6 +395,12 @@ def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
     # construct × diversify build trajectory over the main world — §10
     report["build_sweep"] = _build_sweep(
         base, queries, gt, ef, jax.random.fold_in(key, 400), out
+    )
+
+    # seeding x termination matrix over the main world — DESIGN.md §12
+    gt_k = np.asarray(bruteforce.ground_truth(queries, base, ENTRY_TERM_K))
+    report["entry_term_sweep"] = _entry_term_sweep(
+        searcher, queries, gt_k, ef, out
     )
 
     # open-loop served latency vs offered QPS — DESIGN.md §11. Same world,

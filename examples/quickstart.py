@@ -1,7 +1,8 @@
 """Quickstart: one BuildSpec builds the paper's hybrid index through the
 unified pipeline (construct · diversify · compress), persists it as an
 IndexArtifact, and searches it through the SearchEngine — one beam core,
-pluggable entry strategies (DESIGN.md §3, §10).
+pluggable entry strategies including the build-derived hub shortlist, and
+per-query adaptive termination (DESIGN.md §3, §10, §12).
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --serve
@@ -92,13 +93,15 @@ def main():
 
     # 2. bind it to the engine and search: swappable seeding through the one
     #    beam core — random (the paper's flat-HNSW start) vs projection
-    #    (SRS-style sketch scan)
+    #    (SRS-style sketch scan) vs hubs (top in-degree shortlist from the
+    #    build, DESIGN.md §12 — the hierarchy's benefit without the
+    #    hierarchy)
     searcher = Searcher.from_build(base, result, key=key)
     if args.serve:
         serve_demo(searcher, queries, metric)
         return
     gt = bruteforce.ground_truth(queries, base, 1, metric)
-    for entry in ("random", "projection"):
+    for entry in ("random", "projection", "hubs"):
         for ef in (16, 32, 64):
             sspec = SearchSpec(ef=ef, k=1, metric=metric, entry=entry)
             res = searcher.search(queries, sspec)
@@ -109,6 +112,23 @@ def main():
                 f"comps/query={comps:.0f} (exhaustive={base.shape[0]}, "
                 f"speedup={base.shape[0]/comps:.1f}x)"
             )
+
+    # 2b. adaptive termination (§12): fixed budget vs per-query stability
+    #     freeze at a raised ef ceiling — easy queries stop early, hard ones
+    #     use the extra headroom; restarts resurrect badly-converged rows
+    fixed = SearchSpec(ef=32, k=1, metric=metric, entry="hubs")
+    for label, sspec in (
+        ("fixed ef=32", fixed),
+        ("stable ef=64 s=12",
+         fixed._replace(ef=64, term="stable", stable_steps=12)),
+        ("stable + 2 restarts",
+         fixed._replace(ef=64, term="stable", stable_steps=12, restarts=2)),
+    ):
+        res = searcher.search(queries, sspec, key)
+        recall = float((res.ids[:, 0] == gt[:, 0]).mean())
+        comps = float(res.n_comps.mean())
+        print(f"term {label:20s}: recall@1={recall:.3f}  "
+              f"comps/query={comps:.0f}")
 
     # 3. persist + reload: the artifact round-trips the graph, metric, key
     #    and build provenance — a reloaded index answers bit-identically

@@ -13,6 +13,17 @@ are masked, not exited (SIMT-style divergence handling).
 
 ``search_with_trace`` runs a fixed-step scan recording (min distance reached,
 cumulative comparisons) — the instrumentation behind paper Fig. 6.
+
+Termination is per query (DESIGN.md §12). ``term="fixed"`` keeps the classic
+rule only: a row stops when its best unexpanded candidate cannot improve the
+ef list. ``term="stable"`` additionally freezes a row whose top-k has not
+improved for ``stable_steps`` consecutive steps — the same ``done`` masking
+``q_valid`` padding uses, so a frozen row's neighbor slots are INVALID in the
+fused gather and it accrues zero comparisons from the freeze on.
+``restarts > 0`` resurrects converged rows GNNS-style with fresh per-row-keyed
+seeds (scored through the scorer, charged to ``n_comps``), bounded by the
+budget; draws fold each row's own key, never the batch shape, so padded or
+bucketed batches restart bit-identically to direct searches.
 """
 from __future__ import annotations
 
@@ -58,6 +69,29 @@ class _State(NamedTuple):
     n_comps: jax.Array     # (Q,)
     done: jax.Array        # (Q,)
     step: jax.Array        # ()
+    stale: jax.Array       # (Q,) consecutive steps without top-k improvement
+    restarts_used: jax.Array  # (Q,) fresh-seed restarts spent so far
+    seed_best: jax.Array   # (Q,) best seed-phase distance (restart gate ref)
+
+
+TERMINATION_MODES = ("fixed", "stable")
+
+
+def check_termination(term: str, restarts: int, restart_keys) -> None:
+    """Shared validation for the adaptive-termination knobs — every beam
+    entry point fails loudly, pre-trace, on an unknown mode or an unkeyed
+    restart request."""
+    if term not in TERMINATION_MODES:
+        raise ValueError(
+            f"unknown termination mode {term!r}; one of {TERMINATION_MODES}"
+        )
+    if restarts > 0 and restart_keys is None:
+        raise ValueError(
+            "restarts > 0 needs restart_keys: (Q, 2) uint32, one PRNG key "
+            "per row (Searcher derives them as fold_in(key, row)). Restart "
+            "draws are keyed per row, never per batch shape, so "
+            "padded/bucketed serving stays bit-identical to direct search."
+        )
 
 
 def default_max_steps(ef: int, expand_width: int = 1) -> int:
@@ -150,12 +184,57 @@ def _init_state(queries, base, neighbors, entry_ids, ef, metric,
         n_comps=(entry_ids >= 0).sum(axis=1, dtype=jnp.int32),
         done=jnp.zeros((Q,), bool),
         step=jnp.int32(0),
+        stale=jnp.zeros((Q,), jnp.int32),
+        restarts_used=jnp.zeros((Q,), jnp.int32),
+        seed_best=cand_d[:, 0],
     )
+
+
+def _restart_rows(queries, base, metric, r_tile, scorer, scorer_state,
+                  restart_keys, restarts: int, restart_gate: float,
+                  n: int, E: int, seed_best,
+                  cand_i, cand_d, cand_e, visited, n_comps, done, stale,
+                  restarts_used):
+    """GNNS-style restart (DESIGN.md §12): a row that converged with budget
+    left — and, when ``restart_gate > 0``, whose best (scorer-currency, i.e.
+    PQ/LSH-estimated under compressed scorers) distance is still worse than
+    ``gate * its own seed-phase best`` — draws E fresh seeds from its OWN
+    folded key, scores them through the scorer (charged to ``n_comps``),
+    marks them visited, merges them unexpanded, and resumes. Rows not
+    restarting pass through bit-unchanged (their draws are INVALID, scored
+    to +inf, and the re-merge of an already-sorted list is the identity)."""
+    can = done & (restarts_used < restarts) & (cand_d[:, 0] < INF)
+    if restart_gate > 0.0:
+        # per-row poor-answer gate: the walk barely improved on its seeds
+        can = can & (cand_d[:, 0] > restart_gate * seed_best)
+    folded = jax.vmap(jax.random.fold_in)(restart_keys, restarts_used)
+    draws = jax.vmap(
+        lambda kk: jax.random.randint(kk, (E,), 0, n, dtype=jnp.int32)
+    )(folded)
+    draws = dedup_rows(jnp.where(can[:, None], draws, INVALID))
+    rd, rids = get_scorer(scorer).score(
+        scorer_state, queries, base, draws, visited,
+        metric=metric, r_tile=r_tile,
+    )                                                                # (Q, E)
+    n_comps = n_comps + (rids >= 0).sum(axis=1, dtype=jnp.int32)
+    visited = _mark_visited(visited, rids)
+    Q, ef = cand_i.shape
+    all_d = jnp.concatenate([cand_d, rd], axis=1)
+    all_i = jnp.concatenate([cand_i, rids], axis=1)
+    all_e = jnp.concatenate([cand_e, jnp.zeros((Q, E), bool)], axis=1)
+    cand_d, order = topk_smallest(all_d, ef)
+    cand_i = jnp.take_along_axis(all_i, order, axis=1)
+    cand_e = jnp.take_along_axis(all_e, order, axis=1)
+    return (cand_i, cand_d, cand_e, visited, n_comps,
+            done & ~can, jnp.where(can, 0, stale),
+            restarts_used + can.astype(jnp.int32))
 
 
 def _step(state: _State, queries, base, neighbors, metric,
           expand_width: int = 1, r_tile: int = 0, scorer: str = "exact",
-          scorer_state=None) -> _State:
+          scorer_state=None, k: int = 1, term: str = "fixed",
+          stable_steps: int = 8, restarts: int = 0,
+          restart_gate: float = 0.0, restart_keys=None) -> _State:
     Q, ef = state.cand_ids.shape
     R = neighbors.shape[1]
 
@@ -218,14 +297,46 @@ def _step(state: _State, queries, base, neighbors, metric,
 
     # frozen queries keep their state
     keep = lambda new, old: jnp.where(done[:, None], old, new)
+    cand_i = keep(cand_i, state.cand_ids)
+    cand_d = keep(cand_d, state.cand_dists)
+    cand_e = keep(cand_e, state.expanded)
+    visited = jnp.where(done[:, None], state.visited, visited)
+    n_comps = jnp.where(done, state.n_comps, n_comps)
+
+    # per-query stability freeze (term="stable", DESIGN.md §12): a row whose
+    # top-k has not strictly improved for stable_steps consecutive steps is
+    # done — next step its expandable mask is False, so it stops paying
+    # comparisons exactly like a q_valid padding row. Static branch: the
+    # fixed mode traces none of this and stays bit-identical to the classic
+    # rule above.
+    stale = state.stale
+    restarts_used = state.restarts_used
+    if term == "stable":
+        kk = min(k, ef)
+        improved = (cand_d[:, :kk] < state.cand_dists[:, :kk]).any(axis=1)
+        stale = jnp.where(done, state.stale,
+                          jnp.where(improved, 0, state.stale + 1))
+        done = done | (stale >= stable_steps)
+    if restarts > 0:
+        (cand_i, cand_d, cand_e, visited, n_comps, done, stale,
+         restarts_used) = _restart_rows(
+            queries, base, metric, r_tile, scorer, scorer_state,
+            restart_keys, restarts, restart_gate,
+            neighbors.shape[0], min(ef, 8), state.seed_best,
+            cand_i, cand_d, cand_e, visited, n_comps, done, stale,
+            restarts_used,
+        )
     return _State(
-        cand_ids=keep(cand_i, state.cand_ids),
-        cand_dists=keep(cand_d, state.cand_dists),
-        expanded=keep(cand_e, state.expanded),
-        visited=jnp.where(done[:, None], state.visited, visited),
-        n_comps=jnp.where(done, state.n_comps, n_comps),
+        cand_ids=cand_i,
+        cand_dists=cand_d,
+        expanded=cand_e,
+        visited=visited,
+        n_comps=n_comps,
         done=done,
         step=state.step + 1,
+        stale=stale,
+        restarts_used=restarts_used,
+        seed_best=state.seed_best,
     )
 
 
@@ -263,7 +374,8 @@ def _finalize(state: _State, queries, base, k, metric, r_tile,
 @functools.partial(
     jax.jit,
     static_argnames=("ef", "k", "metric", "max_steps", "expand_width",
-                     "r_tile", "scorer", "rerank"),
+                     "r_tile", "scorer", "rerank", "term", "stable_steps",
+                     "restarts", "restart_gate"),
 )
 def beam_search(
     queries: jax.Array,
@@ -280,6 +392,11 @@ def beam_search(
     scorer_state=None,
     rerank: int = 0,
     q_valid: jax.Array | None = None,
+    term: str = "fixed",
+    stable_steps: int = 8,
+    restarts: int = 0,
+    restart_gate: float = 0.0,
+    restart_keys: jax.Array | None = None,
 ) -> SearchResult:
     """Best-first graph search. entry_ids (Q, E) seeds (E <= ef).
     expand_width > 1 expands several vertices per step (beyond-paper);
@@ -288,7 +405,11 @@ def beam_search(
     ``scorer_state`` its per-batch operand pytree, and compressed scorers
     finish with an exact rerank of the ``rerank`` best survivors (0 = ef);
     q_valid (Q,) bool marks real rows — padding rows (False) cost zero
-    comparisons and return (INVALID, +inf), see ``mask_padded_queries``."""
+    comparisons and return (INVALID, +inf), see ``mask_padded_queries``;
+    term="stable" freezes rows whose top-k stalls for ``stable_steps`` steps,
+    and ``restarts``/``restart_gate``/``restart_keys`` resurrect converged
+    rows from fresh per-row-keyed seeds (module docstring / DESIGN.md §12)."""
+    check_termination(term, restarts, restart_keys)
     if max_steps is None:
         max_steps = default_max_steps(ef, expand_width)
     entry_ids = mask_padded_queries(entry_ids, q_valid)
@@ -300,7 +421,8 @@ def beam_search(
 
     def body(s: _State):
         return _step(s, queries, base, neighbors, metric, expand_width,
-                     r_tile, scorer, scorer_state)
+                     r_tile, scorer, scorer_state, k, term, stable_steps,
+                     restarts, restart_gate, restart_keys)
 
     state = jax.lax.while_loop(cond, body, state)
     return _finalize(state, queries, base, k, metric, r_tile, scorer,
@@ -310,7 +432,8 @@ def beam_search(
 @functools.partial(
     jax.jit,
     static_argnames=("ef", "metric", "max_steps", "expand_width", "r_tile",
-                     "scorer"),
+                     "scorer", "k", "term", "stable_steps", "restarts",
+                     "restart_gate"),
 )
 def beam_traverse(
     queries: jax.Array,
@@ -324,6 +447,12 @@ def beam_traverse(
     scorer: str = "pq",
     scorer_state=None,
     q_valid: jax.Array | None = None,
+    k: int = 1,
+    term: str = "fixed",
+    stable_steps: int = 8,
+    restarts: int = 0,
+    restart_gate: float = 0.0,
+    restart_keys: jax.Array | None = None,
 ) -> TraverseResult:
     """The beam loop WITHOUT the rerank tail — the device half of a tiered
     search (DESIGN.md §9). No ``base`` operand: the scorer must be base-free
@@ -332,7 +461,8 @@ def beam_traverse(
     that state and ``neighbors``. The caller finishes with an exact rerank of
     ``cand_ids`` against wherever the float rows live (``BaseStore.gather``).
     Numerics are identical to ``beam_search``'s loop — same ``_init_state`` /
-    ``_step`` bodies, same operands."""
+    ``_step`` bodies, same operands (``k`` here only sizes the term="stable"
+    stability window; the full ef list is returned either way)."""
     sc = get_scorer(scorer)
     if getattr(sc, "needs_base", True):
         raise ValueError(
@@ -340,6 +470,7 @@ def beam_traverse(
             "float base is not an operand here — use beam_search, or "
             "scorer='pq'"
         )
+    check_termination(term, restarts, restart_keys)
     if max_steps is None:
         max_steps = default_max_steps(ef, expand_width)
     entry_ids = mask_padded_queries(entry_ids, q_valid)
@@ -351,7 +482,8 @@ def beam_traverse(
 
     def body(s: _State):
         return _step(s, queries, None, neighbors, metric, expand_width,
-                     r_tile, scorer, scorer_state)
+                     r_tile, scorer, scorer_state, k, term, stable_steps,
+                     restarts, restart_gate, restart_keys)
 
     state = jax.lax.while_loop(cond, body, state)
     return TraverseResult(
@@ -372,7 +504,8 @@ def rerank_slice(ef: int, k: int, rerank: int) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=("ef", "k", "metric", "max_steps", "expand_width",
-                     "r_tile", "scorer", "rerank"),
+                     "r_tile", "scorer", "rerank", "term", "stable_steps",
+                     "restarts", "restart_gate"),
 )
 def search_with_trace(
     queries: jax.Array,
@@ -388,6 +521,11 @@ def search_with_trace(
     scorer: str = "exact",
     scorer_state=None,
     rerank: int = 0,
+    term: str = "fixed",
+    stable_steps: int = 8,
+    restarts: int = 0,
+    restart_gate: float = 0.0,
+    restart_keys: jax.Array | None = None,
 ) -> tuple[SearchResult, jax.Array, jax.Array]:
     """Fixed-step variant recording the Fig. 6 statistics.
 
@@ -400,7 +538,11 @@ def search_with_trace(
     trace_comps[t, q] the cumulative distance computations. Under a
     compressed scorer the trace is in the scorer's own currency (ADC scores
     and raw scored-id counts); only the final result is reranked/rescaled.
+    Adaptive termination traces too: after a term="stable" freeze a row's
+    cumulative comparisons are constant for the rest of the scan — the
+    property the frozen-rows-stop-paying test pins.
     """
+    check_termination(term, restarts, restart_keys)
     if max_steps is None:
         max_steps = default_max_steps(ef, expand_width)
     state = _init_state(queries, base, neighbors, entry_ids, ef, metric,
@@ -408,7 +550,8 @@ def search_with_trace(
 
     def body(s: _State, _):
         s2 = _step(s, queries, base, neighbors, metric, expand_width, r_tile,
-                   scorer, scorer_state)
+                   scorer, scorer_state, k, term, stable_steps, restarts,
+                   restart_gate, restart_keys)
         return s2, (s2.cand_dists[:, 0], s2.n_comps)
 
     state, (td, tc) = jax.lax.scan(body, state, None, length=max_steps)

@@ -34,9 +34,12 @@ import jax
 import jax.numpy as jnp
 
 from .graph_index import (
+    DEFAULT_N_HUBS,
     HnswIndex,
     KnnGraph,
     degree_distribution,
+    hub_vertices,
+    in_degree_distribution,
     memory_bytes,
     pad_neighbors,
 )
@@ -74,6 +77,10 @@ class BuildSpec(NamedTuple):
     # report knobs
     proxy_sample: int = 256        # vertices sampled for the graph-recall
                                    # proxy (0 disables the check)
+    n_hubs: int = DEFAULT_N_HUBS   # top in-degree vertices derived for the
+                                   # hubs seeder (persisted in the artifact)
+    lid_sample: int = 256          # points sampled for the Levina–Bickel
+                                   # LID estimate (0 disables; paper Tab. I)
 
 
 class ConstructResult(NamedTuple):
@@ -317,6 +324,15 @@ class BuildReport:
     wall_total_s: float
     memory_bytes: int                 # graph/hierarchy + PQ tables
     layers: list = dataclasses.field(default_factory=list)  # hnsw per-layer
+    # realized in-degree distribution of the final graph — out-degree is
+    # capped by construction, in-degree is where the hub mass shows
+    in_degree: dict = dataclasses.field(default_factory=dict)
+    # top-n_hubs vertices by in-degree (descending), backing the "hubs"
+    # entry strategy; JSON-able so the artifact manifest carries provenance
+    hub_ids: list = dataclasses.field(default_factory=list)
+    # Levina–Bickel MLE local intrinsic dimensionality of the base (paper
+    # Tab. I's curse-of-dimensionality diagnostic; -1.0 when lid_sample=0)
+    lid: float = -1.0
 
     def summary(self) -> dict:
         d = dataclasses.asdict(self)
@@ -333,6 +349,7 @@ class BuildResult(NamedTuple):
     hierarchy: HnswIndex | None
     pq: object | None             # baselines.pq.PQIndex
     report: BuildReport
+    hubs: jax.Array | None = None  # (n_hubs,) int32, in-degree descending
 
     @property
     def neighbors(self) -> jax.Array:
@@ -424,6 +441,24 @@ class GraphBuilder:
                            else graph.neighbors)
         if pq is not None:
             mem += memory_bytes((pq.codebooks, pq.codes))
+
+        # hub derivation off the FINAL adjacency (post-diversify): the walk
+        # the hubs seeder feeds runs on this graph, so its in-degree heavy
+        # tail is the one that matters
+        hubs = hub_vertices(graph.neighbors, spec.n_hubs)
+
+        lid = -1.0
+        if spec.lid_sample:
+            from .lid import lid_mle
+
+            # always Euclidean: LID is a geometric property of the point
+            # set (paper Tab. I), independent of the search metric
+            lid = float(lid_mle(
+                base, k=min(20, base.shape[0] - 2),
+                sample=spec.lid_sample, metric="l2",
+                key=jax.random.fold_in(key, 0x11D),
+            ))
+
         report = BuildReport(
             spec=spec, n=base.shape[0], d=base.shape[1],
             rounds=cres.stats.get("rounds", 0),
@@ -438,9 +473,12 @@ class GraphBuilder:
             wall_total_s=round((t1 - t0) + (t3 - t2) + (t4 - t3), 4),
             memory_bytes=int(mem),
             layers=cres.stats.get("layers", []),
+            in_degree=in_degree_distribution(graph.neighbors),
+            hub_ids=[int(h) for h in hubs],
+            lid=round(lid, 2),
         )
         return BuildResult(graph=graph, hierarchy=cres.hierarchy, pq=pq,
-                           report=report)
+                           report=report, hubs=hubs)
 
 
 def build_index(base, spec: BuildSpec = BuildSpec(),

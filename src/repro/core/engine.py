@@ -11,7 +11,12 @@ where the beam starts:
 * ``hierarchy``  — HNSW greedy descent reduced to a 1-seed picker
                    (operationalizing the paper's Sec. IV claim),
 * ``lsh``        — projection probe + exact rerank (coarse-quantizer seeding
-                   on top of ``baselines/lsh.py``'s SRS sketch).
+                   on top of ``baselines/lsh.py``'s SRS sketch),
+* ``hubs``       — the top in-degree vertices of the realized graph, scored
+                   exactly and the nearest taken (arXiv:2412.01940: the
+                   hierarchy's real contribution is landing on hubs — this
+                   seeder pays a ``hub_count``-point scan instead of a
+                   multi-layer descent for the same landing zone).
 
 ``hnsw_search``, ``flat_search`` and ``distributed_search`` are thin wrappers
 over this module; a new seeder, metric, or shard layout plugs in here once and
@@ -74,6 +79,16 @@ class SearchSpec(NamedTuple):
                                 # "device" = HBM-resident (status quo);
                                 # "host" = host-resident, device keeps only
                                 # codes + adjacency, rerank gathers from host
+    hub_count: int = 32         # hubs scanned per query by the hubs seeder
+    term: str = "fixed"         # beam termination (§12): "fixed" = classic
+                                # rule only; "stable" adds the per-query
+                                # top-k stability freeze
+    stable_steps: int = 8       # freeze after this many non-improving steps
+    restarts: int = 0           # fresh-seed restarts per converged row
+                                # (GNNS-style, comps-charged; 0 = off)
+    restart_gate: float = 0.0   # restart only rows whose best distance is
+                                # still > gate * their seed-phase best
+                                # (0 = unconditional up to the budget)
 
     @property
     def num_seeds(self) -> int:
@@ -196,6 +211,45 @@ class _LshEntry:
         return ids.astype(jnp.int32), comps
 
 
+@register_entry_strategy
+class _HubsEntry:
+    name = "hubs"
+
+    def prepare(self, base, neighbors, hierarchy, spec, key):
+        # fallback for engines without an attached hub list (hand-assembled,
+        # or rehydrated from a pre-v2 artifact): hubs are a deterministic
+        # function of the adjacency, so this recompute is bit-identical to
+        # what the build would have persisted.
+        from .graph_index import hub_vertices
+
+        return hub_vertices(neighbors, spec.hub_count)
+
+    def prepare_ctx(self, searcher, spec, key):
+        """Searcher-aware prepare: reuse the build-persisted hub list when it
+        covers ``spec.hub_count`` (its prefix IS the top-``hub_count`` set —
+        hubs are stored in-degree-descending)."""
+        hubs = searcher.hubs
+        if hubs is not None and hubs.shape[0] >= spec.hub_count:
+            return jnp.asarray(hubs[: spec.hub_count])
+        return self.prepare(searcher.base, searcher.neighbors,
+                            searcher.hierarchy, spec, key)
+
+    def seed(self, aux, queries, base, spec, key):
+        # exact scan over the hub shortlist: H full comparisons buy a
+        # query-dependent landing zone (what the hierarchy descent buys for
+        # a comparable bill, without the layer structure)
+        from repro.kernels import ops
+
+        Q = queries.shape[0]
+        H = aux.shape[0]
+        ids = jnp.broadcast_to(aux[None, :], (Q, H))
+        d = ops.gather_distance(queries, ids, base, metric=spec.metric,
+                                r_tile=spec.r_tile)
+        _, sel = topk_smallest(d, min(spec.num_seeds, H))
+        ent = jnp.take_along_axis(ids, sel, axis=1)
+        return ent.astype(jnp.int32), jnp.full((Q,), H, jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("metric",))
 def _greedy_layer(queries, base, nbrs_g, slot, start_ids, metric):
     """Greedy 1-NN descent on one layer (the coarse-to-fine step, Fig. 1).
@@ -266,12 +320,17 @@ class Searcher:
     """
 
     def __init__(self, base, neighbors, *, hierarchy: HnswIndex | None = None,
-                 metric: str = "l2", key: jax.Array | None = None, pq=None):
+                 metric: str = "l2", key: jax.Array | None = None, pq=None,
+                 hubs: jax.Array | None = None):
         self.base = base
         self.neighbors = neighbors
         self.hierarchy = hierarchy
         self.metric = metric
         self.key = key if key is not None else jax.random.PRNGKey(0)
+        # top in-degree vertices backing the "hubs" seeder, in-degree
+        # descending (attached from a build/artifact; None -> the strategy
+        # recomputes from the adjacency on first use, bit-identically)
+        self.hubs = hubs
         self._aux: dict[tuple, object] = {}
         # PQ code tables backing the "pq" scorer: ``pq`` is an externally
         # trained index attached at engine build time (served for any spec
@@ -307,15 +366,17 @@ class Searcher:
         flat graph feeds the beam, the hierarchy (if built) backs the
         ``hierarchy`` seeder, and a build-time PQ table is attached (the
         ``pq`` scorer then never trains at serve time). The report rides
-        along as ``searcher.build_report``."""
+        along as ``searcher.build_report`` and the build-time hub list backs
+        the ``hubs`` seeder."""
         if metric is None:
             metric = result.report.spec.metric
+        hubs = getattr(result, "hubs", None)
         if result.hierarchy is not None:
             searcher = cls.from_hnsw(base, result.hierarchy, metric=metric,
-                                     key=key, pq=result.pq)
+                                     key=key, pq=result.pq, hubs=hubs)
         else:
             searcher = cls.from_graph(base, result.graph, metric=metric,
-                                      key=key, pq=result.pq)
+                                      key=key, pq=result.pq, hubs=hubs)
         searcher.build_report = result.report
         return searcher
 
@@ -366,16 +427,22 @@ class Searcher:
             )
 
     def prepare(self, spec: SearchSpec):
-        """Build (or fetch) the entry strategy's per-index state."""
+        """Build (or fetch) the entry strategy's per-index state. Strategies
+        exposing ``prepare_ctx`` get the whole searcher (attached hub lists,
+        build provenance); the plain ``prepare`` protocol stays the
+        extension point for external seeders."""
         strat = get_entry_strategy(spec.entry)
-        cache_key = (spec.entry, spec.proj_dim)
+        cache_key = (spec.entry, spec.proj_dim, spec.hub_count)
         if cache_key not in self._aux:
             kp = jax.random.fold_in(
                 self.key, zlib.crc32(spec.entry.encode()) & 0x7FFFFFFF
             )
-            self._aux[cache_key] = strat.prepare(
-                self.base, self.neighbors, self.hierarchy, spec, kp
-            )
+            if hasattr(strat, "prepare_ctx"):
+                self._aux[cache_key] = strat.prepare_ctx(self, spec, kp)
+            else:
+                self._aux[cache_key] = strat.prepare(
+                    self.base, self.neighbors, self.hierarchy, spec, kp
+                )
         return self._aux[cache_key]
 
     def seed(self, queries, spec: SearchSpec, key: jax.Array | None = None):
@@ -386,6 +453,20 @@ class Searcher:
         if key is None:
             key = self.key
         return strat.seed(aux, queries, self.base, spec, key)
+
+    def restart_keys(self, n_rows: int, spec: SearchSpec,
+                     key: jax.Array | None = None) -> jax.Array | None:
+        """Per-row restart keys for ``spec.restarts > 0`` (None otherwise):
+        row i gets ``fold_in(key, i)`` — a function of the row INDEX, not the
+        batch shape, so a request padded into a serving bucket draws the
+        exact same restart seeds its rows would draw in a direct search."""
+        if spec.restarts <= 0:
+            return None
+        if key is None:
+            key = self.key
+        return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(n_rows)
+        )
 
     # -- scorers --------------------------------------------------------------
 
@@ -475,6 +556,9 @@ class Searcher:
             ef=spec.ef, metric=spec.metric, max_steps=spec.max_steps,
             expand_width=spec.expand_width, r_tile=spec.r_tile,
             scorer=spec.scorer, scorer_state=state, q_valid=q_valid,
+            k=spec.k, term=spec.term, stable_steps=spec.stable_steps,
+            restarts=spec.restarts, restart_gate=spec.restart_gate,
+            restart_keys=self.restart_keys(queries.shape[0], spec, key),
         )
         cand = trav.cand_ids[:, :rerank_slice(spec.ef, spec.k, spec.rerank)]
         rows, host_bytes = store.gather(cand)
@@ -529,6 +613,9 @@ class Searcher:
             r_tile=spec.r_tile, scorer=spec.scorer,
             scorer_state=self.scorer_state(queries, spec),
             rerank=spec.rerank, q_valid=q_valid,
+            term=spec.term, stable_steps=spec.stable_steps,
+            restarts=spec.restarts, restart_gate=spec.restart_gate,
+            restart_keys=self.restart_keys(queries.shape[0], spec, key),
         )
         if entry_comps is not None:
             res = res._replace(n_comps=res.n_comps + entry_comps)
@@ -631,6 +718,9 @@ class Searcher:
             scorer=spec.scorer,
             scorer_state=self.scorer_state(queries, spec),
             rerank=spec.rerank,
+            term=spec.term, stable_steps=spec.stable_steps,
+            restarts=spec.restarts, restart_gate=spec.restart_gate,
+            restart_keys=self.restart_keys(queries.shape[0], spec, key),
         )
         return res._replace(n_comps=res.n_comps + extra), td, tc + extra[None, :]
 
@@ -658,14 +748,16 @@ def shard_entries(key: jax.Array, n_shards: int, Q: int, per: int,
 
 
 def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
-                 axis: str, per: int, scorer_state=None):
+                 axis: str, per: int, scorer_state=None, restart_keys=None):
     """Per-shard body for ``shard_map``: the SAME beam core as single-host
     search, plus the all-gather merge. ``live`` False drops a failed or
     straggling shard's contribution (degrades recall, never the query).
     ``scorer_state`` is this shard's operand pytree for ``spec.scorer``
     (e.g. its local PQ codes + the batch LUTs); the rerank inside
     ``beam_search`` runs against the local base, so merged distances are
-    exact regardless of scorer."""
+    exact regardless of scorer. ``spec.term``/``spec.restarts`` reach the
+    shard's beam unchanged (``restart_keys`` (Q, 2) per-row keys required
+    when restarts > 0 — replicate the same keys to every shard)."""
     if spec.base_placement != "device":
         raise ValueError(
             "shard_search reranks in-shard against a device-resident base; "
@@ -678,6 +770,9 @@ def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
         max_steps=spec.max_steps, expand_width=spec.expand_width,
         r_tile=spec.r_tile, scorer=spec.scorer, scorer_state=scorer_state,
         rerank=spec.rerank,
+        term=spec.term, stable_steps=spec.stable_steps,
+        restarts=spec.restarts, restart_gate=spec.restart_gate,
+        restart_keys=restart_keys,
     )
     sid = jax.lax.axis_index(axis)
     gids = globalize_ids(res.ids, sid, per)
@@ -695,7 +790,8 @@ def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
 
 
 def shard_traverse(queries, neighbors, entries, live, *, spec: SearchSpec,
-                   axis: str, per: int, r: int, scorer_state):
+                   axis: str, per: int, r: int, scorer_state,
+                   restart_keys=None):
     """Per-shard body for the HOST-TIER distributed path (DESIGN.md §9):
     traverse on the shard's device-resident code table only (no float base
     operand at all), globalize the top-``r`` ADC survivors, and all-gather
@@ -711,6 +807,9 @@ def shard_traverse(queries, neighbors, entries, live, *, spec: SearchSpec,
         ef=spec.ef, metric=spec.metric, max_steps=spec.max_steps,
         expand_width=spec.expand_width, r_tile=spec.r_tile,
         scorer=spec.scorer, scorer_state=scorer_state,
+        k=spec.k, term=spec.term, stable_steps=spec.stable_steps,
+        restarts=spec.restarts, restart_gate=spec.restart_gate,
+        restart_keys=restart_keys,
     )
     sid = jax.lax.axis_index(axis)
     gids = globalize_ids(trav.cand_ids[:, :r], sid, per)
@@ -724,7 +823,8 @@ def shard_traverse(queries, neighbors, entries, live, *, spec: SearchSpec,
 
 
 def emulated_shard_search(queries, base_shards, nbr_shards, entries, live,
-                          spec: SearchSpec, scorer_states=None):
+                          spec: SearchSpec, scorer_states=None,
+                          restart_keys=None):
     """Host-side loop with identical semantics to ``shard_search`` for runs
     where logical shards exceed physical devices (CI, laptops).
     ``scorer_states`` (optional) is a per-shard list of scorer operands.
@@ -746,6 +846,9 @@ def emulated_shard_search(queries, base_shards, nbr_shards, entries, live,
             r_tile=spec.r_tile, scorer=spec.scorer,
             scorer_state=None if scorer_states is None else scorer_states[s],
             rerank=spec.rerank,
+            term=spec.term, stable_steps=spec.stable_steps,
+            restarts=spec.restarts, restart_gate=spec.restart_gate,
+            restart_keys=restart_keys,
         )
         all_d.append(jnp.where(live[s], res.dists, jnp.inf))
         all_i.append(jnp.where(live[s], globalize_ids(res.ids, s, per), INVALID))

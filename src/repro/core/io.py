@@ -31,10 +31,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph_index import HnswIndex
+from .graph_index import (
+    DEFAULT_N_HUBS,
+    HnswIndex,
+    degree_distribution,
+    hub_vertices,
+    in_degree_distribution,
+)
 
 FORMAT_MAGIC = "repro/index-artifact"
-ARTIFACT_VERSION = 1
+# v2: + hub ids (the "hubs" entry strategy's shortlist) and the realized
+# out/in-degree distributions in the manifest. Pre-v2 artifacts load fine —
+# hubs are recomputed from the adjacency (bit-identical: hub derivation is a
+# deterministic function of the neighbors array).
+ARTIFACT_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -49,6 +59,11 @@ class IndexArtifact:
     pq: object | None = None      # baselines.pq.PQIndex
     provenance: dict = dataclasses.field(default_factory=dict)
     version: int = ARTIFACT_VERSION
+    # (H,) int32 top in-degree vertices, descending — the "hubs" seeder's
+    # shortlist (None = derive at save time / recomputed on legacy load)
+    hubs: jax.Array | None = None
+    # realized {"out": ..., "in": ...} degree distributions (manifest copy)
+    degree_stats: dict = dataclasses.field(default_factory=dict)
 
     @property
     def n(self) -> int:
@@ -71,6 +86,7 @@ class IndexArtifact:
             metric=searcher.metric, key=searcher.key,
             hierarchy=searcher.hierarchy, pq=searcher.pq,
             provenance=dict(provenance or {}),
+            hubs=searcher.hubs,
         )
 
     @classmethod
@@ -82,6 +98,7 @@ class IndexArtifact:
             base=base, neighbors=result.graph.neighbors, metric=metric,
             key=key, hierarchy=result.hierarchy, pq=result.pq,
             provenance={"build_report": result.report.summary()},
+            hubs=getattr(result, "hubs", None),
         )
 
     def to_searcher(self):
@@ -95,6 +112,7 @@ class IndexArtifact:
             hierarchy=self.hierarchy, metric=self.metric,
             key=None if self.key is None else jnp.asarray(self.key),
             pq=self.pq,
+            hubs=None if self.hubs is None else jnp.asarray(self.hubs),
         )
 
 
@@ -119,6 +137,16 @@ def save_index(path: str, artifact: IndexArtifact) -> str:
         "base": np.asarray(artifact.base, np.float32),
         "neighbors": np.asarray(artifact.neighbors, np.int32),
     }
+    # every v2 artifact carries its hub shortlist: derive it here when the
+    # artifact was assembled without one (deterministic from the adjacency)
+    hubs = artifact.hubs
+    if hubs is None:
+        hubs = hub_vertices(artifact.neighbors, DEFAULT_N_HUBS)
+    arrays["hubs"] = np.asarray(hubs, np.int32)
+    degree_stats = artifact.degree_stats or {
+        "out": degree_distribution(artifact.neighbors),
+        "in": in_degree_distribution(artifact.neighbors),
+    }
     manifest = {
         "format": FORMAT_MAGIC,
         "version": ARTIFACT_VERSION,
@@ -126,6 +154,8 @@ def save_index(path: str, artifact: IndexArtifact) -> str:
         "n": int(arrays["base"].shape[0]),
         "d": int(arrays["base"].shape[1]),
         "degree": int(arrays["neighbors"].shape[1]),
+        "n_hubs": int(arrays["hubs"].shape[0]),
+        "degree_stats": degree_stats,
         "num_layers": 0,
         "pq": None,
         "key_impl": None,
@@ -163,12 +193,20 @@ def _load_legacy(blob, path: str) -> IndexArtifact:
             f"{path} is neither an index artifact (no manifest) nor the "
             f"legacy flat-graph format (missing {sorted(missing)})"
         )
+    neighbors = jnp.asarray(blob["neighbors"])
     return IndexArtifact(
         base=jnp.asarray(blob["base"]),
-        neighbors=jnp.asarray(blob["neighbors"]),
+        neighbors=neighbors,
         metric=str(blob["metric"]),
         provenance={"legacy": True},
         version=0,
+        # pre-hub format: recompute the shortlist from the adjacency (same
+        # deterministic derivation a fresh build would persist)
+        hubs=hub_vertices(neighbors, DEFAULT_N_HUBS),
+        degree_stats={
+            "out": degree_distribution(neighbors),
+            "in": in_degree_distribution(neighbors),
+        },
     )
 
 
@@ -229,10 +267,28 @@ def load_index(path: str) -> IndexArtifact:
             M=int(m["pq"]["m"]), K=int(m["pq"]["k"]),
         )
 
+    if m["version"] >= 2:
+        hubs = jnp.asarray(blob["hubs"])
+        if hubs.shape[0] != m.get("n_hubs", hubs.shape[0]):
+            raise ValueError(
+                f"{path}: manifest n_hubs={m.get('n_hubs')} disagrees with "
+                f"the hubs array ({hubs.shape[0]}) — truncated or corrupted "
+                "artifact"
+            )
+        degree_stats = m.get("degree_stats", {})
+    else:
+        # v1 predates hub persistence: recompute from the adjacency on load
+        hubs = hub_vertices(neighbors, DEFAULT_N_HUBS)
+        degree_stats = {
+            "out": degree_distribution(neighbors),
+            "in": in_degree_distribution(neighbors),
+        }
+
     return IndexArtifact(
         base=jnp.asarray(base), neighbors=jnp.asarray(neighbors),
         metric=m["metric"], key=key, hierarchy=hierarchy, pq=pq,
         provenance=m.get("provenance", {}), version=m["version"],
+        hubs=hubs, degree_stats=degree_stats,
     )
 
 

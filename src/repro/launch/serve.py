@@ -159,7 +159,9 @@ def serve_ann(args) -> None:
     spec = SearchSpec(ef=args.ef, k=args.topk, metric=searcher.metric,
                       entry=args.entry, r_tile=args.r_tile,
                       scorer=args.scorer, pq_m=args.pq_m, rerank=args.rerank,
-                      base_placement=args.base_placement)
+                      base_placement=args.base_placement,
+                      term=args.term, stable_steps=args.stable_steps,
+                      restarts=args.restarts)
     if args.base_placement == "host" and args.scorer != "pq":
         raise SystemExit("--base-placement host traverses device-resident "
                          "PQ codes; add --scorer pq")
@@ -246,8 +248,18 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--entry", default="random",
-                    help="[ann] entry strategy: random|projection|hierarchy|lsh")
+                    help="[ann] entry strategy: "
+                         "random|projection|hierarchy|lsh|hubs")
     ap.add_argument("--ef", type=int, default=64, help="[ann] beam width")
+    ap.add_argument("--term", default="fixed", choices=["fixed", "stable"],
+                    help="[ann] per-query termination: fixed = run until the "
+                         "classic done condition; stable = freeze a row once "
+                         "its top-k stops improving for --stable-steps steps")
+    ap.add_argument("--stable-steps", type=int, default=8,
+                    help="[ann] --term stable patience window (steps)")
+    ap.add_argument("--restarts", type=int, default=0,
+                    help="[ann] GNNS-style fresh-seed restarts per query on "
+                         "early convergence (comps charged to the query)")
     ap.add_argument("--topk", type=int, default=10, help="[ann] answers/query")
     ap.add_argument("--batches", type=int, default=8,
                     help="[ann] query batches to serve")

@@ -21,6 +21,10 @@ module is the serving layer between the two:
   Seeding runs on the request's real rows BEFORE padding — that is what
   keeps key-dependent strategies (``random``) parity-exact, since a PRNG
   draw at the bucket shape would not match the request-shaped draw.
+  Adaptive termination (``spec.term="stable"``) and restarts ride the same
+  contract: frozen rows reuse the pad-row masking (zero further comps) and
+  restart keys are a function of the ROW INDEX, so bucketed results stay
+  bit-identical to direct searches under per-query early exit too.
 * **Admission control.** At most ``max_live_batches`` dispatched-and-
   unretired batches; beyond that requests wait in the queue, and past
   ``max_queue_depth`` new requests are shed at submit time (recorded, never
@@ -201,7 +205,11 @@ class AnnServer:
             )
             ecomps = jnp.concatenate([ecomps, jnp.zeros((pad,), ecomps.dtype)])
         valid = jnp.arange(bucket) < qn
-        return self.searcher.search(dev, self.spec, entries=ent,
+        # the request key ALSO rides into the search: restart keys are
+        # fold_in(key, row_index), so the real rows of a padded bucket draw
+        # the exact restart seeds a direct search would (pad rows hold keys
+        # too but can never restart — they finish with an empty beam)
+        return self.searcher.search(dev, self.spec, key, entries=ent,
                                     entry_comps=ecomps, q_valid=valid)
 
     # -- request lifecycle ----------------------------------------------------

@@ -75,7 +75,8 @@ def test_engine_random_equals_inline_composition(world):
                                   np.asarray(inline.n_comps))
 
 
-@pytest.mark.parametrize("entry", ["random", "projection", "hierarchy", "lsh"])
+@pytest.mark.parametrize("entry", ["random", "projection", "hierarchy", "lsh",
+                                   "hubs"])
 def test_entry_strategy_recall_and_cost(world, entry):
     """Every registered strategy reaches high recall at a fraction of the
     exhaustive comparison budget, through the one engine."""
@@ -253,7 +254,8 @@ def test_r_tile_spec_is_result_invariant(world):
 PQ_TEST_SPEC = dict(scorer="pq", pq_m=8, pq_k=64)
 
 
-@pytest.mark.parametrize("entry", ["random", "projection", "hierarchy", "lsh"])
+@pytest.mark.parametrize("entry", ["random", "projection", "hierarchy", "lsh",
+                                   "hubs"])
 def test_pq_scorer_recall_per_strategy(world, entry):
     """The scorer axis is orthogonal to the entry axis: pq-scored traversal
     with exact rerank reaches >= 0.95 of the exact-scored recall at equal ef
@@ -404,3 +406,143 @@ def test_trace_includes_seed_cost(world):
     _, extra = searcher.seed(queries, spec)
     assert (np.asarray(tc[0]) >= np.asarray(extra)).all()
     assert (np.diff(np.asarray(tc), axis=0) >= 0).all()
+
+
+# -- hub seeding + per-query adaptive termination (DESIGN.md §12) -------------
+
+
+def test_hubs_seed_comps_accounting(world):
+    """The hub seeder charges exactly hub_count full comparisons per query
+    (the exact scan over the shortlist) and returns num_seeds entries."""
+    base, queries, gd, idx, _ = world
+    searcher = Searcher.from_graph(base, gd)
+    spec = SearchSpec(ef=16, k=1, entry="hubs", hub_count=24)
+    ent, extra = searcher.seed(queries, spec)
+    assert ent.shape == (queries.shape[0], spec.num_seeds)
+    assert (np.asarray(extra) == 24).all()
+    # seeds really are drawn from the hub shortlist
+    from repro.core.graph_index import hub_vertices
+
+    hubs = set(np.asarray(hub_vertices(gd.neighbors, 24)).tolist())
+    assert set(np.asarray(ent).ravel().tolist()) <= hubs
+
+
+def test_hubs_attached_matches_recompute(world):
+    """A searcher carrying a persisted hub shortlist searches bit-identically
+    to one that recomputes it from the adjacency — the legacy-artifact
+    fallback cannot drift."""
+    from repro.core.graph_index import hub_vertices
+
+    base, queries, gd, idx, _ = world
+    spec = SearchSpec(ef=32, k=2, entry="hubs")
+    fresh = Searcher.from_graph(base, gd)           # recomputes on prepare
+    attached = Searcher(base, gd.neighbors,
+                        hubs=hub_vertices(gd.neighbors, 64))
+    a = fresh.search(queries, spec)
+    b = attached.search(queries, spec)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.n_comps),
+                                  np.asarray(b.n_comps))
+
+
+def test_stable_with_large_patience_equals_fixed(world):
+    """term="stable" degenerates to term="fixed" bit-for-bit when the
+    patience window can never elapse — the adaptive path adds bookkeeping,
+    not behavior, until a row actually freezes."""
+    base, queries, gd, idx, _ = world
+    searcher = Searcher.from_graph(base, gd)
+    spec_f = SearchSpec(ef=32, k=2, entry="projection")
+    spec_s = SearchSpec(ef=32, k=2, entry="projection", term="stable",
+                        stable_steps=10**6)
+    a = searcher.search(queries, spec_f)
+    b = searcher.search(queries, spec_s)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    np.testing.assert_array_equal(np.asarray(a.n_comps),
+                                  np.asarray(b.n_comps))
+
+
+def test_frozen_rows_stop_accruing_comps(world):
+    """The §12 cost contract: same seeds, same ef — a stable run's per-row
+    bill never exceeds the fixed run's, and once a row's cumulative counter
+    stops moving for a full patience window it never moves again (the freeze
+    is final, enforced by the done mask, not by luck)."""
+    base, queries, gd, idx, _ = world
+    searcher = Searcher.from_graph(base, gd)
+    spec_f = SearchSpec(ef=48, k=1, entry="projection")
+    spec_s = SearchSpec(ef=48, k=1, entry="projection", term="stable",
+                        stable_steps=3)
+    ent, extra = searcher.seed(queries, spec_f)
+    fixed = searcher.search(queries, spec_f, entries=ent, entry_comps=extra)
+    stable = searcher.search(queries, spec_s, entries=ent, entry_comps=extra)
+    assert (np.asarray(stable.n_comps) <= np.asarray(fixed.n_comps)).all()
+    assert float(stable.n_comps.mean()) < float(fixed.n_comps.mean())
+
+    _, _, tc = searcher.search_with_trace(queries, spec_s, max_steps=80)
+    tc = np.asarray(tc)
+    W = spec_s.stable_steps + 2
+    for q in range(tc.shape[1]):
+        col = tc[:, q]
+        frozen_at = next(
+            (t for t in range(len(col) - W) if col[t] == col[t + W]), None
+        )
+        assert frozen_at is not None, f"row {q} never froze in 80 steps"
+        assert (col[frozen_at:] == col[frozen_at]).all(), (
+            f"row {q} accrued comparisons after its freeze"
+        )
+
+
+def test_stable_recall_at_matched_comps_ceiling(world):
+    """The trade the sweep ships: per-query termination with a RAISED ef
+    ceiling reaches at least the recall of every fixed run that spends no
+    more comparisons — the saved steps were waste, not recall."""
+    base, queries, gd, idx, gt = world
+    searcher = Searcher.from_hnsw(base, idx)
+    spec_s = SearchSpec(ef=96, k=1, entry="hierarchy", term="stable",
+                        stable_steps=12)
+    st = searcher.search(queries, spec_s)
+    st_rec = float((st.ids[:, 0] == gt[:, 0]).mean())
+    st_comps = float(st.n_comps.mean())
+    for ef in (8, 16, 24, 32, 48):
+        fx = searcher.search(queries, SearchSpec(ef=ef, k=1,
+                                                 entry="hierarchy"))
+        if float(fx.n_comps.mean()) <= st_comps:
+            fx_rec = float((fx.ids[:, 0] == gt[:, 0]).mean())
+            assert st_rec >= fx_rec - 0.02, (
+                ef, fx_rec, st_rec, st_comps, float(fx.n_comps.mean())
+            )
+
+
+def test_restarts_deterministic_and_monotone(world):
+    """Restarts replay bit-identically under a fixed key, only ever improve
+    the answer (fresh seeds merge into the candidate list), and charge their
+    extra scoring to n_comps."""
+    base, queries, gd, idx, gt = world
+    searcher = Searcher.from_graph(base, gd)
+    key = jax.random.PRNGKey(77)
+    spec_r = SearchSpec(ef=32, k=1, entry="random", term="stable",
+                        stable_steps=3, restarts=2)
+    a = searcher.search(queries, spec_r, key)
+    b = searcher.search(queries, spec_r, key)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    np.testing.assert_array_equal(np.asarray(a.n_comps),
+                                  np.asarray(b.n_comps))
+    base_run = searcher.search(queries, spec_r._replace(restarts=0), key)
+    assert (np.asarray(a.n_comps) >= np.asarray(base_run.n_comps)).all()
+    assert float(a.n_comps.mean()) > float(base_run.n_comps.mean())
+    assert (np.asarray(a.dists[:, 0]) <= np.asarray(base_run.dists[:, 0])).all()
+    rec_r = float((a.ids[:, 0] == gt[:, 0]).mean())
+    rec_0 = float((base_run.ids[:, 0] == gt[:, 0]).mean())
+    assert rec_r >= rec_0
+
+
+def test_invalid_termination_spec_raises(world):
+    base, queries, gd, idx, _ = world
+    searcher = Searcher.from_graph(base, gd)
+    with pytest.raises(ValueError, match="term"):
+        searcher.search(queries, SearchSpec(ef=16, term="bogus"))
+    from repro.core.beam_search import check_termination
+
+    with pytest.raises(ValueError, match="restart_keys"):
+        check_termination("stable", 2, None)

@@ -38,6 +38,13 @@ CASES = {
                      **PQ_BUILD),
                 dict(ef=32, k=2, entry="projection", base_placement="host",
                      **PQ_SEARCH)),
+    # hub seeding + adaptive termination + restarts: the persisted hub
+    # shortlist AND the persisted PRNG key must both travel for this one to
+    # replay bit-identically (restart seeds derive from the searcher key)
+    "hubs": (dict(construct="nndescent", diversify="gd", graph_k=12,
+                  nd_rounds=6),
+             dict(ef=32, k=2, entry="hubs", term="stable", stable_steps=6,
+                  restarts=1)),
 }
 
 
@@ -148,6 +155,83 @@ def test_legacy_flat_npz_still_loads(world, tmp_path):
     r = art.to_searcher().search(queries,
                                  SearchSpec(ef=24, k=1, entry="projection"))
     assert r.ids.shape == (queries.shape[0], 1)
+
+
+def test_hubs_persist_bit_identically(world, built, tmp_path):
+    """v2 artifacts carry the hub shortlist; the loaded array is bit-equal
+    to the build-time one AND to a fresh recompute from the adjacency (the
+    derivation is deterministic — stable argsort, ties to lowest id)."""
+    from repro.core.graph_index import hub_vertices
+
+    base, _ = world
+    res = built["hubs"]
+    path = rio.save_index(
+        os.path.join(tmp_path, "h"),
+        rio.IndexArtifact.from_build(base, res, metric="l2",
+                                     key=jax.random.PRNGKey(23)),
+    )
+    art = rio.load_index(path)
+    assert art.hubs is not None
+    np.testing.assert_array_equal(np.asarray(art.hubs), np.asarray(res.hubs))
+    np.testing.assert_array_equal(
+        np.asarray(art.hubs),
+        np.asarray(hub_vertices(res.graph.neighbors, art.hubs.shape[0])),
+    )
+    assert art.degree_stats["in"]["hub_mass"] > 0
+    m = json.loads(str(np.load(path)["manifest"][()]))
+    assert m["n_hubs"] == art.hubs.shape[0]
+    assert m["degree_stats"]["out"]["mean"] > 0
+
+
+def test_v1_artifact_recomputes_hubs(world, built, tmp_path):
+    """Artifacts written before hub persistence (schema v1) load with the
+    shortlist recomputed from the adjacency — bit-identical to what a fresh
+    build would persist — and hub-seeded search replays unchanged."""
+    from repro.core.graph_index import hub_vertices
+
+    base, queries = world
+    res = built["hubs"]
+    art = rio.IndexArtifact.from_build(base, res, metric="l2",
+                                       key=jax.random.PRNGKey(23))
+    path = rio.save_index(os.path.join(tmp_path, "v1"), art)
+    # rewrite as a v1 artifact: drop the hubs array + v2 manifest keys
+    blob = dict(np.load(path, allow_pickle=False))
+    m = json.loads(str(blob.pop("manifest")[()]))
+    m["version"] = 1
+    del m["n_hubs"], m["degree_stats"]
+    del blob["hubs"]
+    np.savez(path, manifest=np.array(json.dumps(m)), **blob)
+
+    old = rio.load_index(path)
+    assert old.version == 1
+    np.testing.assert_array_equal(
+        np.asarray(old.hubs),
+        np.asarray(hub_vertices(old.neighbors, old.hubs.shape[0])),
+    )
+    np.testing.assert_array_equal(np.asarray(old.hubs), np.asarray(res.hubs))
+    spec = SearchSpec(**CASES["hubs"][1])
+    want = Searcher.from_build(base, res,
+                               key=jax.random.PRNGKey(23)).search(queries,
+                                                                  spec)
+    got = old.to_searcher().search(queries, spec)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(want.n_comps),
+                                  np.asarray(got.n_comps))
+
+
+def test_hubs_array_shape_mismatch_rejected(world, built, tmp_path):
+    """A v2 artifact whose hubs array disagrees with manifest n_hubs is
+    corrupt and must fail loudly."""
+    base, _ = world
+    path = rio.save_index(
+        os.path.join(tmp_path, "trunc"),
+        rio.IndexArtifact.from_build(base, built["hubs"], metric="l2"),
+    )
+    blob = dict(np.load(path, allow_pickle=False))
+    blob["hubs"] = blob["hubs"][:3]
+    np.savez(path, **blob)
+    with pytest.raises(ValueError, match="n_hubs|corrupt"):
+        rio.load_index(path)
 
 
 def test_newer_schema_version_rejected(tmp_path):

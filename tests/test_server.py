@@ -34,7 +34,9 @@ def world():
 def padded_search(searcher, rows, spec, key, bucket):
     """The server's exact padding recipe (server._search_padded): seed on
     the REAL rows with the request key, then pad queries with zeros,
-    entries with INVALID, entry comps with 0, and mask via q_valid."""
+    entries with INVALID, entry comps with 0, and mask via q_valid. The key
+    rides into the search too — restart keys are per-ROW-index, so the
+    bucket shape must not change which restart seeds the real rows draw."""
     qn, d = rows.shape
     dev = jnp.asarray(rows)
     ent, ecomps = searcher.seed(dev, spec, key)
@@ -44,7 +46,7 @@ def padded_search(searcher, rows, spec, key, bucket):
         [ent, jnp.full((pad, ent.shape[1]), INVALID, jnp.int32)]
     )
     ecomps = jnp.concatenate([ecomps, jnp.zeros((pad,), ecomps.dtype)])
-    return searcher.search(dev, spec, entries=ent, entry_comps=ecomps,
+    return searcher.search(dev, spec, key, entries=ent, entry_comps=ecomps,
                            q_valid=jnp.arange(bucket) < qn)
 
 
@@ -75,6 +77,62 @@ def test_padding_parity(world, entry, scorer, placement):
     # padding rows: zero comparisons, no answers
     np.testing.assert_array_equal(np.asarray(padded.n_comps)[Q_REAL:], 0)
     assert (np.asarray(padded.ids)[Q_REAL:] == INVALID).all()
+
+
+@pytest.mark.parametrize("entry", ["hubs", "hierarchy"])
+def test_padding_parity_adaptive_termination(world, entry):
+    """The §12 extension of the parity contract: per-query early freeze
+    (term="stable") and fresh-seed restarts must survive bucketing. Frozen
+    rows reuse the pad-row masking; restart seeds are fold_in(key, row), a
+    function of the row index — so the padded search bit-matches direct on
+    the real rows and pad rows still do zero work."""
+    searcher, queries, _ = world
+    spec = SearchSpec(ef=32, k=4, entry=entry, term="stable", stable_steps=4,
+                      restarts=1)
+    key = jax.random.fold_in(searcher.key, 321)
+    rows = queries[:Q_REAL]
+
+    direct = searcher.search(jnp.asarray(rows), spec, key)
+    padded = padded_search(searcher, rows, spec, key, BUCKET)
+
+    np.testing.assert_array_equal(np.asarray(padded.ids)[:Q_REAL],
+                                  np.asarray(direct.ids))
+    np.testing.assert_array_equal(np.asarray(padded.dists)[:Q_REAL],
+                                  np.asarray(direct.dists))
+    np.testing.assert_array_equal(np.asarray(padded.n_comps)[:Q_REAL],
+                                  np.asarray(direct.n_comps))
+    np.testing.assert_array_equal(np.asarray(padded.n_comps)[Q_REAL:], 0)
+    assert (np.asarray(padded.ids)[Q_REAL:] == INVALID).all()
+
+
+def test_server_adaptive_closed_loop_bit_matches_direct(world):
+    """End-to-end through AnnServer with term="stable" + restarts: every
+    completed request equals its direct-search twin (the CI serving smoke's
+    adaptive leg, in miniature)."""
+    searcher, queries, _ = world
+    spec = SearchSpec(ef=32, k=2, entry="random", term="stable",
+                      stable_steps=4, restarts=1)
+    server = AnnServer(searcher, spec,
+                       ServeConfig(buckets=(1, 2, 4, 8), max_live_batches=2,
+                                   max_queue_depth=8))
+    server.warmup()
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(12):
+        sz = int(rng.choice((1, 3, 5, 8)))
+        start = int(rng.integers(0, queries.shape[0] - sz + 1))
+        reqs.append((queries[start:start + sz],
+                     jax.random.fold_in(searcher.key, 900 + i)))
+    for rows, key in reqs:
+        server.submit_wait(rows, key)
+    server.drain()
+    assert len(server.completed) == len(reqs) and not server.shed
+    for req in sorted(server.completed, key=lambda r: r.rid):
+        rows, key = reqs[req.rid]
+        direct = searcher.search(jnp.asarray(rows), spec, key)
+        np.testing.assert_array_equal(req.ids, np.asarray(direct.ids))
+        np.testing.assert_array_equal(req.n_comps,
+                                      np.asarray(direct.n_comps))
 
 
 def test_all_true_mask_is_identity(world):
