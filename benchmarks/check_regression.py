@@ -53,6 +53,19 @@ HOST_TIER_MIN_QPS_RATIO = 0.30     # bounded qps loss for the host gather
 SERVING_MIN_PARITY = 1.0
 SERVING_P99_WALL_FACTOR = 2.0
 
+# streaming-mutation invariants (DESIGN.md §13). The compaction bit-gate
+# and the tombstoned-serving recall floor are baseline-independent; insert
+# throughput and the recall columns also drift-check against the baseline
+# rows (matched by insert_ef) once a baseline carries the sweep. The
+# tombstoned graph serves STALE edges by design, so pre-compact recall gets
+# a wider absolute floor rather than a drop-vs-post bound.
+MUTATION_MIN_PRE_COMPACT_RECALL = 0.85
+MUTATION_MAX_COMPACT_RECALL_LOSS = 0.02  # compaction may trade a little
+                                         # recall (NN-Descent rebuild is
+                                         # approximate; stale edges aren't
+                                         # uniformly harmful), never a lot
+MUTATION_MIN_INSERT_RATE_RATIO = 0.60   # inserts/s vs baseline (wall-noisy)
+
 # entry x termination invariants (baseline-independent; DESIGN.md §12).
 # hubs must buy what the hierarchy buys: recall within the slack at equal
 # (ef, term) and wall bounded by the factor — a hub shortlist scan that
@@ -266,6 +279,64 @@ def check_entry_term(rows: list[dict], *, out=print) -> list[str]:
     return violations
 
 
+def check_mutation(rows: list[dict], *, out=print) -> list[str]:
+    """Baseline-independent invariants of the streaming-mutation sweep:
+    compaction must bit-match a fresh build of the survivors, serving off
+    the tombstoned graph must clear the recall floor, compaction must not
+    LOSE recall, and the throughput/staleness columns must be present and
+    sane (staleness > 0 — the sweep deliberately accumulates churn)."""
+    violations = []
+    for r in rows:
+        tag = f"mutation[insert_ef={r.get('insert_ef', '?')}]"
+        need = ("insert_rate", "staleness", "pre_compact_recall_at_1",
+                "post_compact_recall_at_1", "compact_matches_fresh_build")
+        vals = {}
+        for key in need:
+            v = _metric(r, key, "fresh", None, tag, violations)
+            if v is None:
+                break
+            vals[key] = v
+        if len(vals) < len(need):
+            continue
+        out(f"[perf-guard] {tag}: {vals['insert_rate']} inserts/s, "
+            f"staleness {vals['staleness']}, recall "
+            f"{vals['pre_compact_recall_at_1']} -> "
+            f"{vals['post_compact_recall_at_1']}, compact==fresh "
+            f"{vals['compact_matches_fresh_build']}")
+        if not vals["compact_matches_fresh_build"]:
+            violations.append(
+                f"{tag}: compacted graph does not bit-match a fresh build "
+                f"of the surviving set (compaction IS a batch build)"
+            )
+        if vals["pre_compact_recall_at_1"] < MUTATION_MIN_PRE_COMPACT_RECALL:
+            violations.append(
+                f"{tag}: pre_compact_recall_at_1 "
+                f"{vals['pre_compact_recall_at_1']} < "
+                f"{MUTATION_MIN_PRE_COMPACT_RECALL} (tombstoned serving "
+                f"degraded too far)"
+            )
+        if vals["post_compact_recall_at_1"] \
+                < vals["pre_compact_recall_at_1"] \
+                - MUTATION_MAX_COMPACT_RECALL_LOSS:
+            violations.append(
+                f"{tag}: post_compact_recall_at_1 "
+                f"{vals['post_compact_recall_at_1']} < pre-compact "
+                f"{vals['pre_compact_recall_at_1']} - "
+                f"{MUTATION_MAX_COMPACT_RECALL_LOSS} — the merge-compaction "
+                f"lost recall"
+            )
+        if vals["insert_rate"] <= 0:
+            violations.append(f"{tag}: insert_rate {vals['insert_rate']} "
+                              f"is not positive")
+        if vals["staleness"] <= 0:
+            violations.append(
+                f"{tag}: staleness {vals['staleness']} <= 0 (the sweep "
+                f"inserts and deletes before compacting; zero means the "
+                f"churn accounting broke)"
+            )
+    return violations
+
+
 def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
             max_comps_ratio: float, max_recall_drop: float,
             min_host_tier_rows: int = 1, min_serving_rows: int = 3,
@@ -413,6 +484,45 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
                 f"{tag}: comps_per_query {b_cmp} -> {f_cmp} "
                 f"(allowed <= {b_cmp * max_comps_ratio:.1f})"
             )
+    # streaming-mutation sweep: internal invariants on every fresh row
+    # (compaction bit-gate, recall floors), plus throughput/recall drift vs
+    # baseline rows matched by insert_ef. The guard arms itself the first
+    # time a baseline carries the sweep.
+    if "mutation_sweep" in fresh:
+        violations += check_mutation(fresh["mutation_sweep"], out=out)
+    elif "mutation_sweep" in baseline:
+        violations.append("mutation_sweep missing from fresh report")
+    fresh_mut = {r.get("insert_ef"): r for r in fresh.get("mutation_sweep",
+                                                          [])}
+    for b in baseline.get("mutation_sweep", []):
+        f = fresh_mut.get(b.get("insert_ef"))
+        tag = f"mutation[insert_ef={b.get('insert_ef')}]"
+        if f is None:
+            violations.append(f"{tag} missing from fresh report")
+            continue
+        b_rate, f_rate = _pair(b, f, "insert_rate", tag, violations)
+        if b_rate is not None \
+                and f_rate < b_rate * MUTATION_MIN_INSERT_RATE_RATIO:
+            violations.append(
+                f"{tag}: insert_rate dropped "
+                f">{(1 - MUTATION_MIN_INSERT_RATE_RATIO) * 100:.0f}%: "
+                f"{b_rate} -> {f_rate} inserts/s"
+            )
+        for key in ("pre_compact_recall_at_1", "post_compact_recall_at_1"):
+            b_rec, f_rec = _pair(b, f, key, tag, violations)
+            if b_rec is not None and f_rec < b_rec - max_recall_drop:
+                violations.append(
+                    f"{tag}: {key} {b_rec} -> {f_rec} "
+                    f"(allowed drop {max_recall_drop})"
+                )
+        b_st, f_st = _pair(b, f, "staleness", tag, violations)
+        if b_st is not None and f_st != b_st:
+            violations.append(
+                f"{tag}: staleness {b_st} -> {f_st} — the sweep's churn is "
+                f"deterministic (fixed insert/delete counts), so this "
+                f"column must be bit-stable"
+            )
+
     # host-tier sweep: internal invariants on every fresh row (large-n
     # nightly rows have no baseline twin), plus recall drop vs the baseline
     # rows that do exist (matched by n)

@@ -276,9 +276,144 @@ def _build_world(n: int, d: int, pool_q: int, key):
     return searcher, np.asarray(pool, np.float32), gt
 
 
+def _beam_cache_size():
+    """Compiled-executable count of the beam core, or None when the running
+    jax doesn't expose it (the 0.5.x matrix leg) — the no-recompile-after-
+    flip assertion degrades to advisory there instead of failing the smoke."""
+    from repro.core import beam_search as bs
+
+    fn = bs.beam_search
+    if hasattr(fn, "_cache_size"):
+        try:
+            return int(fn._cache_size())
+        except Exception:
+            return None
+    return None
+
+
+def mutation_cycle(args) -> None:
+    """``--mode mutation``: the CI streaming-mutation smoke (DESIGN.md §13).
+
+    One full index lifecycle under live traffic: build v0, serve a closed
+    loop against it, then insert + delete through ``MutableIndex``, hot-swap
+    the mutated (tombstoned) index into the SAME server with zero dropped
+    requests, serve a second closed loop, and finally merge-compact and
+    bit-check the compacted graph against a fresh build of the surviving
+    set. Gates (exit 1 on any failure):
+
+    * every served request, both sides of the swap, bit-matches a direct
+      ``Searcher.search`` against the version that served it;
+    * nothing is shed and nothing is dropped across the flip;
+    * the beam core compiles NOTHING after the flip (warmup ran pre-flip);
+    * no served answer ever names a tombstoned id;
+    * compact output == fresh build of the survivors, bit for bit.
+    """
+    from repro.core.build import BuildSpec, build_index
+    from repro.core.mutable import MutableIndex
+
+    key = jax.random.PRNGKey(args.seed)
+    n, d = args.n, args.d
+    base = np.asarray(jax.random.uniform(key, (n, d)), np.float32)
+    pool = np.asarray(
+        jax.random.uniform(jax.random.fold_in(key, 1), (args.pool_q, d)),
+        np.float32,
+    )
+    bspec = BuildSpec(construct="nndescent", diversify="gd", graph_k=16,
+                      proxy_sample=0, lid_sample=0, insert_ef=32)
+    result = build_index(jax.numpy.asarray(base), bspec, key)
+    midx = MutableIndex.from_build(base, result, metric=bspec.metric,
+                                   key=key, insert_ef=32, diversify="gd")
+    spec = SearchSpec(ef=args.ef, k=1, entry="random", term=args.term,
+                      stable_steps=args.stable_steps, restarts=args.restarts)
+
+    half = max(args.requests // 2, 1)
+    base_key = jax.random.fold_in(key, 777)
+    reqs_a = make_requests(pool, half, REQUEST_SIZES, args.seed, base_key)
+    reqs_b = make_requests(pool, half, REQUEST_SIZES, args.seed + 1,
+                           jax.random.fold_in(base_key, 1))
+
+    # ---- phase A: serve the freshly built v0 -------------------------------
+    s0 = midx.searcher()
+    server = AnnServer(s0, spec, SWEEP_CONFIG)
+    server.warmup()
+    direct_a, _ = direct_baseline(s0, spec, reqs_a)
+    run_closed_loop(server, reqs_a)
+    ok_a, checked_a = check_parity(server.completed,
+                                   {i: r for i, r in enumerate(direct_a)})
+
+    # ---- mutate: insert a wave, tombstone 15% ------------------------------
+    n_ins = max(n // 10, 8)
+    extra = np.asarray(
+        jax.random.uniform(jax.random.fold_in(key, 5), (n_ins, d)), np.float32
+    )
+    new_ids = midx.insert_batch(extra)
+    rng = np.random.default_rng(args.seed)
+    dead = rng.choice(n, size=max(int(0.15 * n), 1), replace=False)
+    midx.delete(dead)
+    mstats = midx.stats()
+
+    # ---- hot swap to the mutated (tombstoned) index, serve phase B ---------
+    s1 = midx.searcher()
+    direct_b, _ = direct_baseline(s1, spec, reqs_b)  # also pre-warms shapes
+    version = server.swap(s1, key=jax.random.fold_in(key, 33))
+    cache_at_flip = _beam_cache_size()
+    run_closed_loop(server, reqs_b)
+    cache_after = _beam_cache_size()
+    done_b = server.completed[checked_a:]
+    ok_b, checked_b = check_parity(
+        done_b, {half + i: r for i, r in enumerate(direct_b)})
+    dead_set = set(int(i) for i in dead)
+    dead_hits = sum(int(i) in dead_set
+                    for req in done_b for i in req.ids.ravel())
+
+    # ---- merge-compact, bit-check against a fresh build --------------------
+    ckey = jax.random.fold_in(key, 9)
+    survivors = midx.base[midx.alive]
+    cres = midx.compact(bspec, ckey)
+    fresh = build_index(jax.numpy.asarray(survivors), bspec, ckey)
+    compact_ok = (
+        np.array_equal(np.asarray(cres.graph.neighbors),
+                       np.asarray(fresh.graph.neighbors))
+        and np.array_equal(np.asarray(midx.neighbors),
+                           np.asarray(fresh.graph.neighbors))
+    )
+    gt = np.asarray(bruteforce.ground_truth(pool, midx.base, 1, midx.metric))
+    res = midx.search(pool, spec, jax.random.fold_in(key, 12))
+    recall = float((np.asarray(res.ids[:, 0]) == gt[:, 0]).mean())
+
+    st = server.stats()
+    print(f"loadgen/mutation: v{version} served {st['completed']} requests "
+          f"({st['shed']} shed) across 1 swap; parity A={ok_a}/{checked_a} "
+          f"B={ok_b}/{checked_b}, dead-id answers={dead_hits}")
+    print(f"loadgen/mutation: inserted {len(new_ids)} "
+          f"({mstats['insert_rate']:.0f} pts/s), deleted {len(dead)}, "
+          f"staleness={mstats['staleness']:.3f}; post-compact "
+          f"recall@1={recall:.3f}, compact==fresh-build: {compact_ok}")
+    failures = []
+    if st["shed"]:
+        failures.append(f"{st['shed']} requests shed")
+    if ok_a != checked_a or checked_a != half:
+        failures.append(f"phase-A parity {ok_a}/{checked_a} (want {half})")
+    if ok_b != checked_b or checked_b != half:
+        failures.append(f"phase-B parity {ok_b}/{checked_b} (want {half})")
+    if dead_hits:
+        failures.append(f"{dead_hits} tombstoned ids served as answers")
+    if cache_at_flip is not None and cache_after != cache_at_flip:
+        failures.append(f"beam core compiled post-flip "
+                        f"({cache_at_flip} -> {cache_after} executables)")
+    if not compact_ok:
+        failures.append("compacted graph diverges from fresh build")
+    if failures:
+        print("loadgen/mutation: FAIL — " + "; ".join(failures))
+        raise SystemExit(1)
+    print("loadgen/mutation: OK — zero drops across the swap, bit-parity "
+          "both sides, no post-flip compilation, compact bit-matches")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("open", "closed"), default="closed")
+    ap.add_argument("--mode", choices=("open", "closed", "mutation"),
+                    default="closed")
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--n", type=int, default=3000)
     ap.add_argument("--d", type=int, default=16)
@@ -296,6 +431,10 @@ def main() -> None:
                          "capacity)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.mode == "mutation":
+        mutation_cycle(args)
+        return
 
     key = jax.random.PRNGKey(args.seed)
     searcher, pool, gt = _build_world(args.n, args.d, args.pool_q, key)

@@ -61,6 +61,17 @@ BUILD_SWEEP_K = 16       # raw degree out of the construct stage
 BUILD_SWEEP_ROUNDS = 8   # NN-Descent budget (the smoke world converges well
                          # before; the report's `rounds` column shows it)
 
+# Streaming-mutation sweep (DESIGN.md §13): one insert/delete/compact
+# lifecycle per insert_ef on a dedicated world. Columns: sustained insert
+# throughput, staleness at compaction time, recall served off the tombstoned
+# graph vs after the merge-compaction, and the bit-gate that compaction
+# equals a fresh batch build of the survivors. Small world: every insert is
+# a real beam dispatch, so n_inserts bounds the sweep's wall.
+MUTATION_WORLD = (3000, 16)        # (n, d)
+MUTATION_INSERT_EFS = (32, 64)
+MUTATION_INSERTS = 200
+MUTATION_DELETE_FRAC = 0.15
+
 # Entry x termination sweep (DESIGN.md §12): the hot-path waste attack.
 # recall@k over a top-k objective (k=1 freezes too eagerly to be a fair
 # stability signal); stable rows run at a RAISED ef ceiling — the point of
@@ -203,6 +214,79 @@ def _build_sweep(base, queries, gt, ef: int, key, out) -> list[dict]:
             f"dropped={row['dropped_reverse_edges']} "
             f"recall={row['recall_at_1']:.3f} "
             f"comps={row['comps_per_query']:.0f}")
+    return rows
+
+
+def _mutation_sweep(key, q: int, ef: int, out) -> list[dict]:
+    """Streaming-mutation trajectory (DESIGN.md §13): per insert_ef, run
+    build -> insert wave -> 15% tombstones -> merge-compaction on the
+    MUTATION_WORLD, recording insert throughput, staleness, recall off the
+    tombstoned graph (live ground truth) and post-compact recall, plus the
+    compaction bit-gate. check_regression guards throughput/recall drift
+    once a baseline carries the sweep; the bit-gate is baseline-free."""
+    from repro.core.build import BuildSpec, build_index
+    from repro.core.mutable import MutableIndex
+
+    n, d = MUTATION_WORLD
+    kw = jax.random.fold_in(key, 500)
+    base = jax.random.uniform(kw, (n, d))
+    queries = jax.random.uniform(jax.random.fold_in(kw, 1), (q, d))
+    bspec = BuildSpec(construct="nndescent", diversify="gd", graph_k=16,
+                      nd_rounds=BUILD_SWEEP_ROUNDS, proxy_sample=0,
+                      lid_sample=0)
+    result = build_index(base, bspec, kw)
+    extra = np.asarray(jax.random.uniform(jax.random.fold_in(kw, 2),
+                                          (MUTATION_INSERTS, d)), np.float32)
+    dead = np.random.default_rng(0).choice(
+        n, size=int(MUTATION_DELETE_FRAC * n), replace=False)
+
+    rows = []
+    for i, ief in enumerate(MUTATION_INSERT_EFS):
+        midx = MutableIndex.from_build(np.asarray(base), result, key=kw,
+                                       insert_ef=ief, diversify="gd")
+        midx.insert_batch(extra)
+        midx.delete(dead)
+        staleness = midx.staleness
+        spec = SearchSpec(ef=ef, k=1, entry="random")
+
+        # recall over the tombstoned graph, against LIVE-set ground truth
+        alive_ids = np.nonzero(midx.alive)[0]
+        live_base = jax.numpy.asarray(midx.base[alive_ids])
+        gt_live = alive_ids[np.asarray(
+            bruteforce.ground_truth(queries, live_base, 1))[:, 0]]
+        res = midx.search(queries, spec, jax.random.fold_in(kw, 30 + i))
+        pre_recall = float((np.asarray(res.ids[:, 0]) == gt_live).mean())
+
+        survivors = midx.base[midx.alive].copy()
+        ckey = jax.random.fold_in(kw, 40 + i)
+        cres = midx.compact(bspec, ckey)
+        fresh = build_index(jax.numpy.asarray(survivors), bspec, ckey)
+        compact_ok = bool(np.array_equal(
+            np.asarray(cres.graph.neighbors),
+            np.asarray(fresh.graph.neighbors)))
+        gt_post = np.asarray(bruteforce.ground_truth(
+            queries, jax.numpy.asarray(midx.base), 1))[:, 0]
+        res2 = midx.search(queries, spec, jax.random.fold_in(kw, 50 + i))
+        post_recall = float((np.asarray(res2.ids[:, 0]) == gt_post).mean())
+
+        row = {
+            "n": n, "d": d, "insert_ef": ief,
+            "inserts": MUTATION_INSERTS,
+            "deletes": int(dead.shape[0]),
+            "insert_rate": round(midx.insert_rate, 1),
+            "staleness": round(staleness, 4),
+            "pre_compact_recall_at_1": round(pre_recall, 4),
+            "post_compact_recall_at_1": round(post_recall, 4),
+            "compact_wall_ms": round(cres.report.wall_total_s * 1e3, 1),
+            "compact_matches_fresh_build": compact_ok,
+        }
+        rows.append(row)
+        out(f"smoke/mutation insert_ef={ief}: "
+            f"{row['insert_rate']:.0f} inserts/s, "
+            f"staleness={row['staleness']:.3f}, recall "
+            f"{row['pre_compact_recall_at_1']:.3f} (tombstoned) -> "
+            f"{row['post_compact_recall_at_1']:.3f} (compacted), "
+            f"compact==fresh: {compact_ok}")
     return rows
 
 
@@ -409,6 +493,9 @@ def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
     # columns are bit-comparable by construction.
     report.update(serving_sweep(searcher, spec, np.asarray(queries),
                                 np.asarray(gt), out=out))
+
+    # insert/delete/compact lifecycle per insert_ef — DESIGN.md §13
+    report["mutation_sweep"] = _mutation_sweep(key, q, ef, out)
 
     # device-vs-host base placement at growing n — DESIGN.md §9; a sweep
     # point at the main n reuses the world built above

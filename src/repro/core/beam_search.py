@@ -149,7 +149,7 @@ def _mark_visited(visited: jax.Array, ids: jax.Array) -> jax.Array:
 
 def _init_state(queries, base, neighbors, entry_ids, ef, metric,
                 r_tile: int = 0, scorer: str = "exact",
-                scorer_state=None) -> _State:
+                scorer_state=None, tombstones=None) -> _State:
     Q = queries.shape[0]
     # n comes from the adjacency, not the base: under base_placement='host'
     # the traversal runs with base=None (the float rows never reach the
@@ -158,14 +158,26 @@ def _init_state(queries, base, neighbors, entry_ids, ef, metric,
     W = (n + 31) // 32
     E = entry_ids.shape[1]
 
+    # Deleted/unallocated ids arrive as a (W,) packed bitmap and become every
+    # row's INITIAL visited set: the fused mask epilogue then returns
+    # (+inf, INVALID) for them at seeding, every hop, and every restart draw —
+    # tombstones ride the existing visited plumbing with zero kernel changes
+    # and zero recompiles (the bitmap is an operand, not a static arg).
+    if tombstones is None:
+        init = jnp.zeros((Q, W), jnp.uint32)
+    else:
+        init = jnp.broadcast_to(tombstones.astype(jnp.uint32)[None, :],
+                                (Q, W))
+
     # seeds are scored in the scorer's own currency (ADC scores under pq):
     # the candidate list must stay comparable across the whole traversal.
-    # The zero bitmap makes the masked call a plain scored gather.
+    # A zero bitmap makes the masked call a plain scored gather; tombstone
+    # bits knock dead seeds out before they cost a comparison.
     d0, entry_ids = get_scorer(scorer).score(
         scorer_state, queries, base, entry_ids,
-        jnp.zeros((Q, W), jnp.uint32), metric=metric, r_tile=r_tile,
+        init, metric=metric, r_tile=r_tile,
     )  # (Q, E)
-    visited = _mark_visited(jnp.zeros((Q, W), jnp.uint32), entry_ids)
+    visited = _mark_visited(init, entry_ids)
 
     pad = ef - E
     cand_d = jnp.concatenate([d0, jnp.full((Q, pad), INF)], axis=1)
@@ -397,6 +409,7 @@ def beam_search(
     restarts: int = 0,
     restart_gate: float = 0.0,
     restart_keys: jax.Array | None = None,
+    tombstones: jax.Array | None = None,
 ) -> SearchResult:
     """Best-first graph search. entry_ids (Q, E) seeds (E <= ef).
     expand_width > 1 expands several vertices per step (beyond-paper);
@@ -408,13 +421,16 @@ def beam_search(
     comparisons and return (INVALID, +inf), see ``mask_padded_queries``;
     term="stable" freezes rows whose top-k stalls for ``stable_steps`` steps,
     and ``restarts``/``restart_gate``/``restart_keys`` resurrect converged
-    rows from fresh per-row-keyed seeds (module docstring / DESIGN.md §12)."""
+    rows from fresh per-row-keyed seeds (module docstring / DESIGN.md §12);
+    tombstones (ceil(n/32),) packed uint32 marks deleted/unallocated ids —
+    they seed every row's visited bitmap, so dead vertices score +inf
+    everywhere and cost zero comparisons (DESIGN.md §13)."""
     check_termination(term, restarts, restart_keys)
     if max_steps is None:
         max_steps = default_max_steps(ef, expand_width)
     entry_ids = mask_padded_queries(entry_ids, q_valid)
     state = _init_state(queries, base, neighbors, entry_ids, ef, metric,
-                        r_tile, scorer, scorer_state)
+                        r_tile, scorer, scorer_state, tombstones)
 
     def cond(s: _State):
         return (~s.done.all()) & (s.step < max_steps)
@@ -453,6 +469,7 @@ def beam_traverse(
     restarts: int = 0,
     restart_gate: float = 0.0,
     restart_keys: jax.Array | None = None,
+    tombstones: jax.Array | None = None,
 ) -> TraverseResult:
     """The beam loop WITHOUT the rerank tail — the device half of a tiered
     search (DESIGN.md §9). No ``base`` operand: the scorer must be base-free
@@ -475,7 +492,7 @@ def beam_traverse(
         max_steps = default_max_steps(ef, expand_width)
     entry_ids = mask_padded_queries(entry_ids, q_valid)
     state = _init_state(queries, None, neighbors, entry_ids, ef, metric,
-                        r_tile, scorer, scorer_state)
+                        r_tile, scorer, scorer_state, tombstones)
 
     def cond(s: _State):
         return (~s.done.all()) & (s.step < max_steps)
@@ -526,6 +543,7 @@ def search_with_trace(
     restarts: int = 0,
     restart_gate: float = 0.0,
     restart_keys: jax.Array | None = None,
+    tombstones: jax.Array | None = None,
 ) -> tuple[SearchResult, jax.Array, jax.Array]:
     """Fixed-step variant recording the Fig. 6 statistics.
 
@@ -546,7 +564,7 @@ def search_with_trace(
     if max_steps is None:
         max_steps = default_max_steps(ef, expand_width)
     state = _init_state(queries, base, neighbors, entry_ids, ef, metric,
-                        r_tile, scorer, scorer_state)
+                        r_tile, scorer, scorer_state, tombstones)
 
     def body(s: _State, _):
         s2 = _step(s, queries, base, neighbors, metric, expand_width, r_tile,

@@ -81,6 +81,10 @@ class BuildSpec(NamedTuple):
                                    # hubs seeder (persisted in the artifact)
     lid_sample: int = 256          # points sampled for the Levina–Bickel
                                    # LID estimate (0 disables; paper Tab. I)
+    insert_ef: int = 64            # construct='incremental' beam width per
+                                   # insert (0 = exact-scan maintenance: the
+                                   # streaming build then bit-matches
+                                   # construct='exact' — DESIGN.md §13)
 
 
 class ConstructResult(NamedTuple):
@@ -174,6 +178,36 @@ def _construct_exact(base, spec: BuildSpec, key, verbose) -> ConstructResult:
     graph = exact_knn_graph(base, k, metric=spec.metric)
     return ConstructResult(graph, None,
                            {"rounds": 0, "update_curve": [], "converged": True})
+
+
+@register_constructor("incremental")
+def _construct_incremental(base, spec: BuildSpec, key, verbose
+                           ) -> ConstructResult:
+    """Streaming construction (DESIGN.md §13): every point arrives through
+    ``MutableIndex.insert`` — beam-search-then-link (``spec.insert_ef > 0``)
+    with the ``spec.diversify`` stage applied INLINE per insert, or exact-
+    scan maintenance (``insert_ef = 0``), which makes N inserts bit-identical
+    to ``construct='exact'`` at matched capacity (the golden equivalence in
+    tests/test_mutable.py). Diversification being inline, ``GraphBuilder``
+    skips the global diversify stage (``stats['inline_diversify']``)."""
+    import numpy as np
+
+    from .mutable import MutableIndex
+
+    n, d = base.shape
+    idx = MutableIndex.empty(
+        d, min(spec.graph_k, max(n - 1, 1)), capacity=n, metric=spec.metric,
+        key=key, insert_ef=spec.insert_ef, diversify=spec.diversify,
+        max_keep=spec.max_keep,
+    )
+    t0 = time.perf_counter()
+    idx.insert_batch(np.asarray(base, np.float32))
+    wall = time.perf_counter() - t0
+    return ConstructResult(idx.live_graph(), None, {
+        "rounds": 0, "update_curve": [], "converged": True,
+        "inline_diversify": spec.diversify, "inserts": n,
+        "insert_rate": round(n / max(wall, 1e-9), 1),
+    })
 
 
 @register_constructor("hnsw")
@@ -333,6 +367,13 @@ class BuildReport:
     # Levina–Bickel MLE local intrinsic dimensionality of the base (paper
     # Tab. I's curse-of-dimensionality diagnostic; -1.0 when lid_sample=0)
     lid: float = -1.0
+    # streaming-mutation metrics (DESIGN.md §13): points absorbed through
+    # MutableIndex.insert (construct='incremental', or the mutation cycle a
+    # compaction merged), their sustained rate, and the staleness fraction
+    # the build/compaction cleared (0.0 for batch constructs)
+    inserts: int = 0
+    insert_rate: float = -1.0
+    staleness: float = 0.0
 
     def summary(self) -> dict:
         d = dataclasses.asdict(self)
@@ -426,7 +467,12 @@ class GraphBuilder:
                                        sample=spec.proxy_sample)
 
         t2 = time.perf_counter()
-        graph, dstats = self._diversify(base, cres.graph, spec)
+        if cres.stats.get("inline_diversify"):
+            # the construct diversified per insert (incremental); a second
+            # global pass would double-prune the same edges
+            graph, dstats = cres.graph, {"dropped_reverse_edges": 0}
+        else:
+            graph, dstats = self._diversify(base, cres.graph, spec)
         jax.block_until_ready(graph.neighbors)
         t3 = time.perf_counter()
 
@@ -476,6 +522,8 @@ class GraphBuilder:
             in_degree=in_degree_distribution(graph.neighbors),
             hub_ids=[int(h) for h in hubs],
             lid=round(lid, 2),
+            inserts=int(cres.stats.get("inserts", 0)),
+            insert_rate=float(cres.stats.get("insert_rate", -1.0)),
         )
         return BuildResult(graph=graph, hierarchy=cres.hierarchy, pq=pq,
                            report=report, hubs=hubs)

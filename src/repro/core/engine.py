@@ -321,7 +321,8 @@ class Searcher:
 
     def __init__(self, base, neighbors, *, hierarchy: HnswIndex | None = None,
                  metric: str = "l2", key: jax.Array | None = None, pq=None,
-                 hubs: jax.Array | None = None):
+                 hubs: jax.Array | None = None,
+                 tombstones: jax.Array | None = None):
         self.base = base
         self.neighbors = neighbors
         self.hierarchy = hierarchy
@@ -331,6 +332,11 @@ class Searcher:
         # descending (attached from a build/artifact; None -> the strategy
         # recomputes from the adjacency on first use, bit-identically)
         self.hubs = hubs
+        # (ceil(n/32),) packed uint32 marking deleted/unallocated row ids
+        # (DESIGN.md §13): seeds every query's visited bitmap, so dead ids
+        # read as INVALID in the fused mask epilogue at zero extra cost.
+        # An operand, not a static arg — mutating it never recompiles.
+        self.tombstones = tombstones
         self._aux: dict[tuple, object] = {}
         # PQ code tables backing the "pq" scorer: ``pq`` is an externally
         # trained index attached at engine build time (served for any spec
@@ -559,6 +565,7 @@ class Searcher:
             k=spec.k, term=spec.term, stable_steps=spec.stable_steps,
             restarts=spec.restarts, restart_gate=spec.restart_gate,
             restart_keys=self.restart_keys(queries.shape[0], spec, key),
+            tombstones=self.tombstones,
         )
         cand = trav.cand_ids[:, :rerank_slice(spec.ef, spec.k, spec.rerank)]
         rows, host_bytes = store.gather(cand)
@@ -616,6 +623,7 @@ class Searcher:
             term=spec.term, stable_steps=spec.stable_steps,
             restarts=spec.restarts, restart_gate=spec.restart_gate,
             restart_keys=self.restart_keys(queries.shape[0], spec, key),
+            tombstones=self.tombstones,
         )
         if entry_comps is not None:
             res = res._replace(n_comps=res.n_comps + entry_comps)
@@ -721,6 +729,7 @@ class Searcher:
             term=spec.term, stable_steps=spec.stable_steps,
             restarts=spec.restarts, restart_gate=spec.restart_gate,
             restart_keys=self.restart_keys(queries.shape[0], spec, key),
+            tombstones=self.tombstones,
         )
         return res._replace(n_comps=res.n_comps + extra), td, tc + extra[None, :]
 

@@ -91,26 +91,46 @@ def degree_distribution(neighbors: jax.Array) -> dict:
 DEFAULT_N_HUBS = 64
 
 
-def in_degree(neighbors: jax.Array):
+def in_degree(neighbors: jax.Array, alive=None):
     """Realized in-degree per vertex of a padded adjacency (numpy int64).
 
     Out-degree is capped by construction (R slots per row); in-degree is not
     — graph walks concentrate on the heavy tail, which is exactly what the
     hub-seeding entry strategy exploits (arXiv:2412.01940: the 'H' in HNSW
-    stands for hubs)."""
+    stands for hubs).
+
+    ``alive`` (n,) bool (None = all alive) masks tombstoned vertices out of
+    the count: edges INTO a dead vertex are no edges at all (the beam never
+    scores them — they read as visited in the mask epilogue), and a dead
+    SOURCE row's out-edges are never walked either, so neither side may
+    inflate the tally (DESIGN.md §13)."""
     import numpy as np
 
     nb = np.asarray(neighbors)
-    return np.bincount(nb[nb >= 0].ravel(), minlength=nb.shape[0])
+    n = nb.shape[0]
+    valid = nb >= 0
+    if alive is not None:
+        alive = np.asarray(alive, bool)
+        # target dead -> edge masked; source dead -> whole row masked
+        valid = valid & alive[:, None] & alive[np.maximum(nb, 0)]
+    return np.bincount(nb[valid].ravel(), minlength=n)
 
 
-def in_degree_distribution(neighbors: jax.Array) -> dict:
+def in_degree_distribution(neighbors: jax.Array, alive=None) -> dict:
     """JSON-able in-degree summary for BuildReport / artifact manifests:
     spread percentiles plus the edge mass landing on the top
-    ``DEFAULT_N_HUBS`` vertices (how hub-dominated the graph is)."""
+    ``DEFAULT_N_HUBS`` vertices (how hub-dominated the graph is).
+    ``alive`` restricts both the edge count and the percentile population to
+    live vertices (a 20%-tombstoned graph reports live statistics, not a
+    dead-row-diluted mean)."""
     import numpy as np
 
-    deg = in_degree(neighbors)
+    deg = in_degree(neighbors, alive)
+    if alive is not None:
+        deg = deg[np.asarray(alive, bool)]
+    if deg.size == 0:
+        return {"min": 0, "mean": 0.0, "p50": 0, "p90": 0, "p99": 0,
+                "max": 0, "hub_mass": 0.0}
     total = max(int(deg.sum()), 1)
     top = np.sort(deg)[::-1][:DEFAULT_N_HUBS]
     return {
@@ -125,16 +145,26 @@ def in_degree_distribution(neighbors: jax.Array) -> dict:
 
 
 def hub_vertices(neighbors: jax.Array,
-                 count: int = DEFAULT_N_HUBS) -> jax.Array:
+                 count: int = DEFAULT_N_HUBS, alive=None) -> jax.Array:
     """The ``count`` highest in-degree vertices, in-degree descending with
     ties broken by lowest id — deterministic from the adjacency alone, so
     recomputing on a legacy artifact load reproduces exactly what a fresh
-    build would have persisted."""
+    build would have persisted.
+
+    Under tombstones (``alive`` mask) dead vertices are excluded from the
+    shortlist AND their edges from the ranking — otherwise the hubs seeder
+    drifts toward dead ids as deletes accumulate (every dead seed is masked
+    to INVALID by the beam, silently shrinking the landing zone)."""
     import numpy as np
 
-    deg = in_degree(neighbors)
+    deg = in_degree(neighbors, alive)
+    if alive is not None:
+        # dead vertices sort last regardless of their stale edge count
+        deg = np.where(np.asarray(alive, bool), deg, -1)
     order = np.argsort(-deg, kind="stable")
-    return jnp.asarray(order[: min(count, deg.shape[0])].astype(np.int32))
+    if alive is not None:
+        order = order[deg[order] >= 0]
+    return jnp.asarray(order[: min(count, order.shape[0])].astype(np.int32))
 
 
 def pad_neighbors(neighbors: jax.Array, degree: int) -> jax.Array:

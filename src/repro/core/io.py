@@ -26,6 +26,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import tempfile
+import zipfile
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +41,14 @@ from .graph_index import (
     hub_vertices,
     in_degree_distribution,
 )
+
+class CorruptArtifactError(ValueError):
+    """An on-disk index artifact that cannot be decoded: truncated write,
+    torn copy, or bit rot. A ValueError subclass so existing loud-failure
+    handling still catches it, but named so a reloading server can tell
+    "this file is damaged, keep serving the old version" apart from every
+    other ValueError."""
+
 
 FORMAT_MAGIC = "repro/index-artifact"
 # v2: + hub ids (the "hubs" entry strategy's shortlist) and the realized
@@ -181,7 +192,25 @@ def save_index(path: str, artifact: IndexArtifact) -> str:
         manifest["pq"] = {"m": int(artifact.pq.M), "k": int(artifact.pq.K)}
         arrays["pq_codebooks"] = np.asarray(artifact.pq.codebooks, np.float32)
         arrays["pq_codes"] = np.asarray(artifact.pq.codes, np.uint8)
-    np.savez(path, manifest=np.array(json.dumps(manifest)), **arrays)
+    # Crash-safe write: a crash mid-np.savez used to leave a truncated .npz
+    # at the FINAL path, which a reloading/hot-swapping server would then
+    # load. Write to a temp file in the same directory (same filesystem, so
+    # the rename is atomic), fsync, then os.replace — readers only ever see
+    # the old complete artifact or the new complete one.
+    dirname = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=dirname,
+                               prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, manifest=np.array(json.dumps(manifest)), **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
     return path
 
 
@@ -211,9 +240,37 @@ def _load_legacy(blob, path: str) -> IndexArtifact:
 
 
 def load_index(path: str) -> IndexArtifact:
-    """Read an artifact back; validates magic/version/shapes."""
+    """Read an artifact back; validates magic/version/shapes.
+
+    Raises :class:`CorruptArtifactError` (never a raw numpy/zipfile
+    traceback) when the file is truncated or otherwise undecodable — the
+    contract a hot-swapping server relies on to keep serving its current
+    version when a new artifact arrives damaged."""
     path = normalize_path(path)
-    blob = np.load(path, allow_pickle=False)
+    try:
+        blob = np.load(path, allow_pickle=False)
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, zlib.error, EOFError, OSError,
+            ValueError) as e:
+        raise CorruptArtifactError(
+            f"{path}: not a readable index artifact ({e}) — truncated or "
+            "corrupted write? (save_index writes atomically via temp file + "
+            "rename, so a crash mid-save cannot produce this)"
+        ) from e
+    try:
+        return _decode_artifact(blob, path)
+    except (zipfile.BadZipFile, zlib.error, EOFError, KeyError,
+            json.JSONDecodeError) as e:
+        # a member that is listed but truncated decodes partway then fails;
+        # a missing member the manifest promises raises KeyError
+        raise CorruptArtifactError(
+            f"{path}: index artifact is damaged mid-file ({e!r}) — "
+            "truncated or corrupted write"
+        ) from e
+
+
+def _decode_artifact(blob, path: str) -> IndexArtifact:
     if "manifest" not in blob.files:
         return _load_legacy(blob, path)
     m = json.loads(str(blob["manifest"][()]))

@@ -1,0 +1,548 @@
+"""Streaming index mutation (DESIGN.md §13).
+
+:class:`MutableIndex` wraps (artifact arrays, tombstone bitmap, pending
+mutation log) — the unit a live server hot-swaps. Three operations:
+
+* **insert** — beam-search-then-link through the existing engine: the beam
+  finds ``insert_ef`` candidates (dead ids masked by the tombstone bitmap),
+  the inline ``diversify`` stage picks the out-edges, and degree-capped
+  reciprocal linking splices the new id into its neighbors' rows (worst-edge
+  replacement, strict ``<`` so incumbents win distance ties exactly like the
+  batch top-k's lowest-id tie-break). With ``insert_ef=0`` the candidate set
+  is an exact masked scan instead — full k-NN maintenance.
+* **delete** — a tombstone bit. No edge surgery: the bitmap seeds every
+  query's visited set (``beam_search(tombstones=...)``), so dead ids read as
+  INVALID in the mask epilogue already fused into ``gather_distance_masked``
+  / ``gather_adc_masked`` — at seeding, at every hop, and at restart draws —
+  for zero extra kernel cost. Stale edges *into* dead vertices stay in the
+  adjacency (they cost a masked slot, nothing more) until compaction.
+* **compact** — merge-compaction back through ``BuildSpec``: rebuild from
+  the surviving rows (original id order), reclaiming tombstoned and
+  unallocated slots and resetting the mutation log.
+
+Storage is capacity-padded: host-authoritative numpy arrays of ``capacity``
+rows with eagerly maintained device mirrors, so per-insert device updates are
+row-writes (``.at[m].set``) and the search shapes — hence the compiled beam
+cores — stay fixed until a capacity doubling (one recompile per doubling).
+Deleted slots are not reused; compaction reclaims them.
+
+Exact-mode inserts are **bit-identical to a batch rebuild**: the forward scan
+``distance_matrix(x[None], base)`` reproduces the batch distance-matrix row
+bitwise, and the reverse direction is computed against an explicit
+(128, d) single-block tile — the kernel's ``bn`` block — which reproduces the
+batch *column* bitwise (the kernel's per-element value is independent of the
+other tile rows, but NOT of the block shape the operand arrives in; letting
+the kernel pad a (1, d) operand internally changes the lowering and drifts
+ulps). ``construct='incremental'`` with ``insert_ef=0`` therefore equals
+``construct='exact'`` bit-for-bit at matched capacity — the golden
+equivalence locked by tests/test_mutable.py.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .beam_search import beam_search, random_entries
+from .diversify import _angular_select, _occlusion_select
+from .engine import Searcher
+from .graph_index import DEFAULT_N_HUBS, KnnGraph, hub_vertices
+from .topk import INVALID
+
+# the distance-matrix kernel's n-side block: a reverse scan must hand the
+# kernel a full pre-materialized block for bitwise batch parity (see module
+# docstring)
+_REV_BLOCK = 128
+
+INLINE_DIVERSIFIERS = ("none", "gd", "dpg")
+
+
+def pack_tombstones(dead) -> np.ndarray:
+    """(C,) bool dead mask -> (ceil(C/32),) packed uint32, bit ``i & 31`` of
+    word ``i >> 5`` — the beam core's visited-bitmap layout, so the bitmap
+    drops straight into ``_init_state`` as every query's initial visited
+    set."""
+    dead = np.asarray(dead, bool)
+    w = (dead.shape[0] + 31) // 32
+    pad = np.zeros(w * 32, bool)
+    pad[: dead.shape[0]] = dead
+    bits = pad.reshape(w, 32).astype(np.uint32)
+    return (bits << np.arange(32, dtype=np.uint32)[None, :]).sum(
+        axis=1, dtype=np.uint32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _exact_scan(x, base, alive, metric):
+    """Both distance directions of one insert, masked to alive rows.
+
+    fwd[v] = d(x, v) — bitwise the batch distance-matrix ROW of x (the
+    kernel's per-element value does not depend on the query-side batch).
+    rev[v] = d(v, x) — bitwise the batch COLUMN, via an explicit
+    single-block y tile (internal padding of a (1, d) operand lowers
+    differently and drifts ulps; a pre-materialized block does not)."""
+    from repro.kernels import ops
+
+    fwd = ops.distance_matrix(x[None, :], base, metric=metric)[0]
+    ytile = jnp.zeros((_REV_BLOCK, x.shape[0]), jnp.float32).at[0].set(x)
+    rev = ops.distance_matrix(base, ytile, metric=metric)[:, 0]
+    return (jnp.where(alive, fwd, jnp.inf), jnp.where(alive, rev, jnp.inf))
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "max_keep"))
+def _gd_select(base, cand_ids, cand_d, valid, *, metric, max_keep):
+    """Inline per-insert GD: occlusion-prune the (distance-sorted) beam
+    candidates — the batch ``gd_prune`` body for a single vertex."""
+    from repro.kernels import ops
+
+    rows = base[jnp.maximum(cand_ids, 0)]
+    pd = ops.distance_matrix(rows, rows, metric=metric)
+    bad = (~valid)[:, None] | (~valid)[None, :]
+    return _occlusion_select(cand_d, jnp.where(bad, jnp.inf, pd), valid,
+                             max_keep)
+
+
+@functools.partial(jax.jit, static_argnames=("max_keep",))
+def _dpg_select(base, x, cand_ids, valid, *, max_keep):
+    """Inline per-insert DPG: angular max-min over the candidate edge
+    directions — the batch ``dpg_prune`` body for a single vertex."""
+    rows = base[jnp.maximum(cand_ids, 0)]
+    e = rows - x[None, :]
+    e = e * jax.lax.rsqrt(jnp.maximum(jnp.sum(e * e, -1, keepdims=True),
+                                      1e-12))
+    return _angular_select(e @ e.T, valid, max_keep)
+
+
+class MutableIndex:
+    """(artifact arrays, tombstone bitmap, pending-insert log) — the unit
+    the serving layer swaps. See the module docstring for semantics.
+
+    The flat graph only: a hierarchy is a batch artifact (mutating the
+    bottom layer would desync the upper layers), so a hot-swap cycle that
+    needs ``entry='hierarchy'`` rebuilds it at compaction time through the
+    ``hnsw`` construct. Every flat entry strategy (random / projection /
+    hubs / lsh) serves the mutating index directly."""
+
+    def __init__(self, base, neighbors, *, dists=None, metric: str = "l2",
+                 key=None, capacity: int | None = None, insert_ef: int = 64,
+                 diversify: str = "none", max_keep: int = 0,
+                 n_entries: int = 8):
+        base = np.asarray(base, np.float32)
+        nbrs = np.asarray(neighbors, np.int32)
+        if base.ndim != 2 or nbrs.ndim != 2 or base.shape[0] != nbrs.shape[0]:
+            raise ValueError(
+                f"base (n, d) and neighbors (n, R) must agree on n, got "
+                f"{base.shape} / {nbrs.shape}"
+            )
+        if diversify not in INLINE_DIVERSIFIERS:
+            raise ValueError(
+                f"unknown inline diversify {diversify!r}; one of "
+                f"{INLINE_DIVERSIFIERS}"
+            )
+        n, self.d = base.shape
+        self.R = nbrs.shape[1]
+        self.metric = metric
+        self.insert_ef = int(insert_ef)
+        self.diversify = diversify
+        self.max_keep = min(int(max_keep) or max(1, self.R // 2), self.R)
+        self.n_entries = int(n_entries)
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.capacity = max(int(capacity) if capacity is not None else n, n, 1)
+
+        self._alloc_host(self.capacity)
+        self._base[:n] = base
+        self._nbrs[:n] = nbrs
+        self._alive[:n] = True
+        self.n_alloc = n
+        self._n_live = n
+        if n:
+            if dists is not None:
+                d_arr = np.asarray(dists, np.float32)
+                if np.isnan(d_arr).any():  # diversified artifact graphs
+                    d_arr = self._edge_dists(base, nbrs)
+            else:
+                d_arr = self._edge_dists(base, nbrs)
+            self._dists[:n] = d_arr
+        self._tomb = pack_tombstones(~self._alive)
+        self._push_all_device()
+        self._nbrs_dirty: set[int] = set()
+        self._searcher: Searcher | None = None
+
+        # pending mutation log + throughput/staleness accounting
+        self.log: list[tuple[str, int]] = []
+        self.inserts_since_compact = 0
+        self.deletes_since_compact = 0
+        self.total_inserts = 0
+        self.insert_wall_s = 0.0
+        self.version = 0
+        self.last_id_map: np.ndarray | None = None
+
+    # -- constructors ---------------------------------------------------------
+
+    @classmethod
+    def empty(cls, d: int, degree: int, *, capacity: int,
+              **kw) -> "MutableIndex":
+        """An index with no points yet — the incremental construct's start."""
+        return cls(np.zeros((0, d), np.float32),
+                   np.zeros((0, degree), np.int32), capacity=capacity, **kw)
+
+    @classmethod
+    def from_build(cls, base, result, **kw) -> "MutableIndex":
+        """Wrap a ``GraphBuilder`` output (edge distances recomputed — the
+        diversify stage strips them to NaN)."""
+        kw.setdefault("metric", result.report.spec.metric)
+        return cls(base, result.graph.neighbors, dists=result.graph.dists,
+                   **kw)
+
+    @classmethod
+    def from_artifact(cls, art, **kw) -> "MutableIndex":
+        """Wrap a loaded :class:`~repro.core.io.IndexArtifact` (flat graph
+        only — see the class docstring on hierarchies)."""
+        kw.setdefault("metric", art.metric)
+        if art.key is not None:
+            kw.setdefault("key", jnp.asarray(art.key))
+        return cls(art.base, art.neighbors, **kw)
+
+    # -- storage --------------------------------------------------------------
+
+    def _alloc_host(self, C: int) -> None:
+        self._base = np.zeros((C, self.d), np.float32)
+        self._nbrs = np.full((C, self.R), INVALID, np.int32)
+        self._dists = np.full((C, self.R), np.inf, np.float32)
+        self._alive = np.zeros((C,), bool)
+
+    def _push_all_device(self) -> None:
+        self._base_dev = jnp.asarray(self._base)
+        self._nbrs_dev = jnp.asarray(self._nbrs)
+        self._alive_dev = jnp.asarray(self._alive)
+        self._tomb_dev = jnp.asarray(self._tomb)
+
+    def _flush_nbrs(self) -> None:
+        if self._nbrs_dirty:
+            rows = np.fromiter(self._nbrs_dirty, np.int64,
+                               len(self._nbrs_dirty))
+            rows.sort()
+            self._nbrs_dev = self._nbrs_dev.at[jnp.asarray(rows)].set(
+                jnp.asarray(self._nbrs[rows])
+            )
+            self._nbrs_dirty.clear()
+
+    def _grow(self) -> None:
+        """Double the capacity. Shapes change, so the next search traces new
+        bucket cores — one recompile per doubling, amortized away."""
+        C2 = 2 * self.capacity
+        base, nbrs, dists, alive = self._base, self._nbrs, self._dists, \
+            self._alive
+        self._alloc_host(C2)
+        C = self.capacity
+        self._base[:C], self._nbrs[:C] = base, nbrs
+        self._dists[:C], self._alive[:C] = dists, alive
+        self.capacity = C2
+        self._tomb = pack_tombstones(~self._alive)
+        self._push_all_device()
+        self._nbrs_dirty.clear()
+        self._searcher = None
+
+    def _edge_dists(self, base, nbrs) -> np.ndarray:
+        from repro.kernels import ops
+
+        gd = ops.gather_distance(jnp.asarray(base),
+                                 jnp.asarray(np.maximum(nbrs, 0)),
+                                 jnp.asarray(base), metric=self.metric)
+        return np.where(nbrs >= 0, np.asarray(gd), np.inf).astype(np.float32)
+
+    def _set_tomb(self, i: int, dead: bool) -> None:
+        w, b = i >> 5, np.uint32(1 << (i & 31))
+        if dead:
+            self._tomb[w] |= b
+        else:
+            self._tomb[w] &= ~b
+
+    # -- introspection --------------------------------------------------------
+
+    @property
+    def n_live(self) -> int:
+        return self._n_live
+
+    @property
+    def n_dead(self) -> int:
+        return self.n_alloc - self._n_live
+
+    @property
+    def tombstones(self) -> jax.Array:
+        """(ceil(capacity/32),) packed uint32 — deleted AND unallocated."""
+        return self._tomb_dev
+
+    @property
+    def alive(self) -> np.ndarray:
+        return self._alive[: self.n_alloc].copy()
+
+    @property
+    def base(self) -> np.ndarray:
+        """(n_alloc, d) rows, deleted slots included (read-only view)."""
+        return self._base[: self.n_alloc]
+
+    @property
+    def neighbors(self) -> np.ndarray:
+        """(n_alloc, R) adjacency, deleted rows included (read-only view)."""
+        return self._nbrs[: self.n_alloc]
+
+    @property
+    def staleness(self) -> float:
+        """Fraction of the live set not yet merged through a compaction:
+        (pending inserts + pending deletes) / live points."""
+        return ((self.inserts_since_compact + self.deletes_since_compact)
+                / max(self._n_live, 1))
+
+    @property
+    def insert_rate(self) -> float:
+        """Sustained inserts/s over every insert this index has absorbed."""
+        return self.total_inserts / max(self.insert_wall_s, 1e-9)
+
+    def live_graph(self) -> KnnGraph:
+        """(n_alloc, R) adjacency + edge distances. Rows of deleted vertices
+        are still present — the tombstone bitmap masks them at search."""
+        return KnnGraph(jnp.asarray(self._nbrs[: self.n_alloc]),
+                        jnp.asarray(self._dists[: self.n_alloc]))
+
+    def stats(self) -> dict:
+        return {
+            "n_live": self._n_live, "n_dead": self.n_dead,
+            "n_alloc": self.n_alloc, "capacity": self.capacity,
+            "pending_inserts": self.inserts_since_compact,
+            "pending_deletes": self.deletes_since_compact,
+            "staleness": round(self.staleness, 4),
+            "insert_rate": round(self.insert_rate, 1),
+            "version": self.version,
+        }
+
+    # -- mutation -------------------------------------------------------------
+
+    def insert(self, x, key=None) -> int:
+        """Insert one point; returns its id. Exact-scan placement while the
+        index is tiny (or always, with ``insert_ef=0``); beam-search-then-
+        link otherwise."""
+        x = np.asarray(x, np.float32)
+        if x.shape != (self.d,):
+            raise ValueError(f"expected a ({self.d},) point, got {x.shape}")
+        t0 = time.perf_counter()
+        if self.n_alloc == self.capacity:
+            self._grow()
+        m = self.n_alloc
+        if self.insert_ef <= 0 or self._n_live <= max(self.R, self.insert_ef):
+            row_ids, row_d, rec_rows, rec_d = self._exact_place(x)
+        else:
+            row_ids, row_d, rec_rows, rec_d = self._beam_place(x, key)
+        self.n_alloc = m + 1
+        self._base[m] = x
+        self._nbrs[m] = row_ids
+        self._dists[m] = row_d
+        self._alive[m] = True
+        self._n_live += 1
+        self._set_tomb(m, False)
+        touched = self._link_reciprocal(rec_rows, rec_d, m)
+        # device mirrors: row writes keep shapes (and compiled cores) stable
+        self._base_dev = self._base_dev.at[m].set(jnp.asarray(x))
+        self._alive_dev = self._alive_dev.at[m].set(True)
+        self._tomb_dev = jnp.asarray(self._tomb)
+        self._nbrs_dirty.add(m)
+        self._nbrs_dirty.update(int(v) for v in touched)
+        self._searcher = None
+        self.log.append(("insert", m))
+        self.inserts_since_compact += 1
+        self.total_inserts += 1
+        self.insert_wall_s += time.perf_counter() - t0
+        return m
+
+    def insert_batch(self, points) -> np.ndarray:
+        pts = np.asarray(points, np.float32)
+        return np.array([self.insert(p) for p in pts], np.int32)
+
+    def delete(self, ids) -> None:
+        """Tombstone live vertices. O(1) per id: one bitmap bit — the beam
+        then never scores them. Slots are reclaimed at compaction."""
+        for i in np.atleast_1d(np.asarray(ids, np.int64)):
+            i = int(i)
+            if i < 0 or i >= self.n_alloc or not self._alive[i]:
+                raise KeyError(f"id {i} is not a live vertex")
+            self._alive[i] = False
+            self._n_live -= 1
+            self._set_tomb(i, True)
+            self.log.append(("delete", i))
+            self.deletes_since_compact += 1
+        self._alive_dev = jnp.asarray(self._alive)
+        self._tomb_dev = jnp.asarray(self._tomb)
+        self._searcher = None
+
+    def _exact_place(self, x):
+        """Candidate placement by masked exact scan — batch-bitwise values
+        in both directions (see module docstring), so exact-mode maintenance
+        reproduces ``exact_knn_graph`` of the live set exactly."""
+        fwd, rev = _exact_scan(jnp.asarray(x), self._base_dev,
+                               self._alive_dev, self.metric)
+        fwd, rev = np.asarray(fwd), np.asarray(rev)
+        order = np.argsort(fwd, kind="stable")[: self.R]  # ties -> lowest id
+        d_sel = fwd[order]
+        keep = np.isfinite(d_sel)
+        row_ids = np.where(keep, order, INVALID).astype(np.int32)
+        row_d = np.where(keep, d_sel, np.inf).astype(np.float32)
+        rows = np.nonzero(self._alive)[0]  # full maintenance: every live row
+        return row_ids, row_d, rows, rev[rows]
+
+    def _beam_place(self, x, key):
+        """Candidate placement by beam search on the current graph (dead ids
+        masked via the tombstone bitmap), out-edges picked by the inline
+        diversify stage."""
+        self._flush_nbrs()
+        if key is None:
+            key = jax.random.fold_in(self.key, 0x1475 + self.total_inserts)
+        xdev = jnp.asarray(x)
+        ent = random_entries(key, self.capacity, 1,
+                             min(self.n_entries, self.insert_ef))
+        res = beam_search(xdev[None, :], self._base_dev, self._nbrs_dev, ent,
+                          ef=self.insert_ef, k=self.insert_ef,
+                          metric=self.metric, tombstones=self._tomb_dev)
+        cand = np.asarray(res.ids[0])
+        cd = np.asarray(res.dists[0])
+        valid = cand >= 0
+        if self.diversify == "gd":
+            keep = np.asarray(_gd_select(
+                self._base_dev, jnp.asarray(cand), jnp.asarray(cd),
+                jnp.asarray(valid), metric=self.metric,
+                max_keep=self.max_keep,
+            ))
+        elif self.diversify == "dpg":
+            keep = np.asarray(_dpg_select(
+                self._base_dev, xdev, jnp.asarray(cand), jnp.asarray(valid),
+                max_keep=self.max_keep,
+            ))
+        else:
+            keep = valid & (np.cumsum(valid) <= self.R)
+        sel = cand[keep & valid][: self.R]
+        seld = cd[keep & valid][: self.R]
+        row_ids = np.full(self.R, INVALID, np.int32)
+        row_d = np.full(self.R, np.inf, np.float32)
+        row_ids[: sel.size] = sel
+        row_d[: sel.size] = seld
+        return row_ids, row_d, sel.astype(np.int64), seld.astype(np.float64)
+
+    def _link_reciprocal(self, rows, dvals, m: int) -> np.ndarray:
+        """Degree-capped reciprocal linking: splice edge (v -> m) into each
+        candidate row v where its distance strictly beats v's worst edge —
+        incumbents win ties (they carry lower ids, matching the batch
+        lowest-id tie-break). Rows stay distance-sorted; the evicted edge is
+        exactly the row's current worst."""
+        if not rows.size:
+            return rows
+        worst = self._dists[rows, -1]
+        ok = dvals < worst
+        rows, dvals = rows[ok], dvals[ok]
+        if not rows.size:
+            return rows
+        rd = self._dists[rows]
+        ri = self._nbrs[rows]
+        pos = (rd <= dvals[:, None]).sum(1)  # after equals: ties keep order
+        j = np.arange(self.R)[None, :]
+        rr = np.arange(rows.size)[:, None]
+        src = np.clip(j - 1, 0, self.R - 1)
+        left, at = j < pos[:, None], j == pos[:, None]
+        self._dists[rows] = np.where(
+            left, rd, np.where(at, dvals[:, None], rd[rr, src])
+        ).astype(np.float32)
+        self._nbrs[rows] = np.where(
+            left, ri, np.where(at, m, ri[rr, src])
+        ).astype(np.int32)
+        return rows
+
+    # -- search ---------------------------------------------------------------
+
+    def searcher(self) -> Searcher:
+        """An engine over the CURRENT state: capacity-shaped device mirrors
+        plus the tombstone bitmap as every query's initial visited set. Hubs
+        are derived alive-masked (dead vertices neither rank nor appear —
+        the drift ``graph_index.hub_vertices`` guards against). Cached until
+        the next mutation."""
+        if self._searcher is None:
+            self._flush_nbrs()
+            hubs = hub_vertices(self._nbrs, DEFAULT_N_HUBS,
+                                alive=self._alive)
+            self._searcher = Searcher(self._base_dev, self._nbrs_dev,
+                                      metric=self.metric, key=self.key,
+                                      tombstones=self._tomb_dev, hubs=hubs)
+        return self._searcher
+
+    def search(self, queries, spec, key=None, **kw):
+        return self.searcher().search(queries, spec, key, **kw)
+
+    # -- compaction -----------------------------------------------------------
+
+    def compact(self, spec, key=None):
+        """Merge-compaction back through ``BuildSpec``: rebuild from the
+        surviving rows in original id order, then reset tombstones, log and
+        counters. Returns the :class:`~repro.core.build.BuildResult` (its
+        report stamped with the pre-compact staleness / insert throughput);
+        ``last_id_map`` maps old ids to compacted ids (INVALID = deleted).
+
+        With the same spec/key, the result bit-matches ``build_index`` on
+        the surviving base — compaction IS a batch build, so a post-compact
+        index inherits every batch bit-reproducibility guarantee."""
+        from .build import build_index
+
+        pre = (self.staleness, self.inserts_since_compact,
+               self.insert_wall_s)
+        surv = np.nonzero(self._alive[: self.n_alloc])[0]
+        if surv.size == 0:
+            raise ValueError("compact: no live vertices to rebuild from")
+        sbase = self._base[surv]
+        result = build_index(jnp.asarray(sbase), spec,
+                             key=self.key if key is None else key)
+        id_map = np.full(self.n_alloc, INVALID, np.int32)
+        id_map[surv] = np.arange(surv.size, dtype=np.int32)
+        self.last_id_map = id_map
+
+        n = surv.size
+        C = self.capacity
+        self._alloc_host(C)
+        self._base[:n] = sbase
+        nbrs = np.asarray(result.graph.neighbors, np.int32)
+        self.R = nbrs.shape[1]
+        self._nbrs = np.full((C, self.R), INVALID, np.int32)
+        self._dists = np.full((C, self.R), np.inf, np.float32)
+        self._nbrs[:n] = nbrs
+        d_arr = np.asarray(result.graph.dists, np.float32)
+        if np.isnan(d_arr).any():
+            d_arr = self._edge_dists(sbase, nbrs)
+        self._dists[:n] = d_arr
+        self._alive[:n] = True
+        self.n_alloc, self._n_live = n, n
+        self._tomb = pack_tombstones(~self._alive)
+        self._push_all_device()
+        self._nbrs_dirty.clear()
+        self._searcher = None
+        self.log.clear()
+        self.inserts_since_compact = 0
+        self.deletes_since_compact = 0
+        self.version += 1
+
+        result.report.staleness = round(pre[0], 4)
+        result.report.inserts = pre[1]
+        result.report.insert_rate = (round(pre[1] / pre[2], 1)
+                                     if pre[2] > 0 and pre[1] else -1.0)
+        return result
+
+    def checkpoint(self, path: str, spec, key=None):
+        """Compact, then persist the rebuilt index as a versioned artifact
+        (crash-safe: ``save_index`` writes via temp file + atomic rename).
+        Returns (written path, BuildResult) — the hot-swap producer side."""
+        from . import io as index_io
+
+        result = self.compact(spec, key=key)
+        art = index_io.IndexArtifact.from_build(
+            jnp.asarray(self._base[: self.n_alloc]), result,
+            metric=self.metric, key=self.key,
+        )
+        art.provenance["mutable_version"] = self.version
+        return index_io.save_index(path, art), result

@@ -88,6 +88,54 @@ def serve_open_loop(searcher, spec, args, key) -> None:
     print(f"[serve-ann] served recall@1={hits / max(rows, 1):.3f}, "
           f"comps/query={comps / max(rows, 1):.0f}")
 
+    if not getattr(args, "serve_mutate", 0):
+        return
+
+    # --serve-mutate: mutate the index under the live server, hot-swap it in
+    # (warmup pre-flip), and push a second request stream through the SAME
+    # server instance — DESIGN.md §13's serving side.
+    from repro.core.mutable import MutableIndex
+
+    n_ins = args.serve_mutate
+    n0 = searcher.base.shape[0]
+    midx = MutableIndex(np.asarray(searcher.base, np.float32),
+                        np.asarray(searcher.neighbors),
+                        metric=searcher.metric, key=searcher.key,
+                        insert_ef=32, diversify="gd")
+    t_m = time.monotonic()
+    midx.insert_batch(np.asarray(
+        jax.random.normal(jax.random.fold_in(key, 21), (n_ins, d_dim)),
+        np.float32,
+    ))
+    dead = np.random.default_rng(0).choice(n0, size=max(n_ins // 2, 1),
+                                           replace=False)
+    midx.delete(dead)
+    mutate_s = time.monotonic() - t_m
+    version = server.swap(midx.searcher(),
+                          key=jax.random.fold_in(key, 23))
+    ev = server.swap_events[-1]
+    print(f"[serve-ann] hot-swap v{version}: +{n_ins} inserts "
+          f"({midx.insert_rate:.0f} pts/s) -{len(dead)} tombstones in "
+          f"{mutate_s:.2f}s, staleness={midx.staleness:.3f}; warm+flip "
+          f"{ev['warm_s']:.2f}s with {ev['live_at_flip']} live / "
+          f"{ev['queued_at_flip']} queued at the flip")
+    done0, shed0 = st["completed"], st["shed"]
+    requests2 = make_requests(pool, args.serve_requests, sizes, seed=1,
+                              base_key=jax.random.fold_in(searcher.key, 778))
+    run_open_loop(server, requests2,
+                  poisson_arrivals(args.serve_qps / mean_size,
+                                   len(requests2), seed=1))
+    st2 = server.stats()
+    dead_set = set(int(i) for i in dead)
+    dead_hits = sum(int(i) in dead_set
+                    for req in server.completed[done0:]
+                    for i in req.ids.ravel())
+    print(f"[serve-ann] post-swap stream: "
+          f"{st2['completed'] - done0} served "
+          f"({st2['shed'] - shed0} shed), p99={st2.get('p99_ms')} ms "
+          f"cumulative, tombstoned ids in answers: {dead_hits} "
+          f"(must be 0)")
+
 
 def serve_ann(args) -> None:
     """ANN serving family: load an index artifact (or build one through the
@@ -271,10 +319,12 @@ def main() -> None:
                     help="[ann] write the built artifact here (defaults to "
                          "--index when that file does not exist yet)")
     ap.add_argument("--build-construct", default="auto",
-                    choices=["auto", "nndescent", "exact", "hnsw"],
+                    choices=["auto", "nndescent", "exact", "hnsw",
+                             "incremental"],
                     help="[ann] construct stage of the build pipeline "
                          "(auto = hnsw for --entry hierarchy, else "
-                         "nndescent)")
+                         "nndescent; incremental = streaming inserts "
+                         "through MutableIndex, DESIGN.md §13)")
     ap.add_argument("--build-k", type=int, default=20,
                     help="[ann] raw k-NN degree out of the construct stage")
     ap.add_argument("--build-rounds", type=int, default=15,
@@ -319,6 +369,13 @@ def main() -> None:
                     help="[ann] admission cap: batches in flight at once")
     ap.add_argument("--queue-depth", type=int, default=16,
                     help="[ann] backlog bound; submits past it are shed")
+    ap.add_argument("--serve-mutate", type=int, default=0,
+                    help="[ann] under --serve: after the first request "
+                         "stream, insert this many points and tombstone "
+                         "half as many through MutableIndex, hot-swap the "
+                         "mutated index into the live server (warmup "
+                         "pre-flip, zero drops), then serve a second "
+                         "stream against it (DESIGN.md §13)")
     args = ap.parse_args()
 
     if args.serve and args.arch != "ann":

@@ -142,8 +142,16 @@ class AnnServer:
         self.bucket_counts = {b: 0 for b in config.buckets}
         self.real_rows = 0
         self.padded_rows = 0
+        # hot-swap bookkeeping (DESIGN.md §13): the serving index version,
+        # bumped by every atomic flip, plus a flip event log
+        self.version = 0
+        self.swap_events: list[dict] = []
         # per-index state built once, off the serving path: strategy aux,
         # PQ code table, host base mirror
+        self._prepare_index(searcher, spec)
+
+    @staticmethod
+    def _prepare_index(searcher: Searcher, spec: SearchSpec) -> None:
         searcher.prepare(spec)
         if spec.scorer == "pq":
             searcher.pq_index(spec)
@@ -165,16 +173,25 @@ class AnnServer:
             )
         return self.config.buckets[i]
 
-    def warmup(self, key: jax.Array | None = None) -> None:
+    def warmup(self, key: jax.Array | None = None, *,
+               searcher: Searcher | None = None,
+               spec: SearchSpec | None = None) -> None:
         """Compile every shape the serving path can hit, off the serving
         path. One beam core per (bucket, spec) is not enough: seeding runs
         at the request's REAL row count and the pad ops are shape-keyed
         too, so each distinct qn is its own set of executables — the first
         size-3 request would otherwise pay a trace+compile spike mid-
         serving. qn only ranges 1..max_bucket, so warming each qn once
-        covers every (qn, bucket) pair the server can ever see."""
-        d = self.searcher.base.shape[1]
-        key = self.searcher.key if key is None else key
+        covers every (qn, bucket) pair the server can ever see.
+
+        ``searcher``/``spec`` (default: the serving pair) let :meth:`swap`
+        warm an INCOMING index before the flip — its (n, W) shapes key new
+        executables whenever n changed, and tracing them on the serving path
+        would spike p99 mid-flip."""
+        searcher = self.searcher if searcher is None else searcher
+        spec = self.spec if spec is None else spec
+        d = searcher.base.shape[1]
+        key = searcher.key if key is None else key
         b_max = self.config.buckets[-1]
         rows = np.asarray(
             jax.random.normal(jax.random.fold_in(key, b_max), (b_max, d)),
@@ -183,20 +200,26 @@ class AnnServer:
         for qn in range(1, b_max + 1):
             res = self._search_padded(rows[:qn],
                                       jax.random.fold_in(key, 2 * qn),
-                                      self.pick_bucket(qn))
+                                      self.pick_bucket(qn),
+                                      searcher=searcher, spec=spec)
             jax.block_until_ready(res.ids)
 
     # -- the padded core call -------------------------------------------------
 
     def _search_padded(self, rows: np.ndarray, key: jax.Array,
-                       bucket: int) -> SearchResult:
+                       bucket: int, *, searcher: Searcher | None = None,
+                       spec: SearchSpec | None = None) -> SearchResult:
         """Transfer + seed + pad + dispatch, all asynchronous. Seeding uses
         the request's REAL row count (PRNG parity with a direct search);
         padding to the bucket happens after, with entries INVALID, comps 0
-        and ``q_valid`` masking the pad rows out of the beam."""
+        and ``q_valid`` masking the pad rows out of the beam. ``searcher``/
+        ``spec`` target an index other than the serving one (warming an
+        incoming index pre-flip)."""
+        searcher = self.searcher if searcher is None else searcher
+        spec = self.spec if spec is None else spec
         qn, d = rows.shape
         dev = jax.device_put(rows)  # async: overlaps the in-flight batch
-        ent, ecomps = self.searcher.seed(dev, self.spec, key)
+        ent, ecomps = searcher.seed(dev, spec, key)
         pad = bucket - qn
         if pad:
             dev = jnp.concatenate([dev, jnp.zeros((pad, d), dev.dtype)])
@@ -209,8 +232,42 @@ class AnnServer:
         # fold_in(key, row_index), so the real rows of a padded bucket draw
         # the exact restart seeds a direct search would (pad rows hold keys
         # too but can never restart — they finish with an empty beam)
-        return self.searcher.search(dev, self.spec, key, entries=ent,
-                                    entry_comps=ecomps, q_valid=valid)
+        return searcher.search(dev, spec, key, entries=ent,
+                               entry_comps=ecomps, q_valid=valid)
+
+    # -- hot swap (DESIGN.md §13) ---------------------------------------------
+
+    def swap(self, searcher: Searcher, spec: SearchSpec | None = None,
+             key: jax.Array | None = None) -> int:
+        """Atomically flip serving to a new index version with zero dropped
+        requests and no on-path compilation.
+
+        The incoming index is fully prepared OFF the serving path first:
+        strategy aux / PQ table / host mirror, then a full :meth:`warmup` —
+        every (qn, bucket) executable for the incoming (n, W) shapes is
+        compiled and cached BEFORE the flip. The flip itself is two
+        attribute assignments: in-flight batches keep device references to
+        the old arrays (retire never touches ``self.searcher``), requests
+        admitted afterwards run on the new version, nothing is shed or
+        retraced mid-flip. Returns the new version number."""
+        spec = self.spec if spec is None else spec
+        self._prepare_index(searcher, spec)
+        t0 = self.clock()
+        self.warmup(key, searcher=searcher, spec=spec)   # pre-flip: off-path
+        warmed = self.clock()
+        # the atomic flip — everything after this line serves v+1
+        self.searcher = searcher
+        self.spec = spec
+        self.version += 1
+        self.swap_events.append({
+            "version": self.version,
+            "n": int(searcher.base.shape[0]),
+            "warm_s": round(warmed - t0, 4),
+            "t_flip": self.clock(),
+            "live_at_flip": len(self.live),
+            "queued_at_flip": len(self.queue),
+        })
+        return self.version
 
     # -- request lifecycle ----------------------------------------------------
 
@@ -305,6 +362,8 @@ class AnnServer:
         out = {
             "completed": len(self.completed),
             "shed": len(self.shed),
+            "version": self.version,
+            "swaps": len(self.swap_events),
             "bucket_counts": {str(b): c for b, c in
                               self.bucket_counts.items() if c},
             "real_rows": self.real_rows,

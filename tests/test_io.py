@@ -273,3 +273,72 @@ def test_suffixless_path_normalized(world, built, tmp_path):
                                                     metric="l2"))
     assert p.endswith(".npz") and os.path.exists(p)
     assert rio.load_index(os.path.join(tmp_path, "noext")).n == 800
+
+
+# -- crash safety (DESIGN.md §13: the hot-swap producer side) -----------------
+
+
+def test_truncated_artifact_raises_named_error(world, built, tmp_path):
+    """A partial write (every truncation point, not just 'half') must raise
+    CorruptArtifactError — never a raw zipfile/zlib/KeyError traceback — so
+    a hot-swapping server can catch one exception type and keep serving its
+    current version."""
+    base, _ = world
+    path = rio.save_index(os.path.join(tmp_path, "whole.npz"),
+                          rio.IndexArtifact.from_build(base, built["flat"],
+                                                       metric="l2"))
+    blob = open(path, "rb").read()
+    for frac in (0.05, 0.5, 0.98):
+        cut = os.path.join(tmp_path, f"cut{int(frac * 100)}.npz")
+        with open(cut, "wb") as f:
+            f.write(blob[: int(len(blob) * frac)])
+        with pytest.raises(rio.CorruptArtifactError):
+            rio.load_index(cut)
+
+
+def test_save_is_atomic_kill_mid_write_keeps_old_artifact(world, built,
+                                                          tmp_path,
+                                                          monkeypatch):
+    """Simulated kill mid-save: np.savez dies after emitting partial bytes.
+    The final path must still hold the OLD complete artifact (save writes a
+    temp file and os.replace's it only on success), and the dead temp file
+    must not be left behind."""
+    base, _ = world
+    path = os.path.join(tmp_path, "index.npz")
+    rio.save_index(path, rio.IndexArtifact.from_build(base, built["flat"],
+                                                      metric="l2"))
+    before = open(path, "rb").read()
+
+    real_savez = np.savez
+
+    def dying_savez(f, **arrays):
+        real_savez(f, **arrays)           # bytes hit the temp file...
+        raise KeyboardInterrupt("kill -9 mid-save")   # ...then the "crash"
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(KeyboardInterrupt):
+        rio.save_index(path, rio.IndexArtifact.from_build(base, built["gd"],
+                                                          metric="l2"))
+    monkeypatch.undo()
+
+    assert open(path, "rb").read() == before      # old artifact untouched
+    assert [p for p in os.listdir(tmp_path)
+            if p.endswith(".tmp")] == []          # no temp litter
+    art = rio.load_index(path)                    # and it still loads whole
+    assert art.n == base.shape[0]
+
+
+def test_save_replaces_existing_artifact_atomically(world, built, tmp_path):
+    """Happy-path overwrite goes through the same temp+rename: the new
+    artifact lands complete and the temp name is gone."""
+    base, _ = world
+    path = os.path.join(tmp_path, "swap.npz")
+    rio.save_index(path, rio.IndexArtifact.from_build(base, built["flat"],
+                                                      metric="l2"))
+    first = rio.load_index(path)
+    rio.save_index(path, rio.IndexArtifact.from_build(base, built["gd"],
+                                                      metric="l2"))
+    second = rio.load_index(path)
+    assert not np.array_equal(np.asarray(first.neighbors),
+                              np.asarray(second.neighbors))
+    assert [p for p in os.listdir(tmp_path) if p.endswith(".tmp")] == []

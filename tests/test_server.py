@@ -250,3 +250,105 @@ def test_oversize_request_rejected(world):
     server = AnnServer(searcher, spec, ServeConfig(buckets=(1, 2, 4)))
     with pytest.raises(ValueError, match="exceeds the largest bucket"):
         server.submit(queries[:5])
+
+
+# -- hot swap (DESIGN.md §13) -------------------------------------------------
+
+
+def _beam_cache_size():
+    """Compiled-executable count of the beam core (None when this jax
+    doesn't expose jit cache introspection)."""
+    from repro.core import beam_search as bs
+
+    fn = bs.beam_search
+    if hasattr(fn, "_cache_size"):
+        try:
+            return int(fn._cache_size())
+        except Exception:
+            return None
+    return None
+
+
+def test_hot_swap_zero_drop_and_bit_identity(world):
+    """One server across an index-version flip: requests already dispatched
+    keep the OLD index, requests still queued at the flip get the NEW one,
+    nothing is shed, and each side bit-matches direct search on the version
+    that served it."""
+    s0, queries, _ = world
+    spec = SearchSpec(ef=32, k=4, entry="random")
+    key2 = jax.random.PRNGKey(31)
+    base2 = jax.random.uniform(key2, (900, 16))  # new n -> new core shapes
+    s1 = Searcher.build(base2, key=key2)
+
+    server = AnnServer(s0, spec,
+                       ServeConfig(buckets=(1, 2, 4, 8), max_live_batches=2,
+                                   max_queue_depth=16))
+    server.warmup()
+    assert server.version == 0 and server.swap_events == []
+
+    rng = np.random.default_rng(13)
+    def make(n, tag):
+        reqs = []
+        for i in range(n):
+            sz = int(rng.choice((1, 3, 4, 8)))
+            start = int(rng.integers(0, queries.shape[0] - sz + 1))
+            reqs.append((queries[start:start + sz],
+                         jax.random.fold_in(s0.key, tag + i)))
+        return reqs
+
+    reqs_a = make(6, 600)
+    for rows, k in reqs_a:
+        server.submit_wait(rows, k)
+    server.drain()
+
+    # enqueue WITHOUT admitting, then flip: the queued requests must come
+    # back answered by the new version
+    reqs_b = make(5, 700)
+    for rows, k in reqs_b:
+        server.submit(rows, k, advance=False)
+    version = server.swap(s1, key=jax.random.fold_in(key2, 1))
+    assert version == 1 and server.version == 1
+    ev = server.swap_events[-1]
+    assert ev["queued_at_flip"] == len(reqs_b) and ev["n"] == 900
+    cache_at_flip = _beam_cache_size()
+
+    server.drain()
+    # no shape was traced after the flip — swap warmed the incoming index
+    after = _beam_cache_size()
+    assert cache_at_flip is None or after == cache_at_flip
+    assert not server.shed
+    assert len(server.completed) == len(reqs_a) + len(reqs_b)
+
+    done = sorted(server.completed, key=lambda r: r.rid)
+    for req, (rows, k) in zip(done[:len(reqs_a)], reqs_a):
+        direct = s0.search(jnp.asarray(rows), spec, k)
+        np.testing.assert_array_equal(req.ids, np.asarray(direct.ids))
+        np.testing.assert_array_equal(req.dists, np.asarray(direct.dists))
+    for req, (rows, k) in zip(done[len(reqs_a):], reqs_b):
+        direct = s1.search(jnp.asarray(rows), spec, k)
+        np.testing.assert_array_equal(req.ids, np.asarray(direct.ids))
+        np.testing.assert_array_equal(req.dists, np.asarray(direct.dists))
+        assert np.asarray(req.ids).max() < 900  # answered by the new index
+    assert server.stats()["swaps"] == 1
+
+
+def test_swap_warms_before_flip_not_after(world):
+    """The p99-spike regression: every (qn, bucket) executable for the
+    incoming index must exist BEFORE the flip, so the first post-flip
+    request compiles nothing."""
+    s0, queries, _ = world
+    spec = SearchSpec(ef=16, k=2, entry="random")
+    key2 = jax.random.PRNGKey(41)
+    s1 = Searcher.build(jax.random.uniform(key2, (700, 16)), key=key2)
+    server = AnnServer(s0, spec,
+                       ServeConfig(buckets=(1, 2, 4), max_live_batches=2,
+                                   max_queue_depth=8))
+    server.warmup()
+    server.swap(s1, key=jax.random.fold_in(key2, 2))
+    before = _beam_cache_size()
+    for i in range(1, 5):   # every qn the bucket set admits
+        server.submit_wait(queries[:i], jax.random.fold_in(s1.key, 80 + i))
+    server.drain()
+    after = _beam_cache_size()
+    assert before is None or after == before
+    assert len(server.completed) == 4 and not server.shed
