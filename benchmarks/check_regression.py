@@ -77,6 +77,15 @@ ENTRY_TERM_HUBS_RECALL_SLACK = 0.005
 ENTRY_TERM_HUBS_WALL_FACTOR = 1.5
 ENTRY_TERM_STABLE_RECALL_SLACK = 0.015
 
+# filtered-search invariants (baseline-independent; DESIGN.md §14).
+# Isolation is absolute: one id outside the predicate is a correctness bug,
+# not a regression. Graph-path rows must hold recall >= the ratio times the
+# SAME spec's unfiltered recall (the masked oracle is the denominator's
+# twin); exact-scan-fallback rows are exhaustive, so anything below 1.0
+# means the fallback scored or kept a wrong id.
+FILTERED_MIN_RECALL_RATIO = 0.95
+
+
 
 def _metric(row: dict, key: str, side: str, other: dict | None, tag: str,
             violations: list[str]):
@@ -337,6 +346,47 @@ def check_mutation(rows: list[dict], *, out=print) -> list[str]:
     return violations
 
 
+def check_filtered(rows: list[dict], *, out=print) -> list[str]:
+    """Baseline-independent invariants of the filtered-search sweep: zero
+    isolation violations on every row, exact recall on exact-scan-fallback
+    rows, and graph-path recall within FILTERED_MIN_RECALL_RATIO of the
+    same spec unfiltered."""
+    violations = []
+    for r in rows:
+        tag = (f"filtered[sel={r.get('sel', '?')},"
+               f"{r.get('scorer', '?')}/{r.get('placement', '?')}]")
+        need = ("recall_at_k", "recall_ratio", "violations", "path")
+        vals = {}
+        for key in need:
+            v = _metric(r, key, "fresh", None, tag, violations)
+            if v is None:
+                break
+            vals[key] = v
+        if len(vals) < len(need):
+            continue
+        out(f"[perf-guard] {tag} [{vals['path']}]: recall "
+            f"{vals['recall_at_k']} (ratio {vals['recall_ratio']}), "
+            f"violations {vals['violations']}")
+        if vals["violations"] != 0:
+            violations.append(
+                f"{tag}: {vals['violations']} answer ids violate the "
+                f"predicate — tenant/filter isolation is broken"
+            )
+        if vals["path"] == "brute" and vals["recall_at_k"] < 1.0:
+            violations.append(
+                f"{tag}: exact-scan fallback recall {vals['recall_at_k']} "
+                f"< 1.0 (the fallback scores the whole allowed set; "
+                f"anything missed is a scoring/packing bug)"
+            )
+        if vals["path"] == "graph" \
+                and vals["recall_ratio"] < FILTERED_MIN_RECALL_RATIO:
+            violations.append(
+                f"{tag}: filtered recall ratio {vals['recall_ratio']} < "
+                f"{FILTERED_MIN_RECALL_RATIO} of the unfiltered twin"
+            )
+    return violations
+
+
 def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
             max_comps_ratio: float, max_recall_drop: float,
             min_host_tier_rows: int = 1, min_serving_rows: int = 3,
@@ -578,6 +628,35 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
                     f"{tag}: sustained_qps dropped "
                     f">{(1-1/max_wall_ratio)*100:.0f}%: {b_sus} -> {f_sus}"
                 )
+    # filtered-search sweep: internal invariants on every fresh row
+    # (isolation, fallback exactness, recall-ratio floor), plus recall drift
+    # vs baseline rows matched by (sel, scorer, placement). The guard arms
+    # itself the first time a baseline carries the sweep.
+    if "filtered_sweep" in fresh:
+        violations += check_filtered(fresh["filtered_sweep"], out=out)
+    elif "filtered_sweep" in baseline:
+        violations.append("filtered_sweep missing from fresh report")
+    fresh_filt = {(r.get("sel"), r.get("scorer"), r.get("placement")): r
+                  for r in fresh.get("filtered_sweep", [])}
+    for b in baseline.get("filtered_sweep", []):
+        bkey = (b.get("sel"), b.get("scorer"), b.get("placement"))
+        tag = f"filtered[sel={bkey[0]},{bkey[1]}/{bkey[2]}]"
+        f = fresh_filt.get(bkey)
+        if f is None:
+            violations.append(f"{tag} missing from fresh report")
+            continue
+        b_rec, f_rec = _pair(b, f, "recall_at_k", tag, violations)
+        b_cmp, f_cmp = _pair(b, f, "comps_per_query", tag, violations)
+        if b_rec is not None and f_rec < b_rec - max_recall_drop:
+            violations.append(
+                f"{tag}: recall_at_k {b_rec} -> {f_rec} "
+                f"(allowed drop {max_recall_drop})"
+            )
+        if b_cmp is not None and f_cmp > b_cmp * max_comps_ratio:
+            violations.append(
+                f"{tag}: comps_per_query {b_cmp} -> {f_cmp} "
+                f"(allowed <= {b_cmp * max_comps_ratio:.1f})"
+            )
     return violations
 
 

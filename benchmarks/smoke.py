@@ -83,6 +83,21 @@ ENTRY_TERM_EF_FACTOR = 2       # stable ceiling = factor * fixed ef
 ENTRY_TERM_STABLE_STEPS = 20   # patience: steps without top-k improvement
 ENTRY_TERM_RESTARTS = 2        # the one restarts>0 row (GNNS-style reseed)
 
+# Filtered-search sweep (DESIGN.md §14): selectivity x scorer x placement
+# over the MAIN world with a uniform timestamp column. The 0.01 row drops
+# below filtered_brute_cutoff and exercises the exact-scan fallback (recall
+# 1.0 by construction, comps == n_allowed); the graph rows are gated by
+# check_regression on recall ratio vs the same spec unfiltered, and every
+# row on zero isolation violations against the numpy predicate.
+FILTERED_SELECTIVITIES = (0.9, 0.5, 0.01)
+FILTERED_COMBOS = (("exact", "device"), ("pq", "device"), ("pq", "host"))
+FILTERED_K = 10
+FILTERED_EF_FACTOR = 3         # filtered rows search at factor * ef: denied
+                               # regions thin the traversable graph, so the
+                               # beam needs headroom to route around them
+                               # (2x leaves sel=0.5 at ~0.949 of unfiltered
+                               # on the CI world — just under the 0.95 gate)
+
 
 def _build_graph(base, key):
     """Exact k-NN graph below the brute-force knee, NN-Descent above it —
@@ -424,6 +439,64 @@ def _stream_sweep(key, ef: int, tile_q: int, out) -> list[dict]:
     return rows
 
 
+def _filtered_sweep(searcher, base, queries, ef: int, out) -> list[dict]:
+    """Filtered-search trajectory (DESIGN.md §14) on the main world: recall
+    vs a masked brute-force oracle, isolation violations, comps and wall
+    per (selectivity, scorer, placement). Attaches a throwaway timestamp
+    column to the main searcher — runs LAST so no other sweep sees it."""
+    from repro.core.engine import filtered_brute_cutoff
+    from repro.core.filters import FilterSpec
+
+    n = base.shape[0]
+    q = queries.shape[0]
+    ts = np.random.default_rng(42).random(n).astype(np.float32)
+    searcher.metadata = {"timestamp": ts}
+    base_np = np.asarray(base)
+
+    def overlap(ids, oracle):
+        ids = np.asarray(ids)
+        return sum(len(set(ids[i][ids[i] >= 0]) & set(oracle[i]))
+                   for i in range(q)) / oracle.size
+
+    gt_k = np.asarray(bruteforce.ground_truth(queries, base, FILTERED_K))
+    rows = []
+    for scorer, placement in FILTERED_COMBOS:
+        spec = SearchSpec(ef=FILTERED_EF_FACTOR * ef, k=FILTERED_K,
+                          entry="random", scorer=scorer,
+                          base_placement=placement)
+        if scorer == "pq":
+            searcher.pq_index(spec)
+        key = jax.random.fold_in(searcher.key, 600)
+        unf = overlap(searcher.search(queries, spec, key).ids, gt_k)
+        for sel in FILTERED_SELECTIVITIES:
+            fspec = spec._replace(filter=FilterSpec(time_range=(0.0, sel)))
+            wall, res = timeit(
+                lambda: searcher.search(queries, fspec, key), iters=3)
+            allow = ts <= sel
+            ids = np.asarray(res.ids)
+            violations = int((~allow[ids[ids >= 0]]).sum())
+            oracle = np.nonzero(allow)[0][np.asarray(bruteforce.ground_truth(
+                queries, jax.numpy.asarray(base_np[allow]), FILTERED_K))]
+            rec = overlap(ids, oracle)
+            brute = int(allow.sum()) <= filtered_brute_cutoff(fspec)
+            row = {
+                "sel": sel, "scorer": scorer, "placement": placement,
+                "n_allowed": int(allow.sum()),
+                "path": "brute" if brute else "graph",
+                "recall_at_k": round(rec, 4),
+                "unfiltered_recall_at_k": round(unf, 4),
+                "recall_ratio": round(rec / max(unf, 1e-9), 4),
+                "violations": violations,
+                "comps_per_query": round(float(res.n_comps.mean()), 1),
+                "wall_ms": round(wall * 1e3, 2),
+            }
+            rows.append(row)
+            out(f"smoke/filtered sel={sel} {scorer}/{placement} "
+                f"[{row['path']}]: recall={rec:.3f} (unfiltered {unf:.3f}), "
+                f"violations={violations}, comps={row['comps_per_query']:.0f}")
+    return rows
+
+
 def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
         stream_tile: int = 128, out_path: str = "BENCH_engine.json",
         host_tier_ns: list[int] | None = None, out=print) -> dict:
@@ -503,6 +576,11 @@ def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
         key, host_tier_ns or [n], q, ef, out,
         main_world=(n, searcher, queries, gt),
     )
+
+    # filtered search: selectivity x scorer x placement — DESIGN.md §14.
+    # Runs last: it attaches a metadata column to the main searcher.
+    report["filtered_sweep"] = _filtered_sweep(searcher, base, queries, ef,
+                                               out)
 
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)

@@ -70,9 +70,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--serve", action="store_true",
                     help="open-loop continuous-batching serving demo (§11)")
+    ap.add_argument("--scale", type=float, default=0.02,
+                    help="fraction of SIFT1M to synthesize (CI uses 0.005)")
     args = ap.parse_args()
     key = jax.random.PRNGKey(0)
-    base, queries, metric = make_ann_dataset("SIFT1M", scale=0.02, n_queries=200)
+    base, queries, metric = make_ann_dataset("SIFT1M", scale=args.scale,
+                                             n_queries=200)
     print(f"dataset: n={base.shape[0]} d={base.shape[1]} metric={metric}")
 
     # 1. one spec = the whole build: NN-Descent (KGraph) -> GD diversification

@@ -149,7 +149,7 @@ def _mark_visited(visited: jax.Array, ids: jax.Array) -> jax.Array:
 
 def _init_state(queries, base, neighbors, entry_ids, ef, metric,
                 r_tile: int = 0, scorer: str = "exact",
-                scorer_state=None, tombstones=None) -> _State:
+                scorer_state=None, tombstones=None, deny=None) -> _State:
     Q = queries.shape[0]
     # n comes from the adjacency, not the base: under base_placement='host'
     # the traversal runs with base=None (the float rows never reach the
@@ -158,16 +158,25 @@ def _init_state(queries, base, neighbors, entry_ids, ef, metric,
     W = (n + 31) // 32
     E = entry_ids.shape[1]
 
-    # Deleted/unallocated ids arrive as a (W,) packed bitmap and become every
-    # row's INITIAL visited set: the fused mask epilogue then returns
-    # (+inf, INVALID) for them at seeding, every hop, and every restart draw —
-    # tombstones ride the existing visited plumbing with zero kernel changes
-    # and zero recompiles (the bitmap is an operand, not a static arg).
-    if tombstones is None:
+    # Deleted/unallocated ids (tombstones, (W,)) and filter-denied ids (deny,
+    # (W,) shared or (Q, W) per-query — DESIGN.md §14) arrive as packed
+    # bitmaps and OR into every row's INITIAL visited set: the fused mask
+    # epilogue then returns (+inf, INVALID) for them at seeding, every hop,
+    # and every restart draw — exclusion sets ride the existing visited
+    # plumbing with zero kernel changes and zero recompiles (the bitmaps are
+    # operands, not static args, so new tombstone/filter VALUES reuse the
+    # compiled executable).
+    if tombstones is None and deny is None:
         init = jnp.zeros((Q, W), jnp.uint32)
     else:
-        init = jnp.broadcast_to(tombstones.astype(jnp.uint32)[None, :],
-                                (Q, W))
+        init = jnp.zeros((W,), jnp.uint32)
+        if tombstones is not None:
+            init = init | tombstones.astype(jnp.uint32)
+        init = init[None, :]
+        if deny is not None:
+            d = deny.astype(jnp.uint32)
+            init = init | (d if d.ndim == 2 else d[None, :])
+        init = jnp.broadcast_to(init, (Q, W))
 
     # seeds are scored in the scorer's own currency (ADC scores under pq):
     # the candidate list must stay comparable across the whole traversal.
@@ -410,6 +419,7 @@ def beam_search(
     restart_gate: float = 0.0,
     restart_keys: jax.Array | None = None,
     tombstones: jax.Array | None = None,
+    deny: jax.Array | None = None,
 ) -> SearchResult:
     """Best-first graph search. entry_ids (Q, E) seeds (E <= ef).
     expand_width > 1 expands several vertices per step (beyond-paper);
@@ -424,13 +434,18 @@ def beam_search(
     rows from fresh per-row-keyed seeds (module docstring / DESIGN.md §12);
     tombstones (ceil(n/32),) packed uint32 marks deleted/unallocated ids —
     they seed every row's visited bitmap, so dead vertices score +inf
-    everywhere and cost zero comparisons (DESIGN.md §13)."""
+    everywhere and cost zero comparisons (DESIGN.md §13); deny is the same
+    mechanism for filter/namespace predicates (DESIGN.md §14) — (W,) shared
+    across the batch or (Q, W) per query, ORed with the tombstones into the
+    initial visited set, so denied ids are never scored, never expanded,
+    never returned, at zero extra kernel cost and zero recompiles across
+    filter values."""
     check_termination(term, restarts, restart_keys)
     if max_steps is None:
         max_steps = default_max_steps(ef, expand_width)
     entry_ids = mask_padded_queries(entry_ids, q_valid)
     state = _init_state(queries, base, neighbors, entry_ids, ef, metric,
-                        r_tile, scorer, scorer_state, tombstones)
+                        r_tile, scorer, scorer_state, tombstones, deny)
 
     def cond(s: _State):
         return (~s.done.all()) & (s.step < max_steps)
@@ -470,6 +485,7 @@ def beam_traverse(
     restart_gate: float = 0.0,
     restart_keys: jax.Array | None = None,
     tombstones: jax.Array | None = None,
+    deny: jax.Array | None = None,
 ) -> TraverseResult:
     """The beam loop WITHOUT the rerank tail — the device half of a tiered
     search (DESIGN.md §9). No ``base`` operand: the scorer must be base-free
@@ -479,7 +495,10 @@ def beam_traverse(
     ``cand_ids`` against wherever the float rows live (``BaseStore.gather``).
     Numerics are identical to ``beam_search``'s loop — same ``_init_state`` /
     ``_step`` bodies, same operands (``k`` here only sizes the term="stable"
-    stability window; the full ef list is returned either way)."""
+    stability window; the full ef list is returned either way). ``deny``
+    (filter bitmap, §14) composes with ``tombstones`` by OR exactly as in
+    ``beam_search`` — the candidate list the host rerank receives already
+    contains only allowed ids."""
     sc = get_scorer(scorer)
     if getattr(sc, "needs_base", True):
         raise ValueError(
@@ -492,7 +511,7 @@ def beam_traverse(
         max_steps = default_max_steps(ef, expand_width)
     entry_ids = mask_padded_queries(entry_ids, q_valid)
     state = _init_state(queries, None, neighbors, entry_ids, ef, metric,
-                        r_tile, scorer, scorer_state, tombstones)
+                        r_tile, scorer, scorer_state, tombstones, deny)
 
     def cond(s: _State):
         return (~s.done.all()) & (s.step < max_steps)
@@ -544,6 +563,7 @@ def search_with_trace(
     restart_gate: float = 0.0,
     restart_keys: jax.Array | None = None,
     tombstones: jax.Array | None = None,
+    deny: jax.Array | None = None,
 ) -> tuple[SearchResult, jax.Array, jax.Array]:
     """Fixed-step variant recording the Fig. 6 statistics.
 
@@ -564,7 +584,7 @@ def search_with_trace(
     if max_steps is None:
         max_steps = default_max_steps(ef, expand_width)
     state = _init_state(queries, base, neighbors, entry_ids, ef, metric,
-                        r_tile, scorer, scorer_state, tombstones)
+                        r_tile, scorer, scorer_state, tombstones, deny)
 
     def body(s: _State, _):
         s2 = _step(s, queries, base, neighbors, metric, expand_width, r_tile,

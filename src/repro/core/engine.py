@@ -47,6 +47,8 @@ from .beam_search import (
     rerank_slice,
     search_with_trace,
 )
+from .filters import CompiledFilter, FilterSpec, compile_filter, \
+    remap_denied_seeds
 from .graph_index import HnswIndex, KnnGraph
 from .scorers import SCORERS, get_scorer, register_scorer  # noqa: F401
 from .topk import INVALID, topk_smallest
@@ -56,7 +58,21 @@ class SearchSpec(NamedTuple):
     """Static search configuration (a pytree of hashable leaves).
 
     One spec drives every layer: single-host ``Searcher.search``, the
-    per-shard body of ``distributed_search``, and the serving loop.
+    per-shard body of ``distributed_search``, and the serving loop. The
+    axes, by DESIGN.md section:
+
+    * entry (§3, §12): ``entry`` / ``n_entries`` / ``proj_dim`` /
+      ``lsh_probes`` / ``hub_count`` pick where the beam starts;
+    * beam core (§2, §5): ``ef`` / ``k`` / ``expand_width`` / ``max_steps``
+      / ``r_tile`` shape the one flat best-first walk;
+    * scorer (§8): ``scorer`` / ``rerank`` / ``pq_*`` trade per-hop
+      distance fidelity for memory;
+    * placement (§9): ``base_placement`` decides which memory tier holds
+      the float base;
+    * termination (§12): ``term`` / ``stable_steps`` / ``restarts`` /
+      ``restart_gate`` make stopping per-query;
+    * filtering (§14): ``filter`` restricts answers to a metadata
+      predicate / tenant namespace — an operand, never a recompile.
     """
 
     ef: int = 64                # candidate-list width of the beam core
@@ -89,6 +105,11 @@ class SearchSpec(NamedTuple):
     restart_gate: float = 0.0   # restart only rows whose best distance is
                                 # still > gate * their seed-phase best
                                 # (0 = unconditional up to the budget)
+    filter: FilterSpec | None = None  # metadata predicate / tenant
+                                # namespace (§14): compiled once per
+                                # (filter, index) into a packed deny bitmap
+                                # that rides the mask epilogue; None = serve
+                                # the whole index
 
     @property
     def num_seeds(self) -> int:
@@ -310,19 +331,41 @@ def hierarchy_entries(
     return cur[:, None], comps
 
 
+def filtered_brute_cutoff(spec: SearchSpec) -> int:
+    """Allowed-set size at or below which a filtered search routes to the
+    exact-scan fallback instead of the graph (DESIGN.md §14). Masking makes
+    denied ids invisible but cannot make the allowed subgraph connected: once
+    ``n_allowed`` is within a few multiples of ``ef``, the walk mostly scores
+    denied neighbors for nothing while an exact scan over the allowed set is
+    both cheaper and recall-1.0. Policy, not mechanism — callers that want a
+    different threshold wrap :meth:`Searcher._filtered_brute` directly."""
+    return max(4 * spec.ef, 192)
+
+
 class Searcher:
     """(entry strategy x graph x beam core), bound to one dataset.
 
-    Holds the base matrix, the flat adjacency the beam walks, and (optionally)
-    an :class:`HnswIndex` whose upper layers back the ``hierarchy`` seeder.
-    Per-strategy prepared state (projections, sketches) is built lazily and
-    cached, keyed by (strategy, sketch width).
+    Holds the base matrix, the flat adjacency the beam walks, and
+    (optionally) an :class:`HnswIndex` whose upper layers back the
+    ``hierarchy`` seeder. Also bound per index, all lazy/cached:
+
+    * per-strategy prepared state (projections, sketches, hub shortlists),
+      keyed by (strategy, sketch width, hub count);
+    * PQ code tables for the ``pq`` scorer (attached from a build, or
+      trained once per (M, K, iters));
+    * a :class:`~repro.core.base_store.BaseStore` per ``base_placement``;
+    * a packed tombstone bitmap (§13) marking deleted/unallocated rows —
+      :class:`~repro.core.mutable.MutableIndex` swaps it as an operand;
+    * metadata columns (dict of (n,) arrays: tenant ids, tags,
+      timestamps) that ``SearchSpec.filter`` predicates read, with one
+      :class:`~repro.core.filters.CompiledFilter` cached per spec (§14).
     """
 
     def __init__(self, base, neighbors, *, hierarchy: HnswIndex | None = None,
                  metric: str = "l2", key: jax.Array | None = None, pq=None,
                  hubs: jax.Array | None = None,
-                 tombstones: jax.Array | None = None):
+                 tombstones: jax.Array | None = None,
+                 metadata: dict | None = None):
         self.base = base
         self.neighbors = neighbors
         self.hierarchy = hierarchy
@@ -337,6 +380,13 @@ class Searcher:
         # read as INVALID in the fused mask epilogue at zero extra cost.
         # An operand, not a static arg — mutating it never recompiles.
         self.tombstones = tombstones
+        # metadata columns for SearchSpec.filter predicates (DESIGN.md §14):
+        # a dict of (n,) arrays ("tenant", "tag", "timestamp", ...). None is
+        # fine until a filter that reads a column arrives.
+        self.metadata = metadata
+        # CompiledFilter cache, keyed by FilterSpec (hashable): each filter
+        # value is evaluated against the metadata exactly once per index.
+        self._filters: dict[FilterSpec, CompiledFilter] = {}
         self._aux: dict[tuple, object] = {}
         # PQ code tables backing the "pq" scorer: ``pq`` is an externally
         # trained index attached at engine build time (served for any spec
@@ -517,6 +567,74 @@ class Searcher:
         luts = build_adc_luts(queries, idx.codebooks, spec.metric)
         return (idx.codes, luts)
 
+    # -- filtering & namespaces (DESIGN.md §14) -------------------------------
+
+    def compiled_filter(self, fspec: FilterSpec) -> CompiledFilter:
+        """``fspec`` evaluated against this index's metadata, cached per
+        filter value. Tombstoned rows are ANDed out of the allowed set at
+        compile time, so the seed-redraw map and the exact-scan fallback
+        never name a dead id (the deny bitmap still ORs with tombstones at
+        ``_init_state`` — idempotent). MutableIndex rebuilds its Searcher on
+        every mutation, so cached filters never go stale."""
+        if fspec not in self._filters:
+            self._filters[fspec] = compile_filter(
+                fspec, self.metadata, self.neighbors.shape[0],
+                dead=self.tombstones,
+            )
+        return self._filters[fspec]
+
+    def _filtered_brute(self, queries, cf: CompiledFilter, spec: SearchSpec,
+                        *, q_valid: jax.Array | None = None) -> SearchResult:
+        """Exact scan over the allowed set — the fallback for filters too
+        selective to traverse (§14): the allowed subgraph of a very
+        selective filter is near-edgeless, so instead of starving the beam
+        we pay ``n_allowed`` exact comparisons, which at this selectivity is
+        CHEAPER than a graph walk. Scores the float base directly whatever
+        ``spec.scorer``/``spec.base_placement`` say (the allowed set is tiny
+        by construction; recall is 1.0 by construction). ``allowed_ids`` is
+        INVALID-padded to a power of two, so scan shapes — and compiled
+        executables — are shared across filters of similar selectivity."""
+        from repro.kernels import ops
+
+        Q = queries.shape[0]
+        allowed = cf.allowed_ids
+        if spec.k > allowed.shape[0]:  # k answers need a >= k-wide scan
+            allowed = jnp.concatenate([
+                allowed,
+                jnp.full((spec.k - allowed.shape[0],), INVALID, jnp.int32),
+            ])
+        ids = jnp.broadcast_to(allowed[None, :], (Q, allowed.shape[0]))
+        d = ops.gather_distance(queries, ids, self.base, metric=spec.metric,
+                                r_tile=spec.r_tile)  # INVALID -> +inf
+        dd, sel = topk_smallest(d, spec.k)
+        out = jnp.take_along_axis(ids, sel, axis=1)
+        out = jnp.where(jnp.isfinite(dd), out, INVALID)
+        comps = jnp.full((Q,), cf.n_allowed, jnp.int32)
+        if q_valid is not None:  # §11 pad rows answer (INVALID, +inf, 0)
+            out = jnp.where(q_valid[:, None], out, INVALID)
+            dd = jnp.where(q_valid[:, None], dd, jnp.inf)
+            comps = jnp.where(q_valid, comps, 0)
+        return SearchResult(ids=out, dists=dd, n_comps=comps,
+                            n_steps=jnp.int32(0), host_bytes=0)
+
+    def _filter_plan(self, spec: SearchSpec):
+        """(CompiledFilter | None, route-to-brute bool) for ``spec``."""
+        if spec.filter is None:
+            return None, False
+        cf = self.compiled_filter(spec.filter)
+        return cf, cf.n_allowed <= filtered_brute_cutoff(spec)
+
+    def _remap_entries(self, entries, cf: CompiledFilter | None,
+                       key: jax.Array | None):
+        """Seed redraw for filtered graph search: denied seeds become
+        uniform draws from the allowed set (row-index-keyed, so served
+        bucket-padded rows redraw bit-identically to direct search)."""
+        if cf is None:
+            return entries
+        return remap_denied_seeds(
+            entries, cf, self.key if key is None else key
+        )
+
     # -- tiered base (DESIGN.md §9) -------------------------------------------
 
     def base_store(self, placement: str = "device") -> BaseStore:
@@ -543,7 +661,8 @@ class Searcher:
                     key: jax.Array | None = None, *,
                     entries: jax.Array | None = None,
                     entry_comps: jax.Array | None = None,
-                    q_valid: jax.Array | None = None) -> "_HostPending":
+                    q_valid: jax.Array | None = None,
+                    cf: CompiledFilter | None = None) -> "_HostPending":
         """Device half of a host-tier search: seed, traverse on the code
         table, and ISSUE the async host->device gather of the top-``rerank``
         survivor rows. Returns a pending handle whose copy is in flight —
@@ -554,6 +673,7 @@ class Searcher:
         store = self.base_store(spec.base_placement)
         if entries is None:
             entries, entry_comps = self.seed(queries, spec, key)
+        entries = self._remap_entries(entries, cf, key)
         if q_valid is not None and entry_comps is not None:
             entry_comps = jnp.where(q_valid, entry_comps, 0)
         state = self.scorer_state(queries, spec)
@@ -566,6 +686,7 @@ class Searcher:
             restarts=spec.restarts, restart_gate=spec.restart_gate,
             restart_keys=self.restart_keys(queries.shape[0], spec, key),
             tombstones=self.tombstones,
+            deny=None if cf is None else cf.deny,
         )
         cand = trav.cand_ids[:, :rerank_slice(spec.ef, spec.k, spec.rerank)]
         rows, host_bytes = store.gather(cand)
@@ -602,15 +723,27 @@ class Searcher:
         (False) seed all-INVALID, cost zero comparisons, and return
         (INVALID, +inf, 0) without perturbing real rows — the serving layer
         seeds each request on its real rows first (strategy parity), then
-        pads queries/entries up to the bucket and masks here."""
+        pads queries/entries up to the bucket and masks here.
+
+        ``spec.filter`` (DESIGN.md §14) restricts answers to a metadata
+        predicate: its compiled deny bitmap ORs into the visited seeding (an
+        operand — new filter values never recompile), denied seeds are
+        redrawn from the allowed set, and filters selective past
+        :func:`filtered_brute_cutoff` route to an exact scan of the allowed
+        ids instead (``entries``/``scorer``/``base_placement`` are ignored
+        on that fallback)."""
         self._check_metric(spec)
+        cf, brute = self._filter_plan(spec)
+        if brute:
+            return self._filtered_brute(queries, cf, spec, q_valid=q_valid)
         if spec.base_placement != "device":
             return self._host_finish(self._host_start(
                 queries, spec, key, entries=entries, entry_comps=entry_comps,
-                q_valid=q_valid,
+                q_valid=q_valid, cf=cf,
             ))
         if entries is None:
             entries, entry_comps = self.seed(queries, spec, key)
+        entries = self._remap_entries(entries, cf, key)
         if q_valid is not None and entry_comps is not None:
             entry_comps = jnp.where(q_valid, entry_comps, 0)
         res = beam_search(
@@ -624,6 +757,7 @@ class Searcher:
             restarts=spec.restarts, restart_gate=spec.restart_gate,
             restart_keys=self.restart_keys(queries.shape[0], spec, key),
             tombstones=self.tombstones,
+            deny=None if cf is None else cf.deny,
         )
         if entry_comps is not None:
             res = res._replace(n_comps=res.n_comps + entry_comps)
@@ -656,7 +790,10 @@ class Searcher:
         self.prepare(spec)  # strategy state built once, outside the loop
         if spec.scorer == "pq":
             self.pq_index(spec)  # code table trained once, outside the loop
-        tiered = spec.base_placement != "device"
+        cf, brute = self._filter_plan(spec)  # compiled once, every tile
+        # a brute-routed filter ignores placement — tiles go through
+        # self.search's fallback, not the host pipeline
+        tiered = spec.base_placement != "device" and not brute
         ids, dists, comps, hbytes = [], [], [], []
         n_steps = jnp.int32(0)
         pending: tuple[_HostPending, int] | None = None
@@ -683,8 +820,8 @@ class Searcher:
             valid = jnp.arange(tile_q) < take
             kt = jax.random.fold_in(key, i)
             if tiered:
-                p = self._host_start(tile, spec, kt,
-                                     q_valid=valid)  # copy now in flight
+                p = self._host_start(tile, spec, kt, q_valid=valid,
+                                     cf=cf)  # copy now in flight
                 if pending is not None:
                     finish(*pending)  # previous tile, its copy long overlapped
                 pending = (p, take)
@@ -716,7 +853,16 @@ class Searcher:
             raise ValueError(
                 "search_with_trace requires base_placement='device'"
             )
+        cf, brute = self._filter_plan(spec)
+        if brute:
+            raise ValueError(
+                "search_with_trace traces the graph walk; this filter "
+                "routes to the exact-scan fallback (n_allowed <= "
+                f"{filtered_brute_cutoff(spec)}) — loosen the filter or "
+                "trace unfiltered"
+            )
         ent, extra = self.seed(queries, spec, key)
+        ent = self._remap_entries(ent, cf, key)
         if spec.max_steps is not None:
             max_steps = spec.max_steps
         res, td, tc = search_with_trace(
@@ -730,6 +876,7 @@ class Searcher:
             restarts=spec.restarts, restart_gate=spec.restart_gate,
             restart_keys=self.restart_keys(queries.shape[0], spec, key),
             tombstones=self.tombstones,
+            deny=None if cf is None else cf.deny,
         )
         return res._replace(n_comps=res.n_comps + extra), td, tc + extra[None, :]
 
@@ -757,7 +904,8 @@ def shard_entries(key: jax.Array, n_shards: int, Q: int, per: int,
 
 
 def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
-                 axis: str, per: int, scorer_state=None, restart_keys=None):
+                 axis: str, per: int, scorer_state=None, restart_keys=None,
+                 deny=None):
     """Per-shard body for ``shard_map``: the SAME beam core as single-host
     search, plus the all-gather merge. ``live`` False drops a failed or
     straggling shard's contribution (degrades recall, never the query).
@@ -766,7 +914,10 @@ def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
     ``beam_search`` runs against the local base, so merged distances are
     exact regardless of scorer. ``spec.term``/``spec.restarts`` reach the
     shard's beam unchanged (``restart_keys`` (Q, 2) per-row keys required
-    when restarts > 0 — replicate the same keys to every shard)."""
+    when restarts > 0 — replicate the same keys to every shard). ``deny``
+    (optional) is THIS shard's packed filter bitmap over its local id space
+    (§14): compile the filter against each shard's metadata slice; entries
+    must already be filter-valid (remap per shard before calling)."""
     if spec.base_placement != "device":
         raise ValueError(
             "shard_search reranks in-shard against a device-resident base; "
@@ -781,7 +932,7 @@ def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
         rerank=spec.rerank,
         term=spec.term, stable_steps=spec.stable_steps,
         restarts=spec.restarts, restart_gate=spec.restart_gate,
-        restart_keys=restart_keys,
+        restart_keys=restart_keys, deny=deny,
     )
     sid = jax.lax.axis_index(axis)
     gids = globalize_ids(res.ids, sid, per)
@@ -800,7 +951,7 @@ def shard_search(queries, base, neighbors, entries, live, *, spec: SearchSpec,
 
 def shard_traverse(queries, neighbors, entries, live, *, spec: SearchSpec,
                    axis: str, per: int, r: int, scorer_state,
-                   restart_keys=None):
+                   restart_keys=None, deny=None):
     """Per-shard body for the HOST-TIER distributed path (DESIGN.md §9):
     traverse on the shard's device-resident code table only (no float base
     operand at all), globalize the top-``r`` ADC survivors, and all-gather
@@ -818,7 +969,7 @@ def shard_traverse(queries, neighbors, entries, live, *, spec: SearchSpec,
         scorer=spec.scorer, scorer_state=scorer_state,
         k=spec.k, term=spec.term, stable_steps=spec.stable_steps,
         restarts=spec.restarts, restart_gate=spec.restart_gate,
-        restart_keys=restart_keys,
+        restart_keys=restart_keys, deny=deny,
     )
     sid = jax.lax.axis_index(axis)
     gids = globalize_ids(trav.cand_ids[:, :r], sid, per)
@@ -833,10 +984,11 @@ def shard_traverse(queries, neighbors, entries, live, *, spec: SearchSpec,
 
 def emulated_shard_search(queries, base_shards, nbr_shards, entries, live,
                           spec: SearchSpec, scorer_states=None,
-                          restart_keys=None):
+                          restart_keys=None, denies=None):
     """Host-side loop with identical semantics to ``shard_search`` for runs
     where logical shards exceed physical devices (CI, laptops).
-    ``scorer_states`` (optional) is a per-shard list of scorer operands.
+    ``scorer_states`` (optional) is a per-shard list of scorer operands;
+    ``denies`` (optional) a per-shard list of packed filter bitmaps (§14).
 
     Returns (dists (Q, k), global ids (Q, k))."""
     if spec.base_placement != "device":
@@ -858,6 +1010,7 @@ def emulated_shard_search(queries, base_shards, nbr_shards, entries, live,
             term=spec.term, stable_steps=spec.stable_steps,
             restarts=spec.restarts, restart_gate=spec.restart_gate,
             restart_keys=restart_keys,
+            deny=None if denies is None else denies[s],
         )
         all_d.append(jnp.where(live[s], res.dists, jnp.inf))
         all_i.append(jnp.where(live[s], globalize_ids(res.ids, s, per), INVALID))

@@ -1,0 +1,208 @@
+"""Per-query predicate filtering and multi-tenant namespaces (DESIGN.md §14).
+
+Every production ANN deployment filters: by tenant, by category, by
+recency. The kernels already fuse a visited-bitmap + validity mask into the
+gather epilogue (``gather_distance_masked`` / ``gather_adc_masked``), and the
+tombstone mechanism (§13) proved an arbitrary exclusion set rides that
+epilogue as an OPERAND at zero extra DMA cost. This module widens that from
+one global bitmap to a per-predicate **deny bitmap**:
+
+* a :class:`FilterSpec` (hashable, lives on ``SearchSpec.filter``) names the
+  predicate: tenant id, categorical tags, a time range, an explicit denylist;
+* :func:`compile_filter` evaluates it ONCE against the index's metadata
+  columns into a packed ``(ceil(n/32),)`` uint32 deny bitmap (the beam
+  core's visited-set layout, :func:`pack_bitmap`);
+* the bitmap ORs into every query's initial visited set inside
+  ``beam_search(deny=...)`` — denied ids then score (+inf, INVALID) at
+  seeding, at every hop, and at every restart draw, are never expanded, and
+  never appear in an answer. That is the tenant-isolation guarantee, and it
+  holds under every scorer and base placement because the mask epilogue is
+  the one place ids become distances.
+
+**Filters are operands, not recompiles**: the deny bitmap is a jit operand
+exactly like the tombstone bitmap, so serving a new filter value never
+traces a new executable. Composition is bitwise OR — tombstones ∨ deny at
+``_init_state``, and the §11 ``q_valid`` pad mask stacks on top unchanged.
+
+The one thing masking cannot give: connectivity. A very selective filter
+leaves an allowed set whose induced subgraph is too sparse to traverse, so
+the engine falls back to an exact scan over the (tiny) allowed set —
+:func:`repro.core.engine.filtered_brute_cutoff` is the policy,
+``Searcher._filtered_brute`` the mechanism. See DESIGN.md §14.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .topk import INVALID
+
+# metadata column names the predicate fields read (by convention; columns
+# are plain (n,) numpy arrays attached to Searcher / MutableIndex / artifact)
+COL_TENANT = "tenant"
+COL_TAG = "tag"
+COL_TIMESTAMP = "timestamp"
+
+# fold constant for the filtered-seed redraw keys (distinct from the restart
+# key stream so a filtered search never replays restart draws as seeds)
+_SEED_FOLD = 0x46495854  # "FIXT"
+
+
+class FilterSpec(NamedTuple):
+    """One search-time predicate, all leaves hashable (so ``SearchSpec``
+    stays a hashable pytree and filter specs key compile caches directly).
+
+    Fields AND together; an all-default spec allows everything.
+
+    * ``tenant`` — keep ids whose ``metadata["tenant"]`` equals this
+      (multi-tenant namespaces: one index, many tenants, no cross-serving);
+    * ``tags_any`` — keep ids whose ``metadata["tag"]`` is any of these;
+    * ``time_range`` — ``(lo, hi)`` inclusive bounds on
+      ``metadata["timestamp"]``;
+    * ``deny_ids`` — explicit per-request denylist (no metadata needed).
+    """
+
+    tenant: int | None = None
+    tags_any: tuple = ()
+    time_range: tuple | None = None
+    deny_ids: tuple = ()
+
+
+class CompiledFilter(NamedTuple):
+    """A FilterSpec evaluated against one index's metadata: everything the
+    hot path needs, all fixed-shape device operands (compiled once, cached
+    on the Searcher, reused across every batch and bucket)."""
+
+    deny: jax.Array         # (ceil(n/32),) uint32 — denied ids, bit i&31 of
+                            # word i>>5 (the visited-bitmap layout)
+    n_allowed: int          # host int: how many ids survive the predicate
+    cum: jax.Array          # (n,) int32 inclusive prefix-count of allowed
+                            # ids — maps a uniform draw in [0, n_allowed) to
+                            # an allowed id via searchsorted (seed redraw)
+    allowed_ids: jax.Array  # (P,) int32 allowed ids ascending, INVALID-padded
+                            # to the next power of two (the exact-scan
+                            # fallback's fixed-shape operand)
+
+
+def pack_bitmap(bits) -> np.ndarray:
+    """(n,) bool -> (ceil(n/32),) packed uint32, bit ``i & 31`` of word
+    ``i >> 5`` — the beam core's visited-bitmap layout, so any packed mask
+    (tombstones, filter denials) drops straight into ``_init_state`` as an
+    initial visited set."""
+    bits = np.asarray(bits, bool)
+    w = (bits.shape[0] + 31) // 32
+    pad = np.zeros(w * 32, bool)
+    pad[: bits.shape[0]] = bits
+    words = pad.reshape(w, 32).astype(np.uint32)
+    return (words << np.arange(32, dtype=np.uint32)[None, :]).sum(
+        axis=1, dtype=np.uint32
+    )
+
+
+def unpack_bitmap(words, n: int) -> np.ndarray:
+    """(W,) packed uint32 -> (n,) bool (inverse of :func:`pack_bitmap`)."""
+    words = np.asarray(words, np.uint32)
+    bits = (words[:, None] >> np.arange(32, dtype=np.uint32)[None, :]) & 1
+    return bits.reshape(-1)[:n].astype(bool)
+
+
+def bitmap_get(bitmap: jax.Array, ids: jax.Array) -> jax.Array:
+    """Read bits for ``ids`` from a (W,) packed bitmap; ids < 0 read False."""
+    safe = jnp.maximum(ids, 0)
+    word = bitmap[jnp.minimum(safe >> 5, bitmap.shape[0] - 1)]
+    return ((word >> (safe & 31).astype(jnp.uint32)) & 1 > 0) & (ids >= 0)
+
+
+def _column(metadata, name: str, n: int) -> np.ndarray:
+    if not metadata or name not in metadata:
+        have = sorted(metadata) if metadata else []
+        raise ValueError(
+            f"filter needs metadata column {name!r} but this index carries "
+            f"{have} — attach it at build time (Searcher(metadata=...), "
+            f"MutableIndex(metadata=...)) or persist it in the artifact"
+        )
+    col = np.asarray(metadata[name])
+    if col.ndim != 1 or col.shape[0] < n:
+        raise ValueError(
+            f"metadata column {name!r} must be (n>={n},), got {col.shape}"
+        )
+    return col[:n]
+
+
+def compile_filter(spec: FilterSpec, metadata, n: int,
+                   dead=None) -> CompiledFilter:
+    """Evaluate ``spec`` against ``metadata`` (dict of (n,) columns) into a
+    :class:`CompiledFilter`. ``dead`` (optional packed tombstone bitmap) is
+    ANDed out of the allowed set so ``n_allowed``, the seed-redraw map and
+    the exact-scan fallback never name a deleted/unallocated id — the deny
+    bitmap itself composes with tombstones again by OR at ``_init_state``
+    (idempotent). Host-side numpy, run once per (filter, index) and cached."""
+    allow = np.ones(n, bool)
+    if spec.tenant is not None:
+        allow &= _column(metadata, COL_TENANT, n) == spec.tenant
+    if spec.tags_any:
+        allow &= np.isin(_column(metadata, COL_TAG, n),
+                         np.asarray(spec.tags_any))
+    if spec.time_range is not None:
+        lo, hi = spec.time_range
+        ts = _column(metadata, COL_TIMESTAMP, n)
+        allow &= (ts >= lo) & (ts <= hi)
+    if spec.deny_ids:
+        ids = np.asarray(spec.deny_ids, np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= n):
+            raise ValueError(
+                f"deny_ids must lie in [0, {n}), got range "
+                f"[{ids.min()}, {ids.max()}]"
+            )
+        allow[ids] = False
+    if dead is not None:
+        allow &= ~unpack_bitmap(np.asarray(dead), n)
+
+    n_allowed = int(allow.sum())
+    P = max(1, 1 << max(0, n_allowed - 1).bit_length())
+    padded = np.full(P, INVALID, np.int32)
+    padded[:n_allowed] = np.nonzero(allow)[0]
+    return CompiledFilter(
+        deny=jnp.asarray(pack_bitmap(~allow)),
+        n_allowed=n_allowed,
+        cum=jnp.asarray(np.cumsum(allow, dtype=np.int32)),
+        allowed_ids=jnp.asarray(padded),
+    )
+
+
+def remap_denied_seeds(entries: jax.Array, cf: CompiledFilter,
+                       key: jax.Array) -> jax.Array:
+    """Replace denied seed ids with uniform draws from the allowed set.
+
+    Entry strategies are filter-oblivious (their prepared state — hub lists,
+    projections — is built for the whole index); under a selective filter
+    most of their seeds would land on denied ids and be masked to INVALID at
+    scoring, starving the beam. This redraw keeps seeding strategy-agnostic:
+    detect denied seeds via the deny bitmap, redraw each from the allowed
+    set (uniform index -> id via ``searchsorted`` on the prefix-count map),
+    and dedup the row (the visited scatter needs dup-free rows).
+
+    Draw keys fold the ROW INDEX (exactly like restart keys), so a request
+    padded into a serving bucket redraws bit-identically to a direct search
+    on its own rows — the §11 parity contract extends to filtered serving.
+    Fixed-shape device operands only: redrawing never recompiles."""
+    if cf.n_allowed == 0:
+        # nothing to draw from: leave the denied seeds in place — the scorer
+        # masks them all to (+inf, INVALID) and the row freezes with zero
+        # comparisons (the empty-result contract)
+        return entries
+    from .beam_search import dedup_rows
+
+    Q, E = entries.shape
+    denied = bitmap_get(cf.deny, entries)
+    base_key = jax.random.fold_in(key, _SEED_FOLD)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base_key, i))(jnp.arange(Q))
+    r = jax.vmap(
+        lambda kk: jax.random.randint(kk, (E,), 0, cf.n_allowed,
+                                      dtype=jnp.int32)
+    )(keys)
+    draws = jnp.searchsorted(cf.cum, r + 1, side="left").astype(jnp.int32)
+    return dedup_rows(jnp.where(denied, draws, entries))

@@ -55,7 +55,10 @@ FORMAT_MAGIC = "repro/index-artifact"
 # out/in-degree distributions in the manifest. Pre-v2 artifacts load fine —
 # hubs are recomputed from the adjacency (bit-identical: hub derivation is a
 # deterministic function of the neighbors array).
-ARTIFACT_VERSION = 2
+# v3: + optional metadata columns for filtered / multi-tenant search
+# (DESIGN.md §14): ``meta_<name>`` arrays with the name list in
+# ``manifest["metadata"]``. Pre-v3 artifacts load with metadata=None.
+ARTIFACT_VERSION = 3
 
 
 @dataclasses.dataclass
@@ -75,6 +78,9 @@ class IndexArtifact:
     hubs: jax.Array | None = None
     # realized {"out": ..., "in": ...} degree distributions (manifest copy)
     degree_stats: dict = dataclasses.field(default_factory=dict)
+    # optional metadata columns (name -> (n,) array) read by FilterSpec
+    # predicates (§14): tenant ids, tags, timestamps
+    metadata: dict | None = None
 
     @property
     def n(self) -> int:
@@ -98,11 +104,13 @@ class IndexArtifact:
             hierarchy=searcher.hierarchy, pq=searcher.pq,
             provenance=dict(provenance or {}),
             hubs=searcher.hubs,
+            metadata=getattr(searcher, "metadata", None),
         )
 
     @classmethod
     def from_build(cls, base, result, metric: str,
-                   key: jax.Array | None = None) -> "IndexArtifact":
+                   key: jax.Array | None = None,
+                   metadata: dict | None = None) -> "IndexArtifact":
         """Package a ``GraphBuilder`` output; provenance = the BuildReport
         summary (spec, walls, degree distribution, dropped edges, ...)."""
         return cls(
@@ -110,12 +118,14 @@ class IndexArtifact:
             key=key, hierarchy=result.hierarchy, pq=result.pq,
             provenance={"build_report": result.report.summary()},
             hubs=getattr(result, "hubs", None),
+            metadata=metadata,
         )
 
     def to_searcher(self):
         """Rehydrate the engine: same adjacency, hierarchy, PQ table, metric
         and key — searches replay bit-identically (no PQ retrain, no
-        hierarchy rebuild)."""
+        hierarchy rebuild). Metadata columns ride along, so persisted
+        filters keep working."""
         from .engine import Searcher
 
         return Searcher(
@@ -124,6 +134,7 @@ class IndexArtifact:
             key=None if self.key is None else jnp.asarray(self.key),
             pq=self.pq,
             hubs=None if self.hubs is None else jnp.asarray(self.hubs),
+            metadata=self.metadata,
         )
 
 
@@ -170,8 +181,20 @@ def save_index(path: str, artifact: IndexArtifact) -> str:
         "num_layers": 0,
         "pq": None,
         "key_impl": None,
+        "metadata": [],
         "provenance": artifact.provenance,
     }
+    if artifact.metadata:
+        n = int(arrays["base"].shape[0])
+        for name in sorted(artifact.metadata):
+            col = np.asarray(artifact.metadata[name])
+            if col.ndim != 1 or col.shape[0] != n:
+                raise ValueError(
+                    f"metadata column {name!r} must be ({n},), got "
+                    f"{col.shape}"
+                )
+            arrays[f"meta_{name}"] = col
+            manifest["metadata"].append(name)
     if artifact.key is not None:
         payload, impl = _key_payload(artifact.key)
         arrays["key"] = payload
@@ -341,11 +364,24 @@ def _decode_artifact(blob, path: str) -> IndexArtifact:
             "in": in_degree_distribution(neighbors),
         }
 
+    # v3+: optional metadata columns; older artifacts simply carry none
+    metadata = None
+    if m.get("metadata"):
+        metadata = {name: np.asarray(blob[f"meta_{name}"])
+                    for name in m["metadata"]}
+        for name, col in metadata.items():
+            if col.shape != (m["n"],):
+                raise ValueError(
+                    f"{path}: metadata column {name!r} shape {col.shape} "
+                    f"disagrees with n={m['n']} — truncated or corrupted "
+                    "artifact"
+                )
+
     return IndexArtifact(
         base=jnp.asarray(base), neighbors=jnp.asarray(neighbors),
         metric=m["metric"], key=key, hierarchy=hierarchy, pq=pq,
         provenance=m.get("provenance", {}), version=m["version"],
-        hubs=hubs, degree_stats=degree_stats,
+        hubs=hubs, degree_stats=degree_stats, metadata=metadata,
     )
 
 

@@ -64,15 +64,17 @@ def pack_tombstones(dead) -> np.ndarray:
     """(C,) bool dead mask -> (ceil(C/32),) packed uint32, bit ``i & 31`` of
     word ``i >> 5`` — the beam core's visited-bitmap layout, so the bitmap
     drops straight into ``_init_state`` as every query's initial visited
-    set."""
-    dead = np.asarray(dead, bool)
-    w = (dead.shape[0] + 31) // 32
-    pad = np.zeros(w * 32, bool)
-    pad[: dead.shape[0]] = dead
-    bits = pad.reshape(w, 32).astype(np.uint32)
-    return (bits << np.arange(32, dtype=np.uint32)[None, :]).sum(
-        axis=1, dtype=np.uint32
-    )
+    set. Same packing as filter deny bitmaps (§14): the two compose by OR."""
+    from .filters import pack_bitmap
+
+    return pack_bitmap(dead)
+
+
+def _meta_fill(dtype) -> object:
+    """Fill value for a metadata column's unset rows: NaN for float columns,
+    -1 for integer ones (a sentinel no real tenant/tag uses; for unsigned
+    dtypes it wraps to the max value — still never a real id)."""
+    return np.nan if np.issubdtype(dtype, np.floating) else -1
 
 
 @functools.partial(jax.jit, static_argnames=("metric",))
@@ -129,7 +131,7 @@ class MutableIndex:
     def __init__(self, base, neighbors, *, dists=None, metric: str = "l2",
                  key=None, capacity: int | None = None, insert_ef: int = 64,
                  diversify: str = "none", max_keep: int = 0,
-                 n_entries: int = 8):
+                 n_entries: int = 8, metadata: dict | None = None):
         base = np.asarray(base, np.float32)
         nbrs = np.asarray(neighbors, np.int32)
         if base.ndim != 2 or nbrs.ndim != 2 or base.shape[0] != nbrs.shape[0]:
@@ -153,6 +155,22 @@ class MutableIndex:
         self.capacity = max(int(capacity) if capacity is not None else n, n, 1)
 
         self._alloc_host(self.capacity)
+        # capacity-padded metadata columns (DESIGN.md §14): filters read
+        # them through searcher(); unset rows carry the dtype's fill value
+        # AND are tombstoned, so they never answer
+        self._meta: dict[str, np.ndarray] = {}
+        if metadata:
+            for name in sorted(metadata):
+                col = np.asarray(metadata[name])
+                if col.shape != (n,):
+                    raise ValueError(
+                        f"metadata column {name!r} must be ({n},), got "
+                        f"{col.shape}"
+                    )
+                full = np.full(self.capacity, _meta_fill(col.dtype),
+                               col.dtype)
+                full[:n] = col
+                self._meta[name] = full
         self._base[:n] = base
         self._nbrs[:n] = nbrs
         self._alive[:n] = True
@@ -204,6 +222,8 @@ class MutableIndex:
         kw.setdefault("metric", art.metric)
         if art.key is not None:
             kw.setdefault("key", jnp.asarray(art.key))
+        if getattr(art, "metadata", None) is not None:
+            kw.setdefault("metadata", art.metadata)
         return cls(art.base, art.neighbors, **kw)
 
     # -- storage --------------------------------------------------------------
@@ -240,6 +260,10 @@ class MutableIndex:
         C = self.capacity
         self._base[:C], self._nbrs[:C] = base, nbrs
         self._dists[:C], self._alive[:C] = dists, alive
+        for name, col in self._meta.items():
+            full = np.full(C2, _meta_fill(col.dtype), col.dtype)
+            full[:C] = col
+            self._meta[name] = full
         self.capacity = C2
         self._tomb = pack_tombstones(~self._alive)
         self._push_all_device()
@@ -291,6 +315,13 @@ class MutableIndex:
         return self._nbrs[: self.n_alloc]
 
     @property
+    def metadata(self) -> dict | None:
+        """Metadata columns over allocated rows (None if undeclared)."""
+        if not self._meta:
+            return None
+        return {k: v[: self.n_alloc] for k, v in self._meta.items()}
+
+    @property
     def staleness(self) -> float:
         """Fraction of the live set not yet merged through a compaction:
         (pending inserts + pending deletes) / live points."""
@@ -321,13 +352,23 @@ class MutableIndex:
 
     # -- mutation -------------------------------------------------------------
 
-    def insert(self, x, key=None) -> int:
+    def insert(self, x, key=None, metadata: dict | None = None) -> int:
         """Insert one point; returns its id. Exact-scan placement while the
         index is tiny (or always, with ``insert_ef=0``); beam-search-then-
-        link otherwise."""
+        link otherwise. ``metadata`` maps column name -> scalar for this
+        row (columns are declared at construction; omitted columns get the
+        dtype's fill value and match no equality predicate)."""
         x = np.asarray(x, np.float32)
         if x.shape != (self.d,):
             raise ValueError(f"expected a ({self.d},) point, got {x.shape}")
+        if metadata:
+            unknown = sorted(set(metadata) - set(self._meta))
+            if unknown:
+                raise ValueError(
+                    f"unknown metadata column(s) {unknown}; this index "
+                    f"declares {sorted(self._meta)} — declare columns at "
+                    f"construction (MutableIndex(metadata=...))"
+                )
         t0 = time.perf_counter()
         if self.n_alloc == self.capacity:
             self._grow()
@@ -340,6 +381,9 @@ class MutableIndex:
         self._base[m] = x
         self._nbrs[m] = row_ids
         self._dists[m] = row_d
+        for name, col in self._meta.items():
+            val = (metadata or {}).get(name, _meta_fill(col.dtype))
+            col[m] = np.asarray(val).astype(col.dtype)
         self._alive[m] = True
         self._n_live += 1
         self._set_tomb(m, False)
@@ -357,9 +401,15 @@ class MutableIndex:
         self.insert_wall_s += time.perf_counter() - t0
         return m
 
-    def insert_batch(self, points) -> np.ndarray:
+    def insert_batch(self, points, metadata: dict | None = None) -> np.ndarray:
+        """``metadata`` (optional) maps column name -> (B,) array, sliced
+        per row."""
         pts = np.asarray(points, np.float32)
-        return np.array([self.insert(p) for p in pts], np.int32)
+        return np.array([
+            self.insert(p, metadata=None if metadata is None else
+                        {k: v[i] for k, v in metadata.items()})
+            for i, p in enumerate(pts)
+        ], np.int32)
 
     def delete(self, ids) -> None:
         """Tombstone live vertices. O(1) per id: one bitmap bit — the beam
@@ -471,7 +521,8 @@ class MutableIndex:
                                 alive=self._alive)
             self._searcher = Searcher(self._base_dev, self._nbrs_dev,
                                       metric=self.metric, key=self.key,
-                                      tombstones=self._tomb_dev, hubs=hubs)
+                                      tombstones=self._tomb_dev, hubs=hubs,
+                                      metadata=dict(self._meta) or None)
         return self._searcher
 
     def search(self, queries, spec, key=None, **kw):
@@ -506,6 +557,10 @@ class MutableIndex:
         n = surv.size
         C = self.capacity
         self._alloc_host(C)
+        for name, col in self._meta.items():
+            full = np.full(C, _meta_fill(col.dtype), col.dtype)
+            full[:n] = col[surv]
+            self._meta[name] = full
         self._base[:n] = sbase
         nbrs = np.asarray(result.graph.neighbors, np.int32)
         self.R = nbrs.shape[1]
@@ -542,7 +597,7 @@ class MutableIndex:
         result = self.compact(spec, key=key)
         art = index_io.IndexArtifact.from_build(
             jnp.asarray(self._base[: self.n_alloc]), result,
-            metric=self.metric, key=self.key,
+            metric=self.metric, key=self.key, metadata=self.metadata,
         )
         art.provenance["mutable_version"] = self.version
         return index_io.save_index(path, art), result

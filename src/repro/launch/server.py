@@ -41,6 +41,16 @@ module is the serving layer between the two:
   timestamps; ``stats()`` rolls them into p50/p90/p99 latency, queue wait,
   bucket occupancy and shed counts — the columns ``benchmarks/loadgen.py``
   sweeps against offered QPS into ``BENCH_engine.json``.
+* **Hot swap.** ``swap()`` (DESIGN.md §13) atomically flips serving to a
+  new index version: the incoming index is prepared and fully warmed OFF
+  the serving path, then the flip is two attribute assignments — zero
+  dropped requests, zero post-flip compiles.
+* **Per-request filters.** ``submit(..., filter=FilterSpec(...))``
+  (DESIGN.md §14) restricts that request to a metadata predicate / tenant
+  namespace. The filter's deny bitmap is a beam-core OPERAND (compiled
+  once per filter value, cached on the Searcher), so mixed-filter traffic
+  shares the bucket executables, and a served filtered request stays
+  bit-identical to a direct filtered search on its own rows.
 """
 from __future__ import annotations
 
@@ -56,6 +66,7 @@ import numpy as np
 
 from repro.core.beam_search import SearchResult
 from repro.core.engine import Searcher, SearchSpec
+from repro.core.filters import FilterSpec
 from repro.core.topk import INVALID
 
 
@@ -81,6 +92,9 @@ class Request:
     t_complete: float | None = None
     bucket: int | None = None
     shed: bool = False
+    # per-request predicate (§14): rides into the spec as an operand swap,
+    # so mixed-filter batches reuse the bucket's compiled cores
+    filter: FilterSpec | None = None
     ids: np.ndarray | None = None       # (q, k) answers, real rows only
     dists: np.ndarray | None = None     # (q, k)
     n_comps: np.ndarray | None = None   # (q,)
@@ -187,7 +201,15 @@ class AnnServer:
         ``searcher``/``spec`` (default: the serving pair) let :meth:`swap`
         warm an INCOMING index before the flip — its (n, W) shapes key new
         executables whenever n changed, and tracing them on the serving path
-        would spike p99 mid-flip."""
+        would spike p99 mid-flip.
+
+        When the index carries metadata columns (or the spec itself
+        filters), each bucket is ALSO warmed with a deny bitmap attached:
+        the deny-operand beam executables differ from the unfiltered ones
+        (an extra operand), but are shared across every filter VALUE — one
+        structural warmup per bucket covers all tenants/predicates (§14).
+        The warm filter is a 1-id denylist, so it needs no metadata and
+        always takes the graph path on any real-sized index."""
         searcher = self.searcher if searcher is None else searcher
         spec = self.spec if spec is None else spec
         d = searcher.base.shape[1]
@@ -197,26 +219,40 @@ class AnnServer:
             jax.random.normal(jax.random.fold_in(key, b_max), (b_max, d)),
             np.float32,
         )
+        warm_filter = (searcher.metadata is not None
+                       or spec.filter is not None)
         for qn in range(1, b_max + 1):
             res = self._search_padded(rows[:qn],
                                       jax.random.fold_in(key, 2 * qn),
                                       self.pick_bucket(qn),
                                       searcher=searcher, spec=spec)
             jax.block_until_ready(res.ids)
+            if warm_filter:
+                res = self._search_padded(rows[:qn],
+                                          jax.random.fold_in(key, 2 * qn),
+                                          self.pick_bucket(qn),
+                                          searcher=searcher, spec=spec,
+                                          filter=FilterSpec(deny_ids=(0,)))
+                jax.block_until_ready(res.ids)
 
     # -- the padded core call -------------------------------------------------
 
     def _search_padded(self, rows: np.ndarray, key: jax.Array,
                        bucket: int, *, searcher: Searcher | None = None,
-                       spec: SearchSpec | None = None) -> SearchResult:
+                       spec: SearchSpec | None = None,
+                       filter: FilterSpec | None = None) -> SearchResult:
         """Transfer + seed + pad + dispatch, all asynchronous. Seeding uses
         the request's REAL row count (PRNG parity with a direct search);
         padding to the bucket happens after, with entries INVALID, comps 0
         and ``q_valid`` masking the pad rows out of the beam. ``searcher``/
         ``spec`` target an index other than the serving one (warming an
-        incoming index pre-flip)."""
+        incoming index pre-flip). ``filter`` overrides ``spec.filter`` for
+        this request (§14): denied-seed redraws key off the ROW INDEX, so
+        the padded rows redraw exactly as a direct filtered search would."""
         searcher = self.searcher if searcher is None else searcher
         spec = self.spec if spec is None else spec
+        if filter is not None:
+            spec = spec._replace(filter=filter)
         qn, d = rows.shape
         dev = jax.device_put(rows)  # async: overlaps the in-flight batch
         ent, ecomps = searcher.seed(dev, spec, key)
@@ -272,7 +308,8 @@ class AnnServer:
     # -- request lifecycle ----------------------------------------------------
 
     def submit(self, rows, key: jax.Array | None = None,
-               now: float | None = None, advance: bool = True) -> Request:
+               now: float | None = None, advance: bool = True,
+               filter: FilterSpec | None = None) -> Request:
         """Enqueue one request (open loop). Returns the Request handle; if
         the queue is at ``max_queue_depth`` the request is SHED — marked and
         recorded, never dispatched — so overload degrades by rejecting new
@@ -281,7 +318,8 @@ class AnnServer:
         ``advance=False`` enqueues without driving :meth:`poll` — how an
         open-loop client behind schedule behaves: the listener half accepts
         (or sheds) without stealing serving-thread time from the batches in
-        flight."""
+        flight. ``filter`` (optional) restricts THIS request to a metadata
+        predicate / tenant namespace (§14)."""
         now = self.clock() if now is None else now
         rows = np.asarray(rows, np.float32)
         if rows.ndim != 2:
@@ -290,7 +328,8 @@ class AnnServer:
         self._rid += 1
         if key is None:
             key = jax.random.fold_in(self.searcher.key, 1_000_003 + rid)
-        req = Request(rid=rid, queries=rows, key=key, t_enqueue=now)
+        req = Request(rid=rid, queries=rows, key=key, t_enqueue=now,
+                      filter=filter)
         req.bucket = self.pick_bucket(rows.shape[0])  # reject-too-big first
         if len(self.queue) >= self.config.max_queue_depth:
             req.shed = True
@@ -301,7 +340,8 @@ class AnnServer:
             self.poll(now)
         return req
 
-    def submit_wait(self, rows, key: jax.Array | None = None) -> Request:
+    def submit_wait(self, rows, key: jax.Array | None = None,
+                    filter: FilterSpec | None = None) -> Request:
         """Closed-loop submit: when the queue is full, block on the oldest
         in-flight batch instead of shedding (backpressure for clients that
         wait, e.g. the CI serving smoke)."""
@@ -309,7 +349,7 @@ class AnnServer:
             if self.live:
                 self._retire(self.live.popleft())
             self.poll()
-        return self.submit(rows, key)
+        return self.submit(rows, key, filter=filter)
 
     def poll(self, now: float | None = None) -> None:
         """Advance the pipeline without blocking: retire finished batches
@@ -335,7 +375,8 @@ class AnnServer:
 
     def _admit(self, req: Request) -> None:
         req.t_admit = self.clock()
-        res = self._search_padded(req.queries, req.key, req.bucket)
+        res = self._search_padded(req.queries, req.key, req.bucket,
+                                  filter=req.filter)
         req.t_dispatch = self.clock()
         qn = req.queries.shape[0]
         self.bucket_counts[req.bucket] += 1
