@@ -40,11 +40,25 @@ PROFILES = {
                     min_serving_rows=3),
 }
 
-# host-tier invariants (checked on every FRESH row, baseline or not: the
-# large-n nightly rows have no committed twin — their gate is internal)
-HOST_TIER_MIN_RECALL_FRAC = 0.95   # host recall vs device-exact recall
-HOST_TIER_MIN_PARITY = 0.995       # host top-1 ids vs device-pq top-1 ids
+# three-tier invariants (checked on every FRESH row, baseline or not: the
+# large-n nightly rows have no committed twin — their gate is internal).
+# Parity covers BOTH off-device tiers: the disk leg reranks the same
+# survivors from mmap'd shards, so its ids must match device/host exactly.
+# device/host bytes_touched are computed identically (same f32 rows billed,
+# different residency) so they must be EQUAL; disk bills unique 4 KiB pages
+# so it only needs to be present and positive.
+HOST_TIER_MIN_RECALL_FRAC = 0.95   # host/disk recall vs device-exact recall
+HOST_TIER_MIN_PARITY = 0.995       # host/disk top-1 ids vs device-pq top-1
 HOST_TIER_MIN_QPS_RATIO = 0.30     # bounded qps loss for the host gather
+
+# quantization-ladder invariants (baseline-independent; DESIGN.md §8, §15).
+# The ladder must be monotone in bytes (exact > sq8 > pq scored bytes) and
+# sandwiched in recall (pq <= sq8 <= exact within the slack) at EVERY swept
+# d; on the high-d rows (d >= 64, where the pq gap opens on the anisotropic
+# world) the OPQ twin must close at least half the exact-pq recall gap.
+PQ_LADDER_RECALL_SLACK = 0.01
+OPQ_MIN_GAP_CLOSED = 0.5
+OPQ_MIN_MEANINGFUL_GAP = 0.01  # below this the gap is noise; skip the gate
 
 # serving invariants (baseline-independent; DESIGN.md §11). Parity is 1.0
 # exactly — served answers are BIT-identical to direct search, not close.
@@ -120,9 +134,11 @@ def _pair(b: dict, f: dict, key: str, tag: str, violations: list[str]):
 
 def check_host_tier(rows: list[dict], *, min_rows: int,
                     out=print) -> list[str]:
-    """Baseline-independent invariants of the tiered-base sweep: recall
-    parity between placements, bounded qps loss, and host recall within
-    HOST_TIER_MIN_RECALL_FRAC of device-resident exact search."""
+    """Baseline-independent invariants of the three-tier base sweep: recall
+    parity between ALL placements (device/host/disk), bounded qps loss for
+    the host gather, host/disk recall within HOST_TIER_MIN_RECALL_FRAC of
+    device-resident exact search, and the §15 bytes_touched accounting —
+    device == host exactly, disk present and positive."""
     violations = []
     if len(rows) < min_rows:
         violations.append(
@@ -131,8 +147,10 @@ def check_host_tier(rows: list[dict], *, min_rows: int,
         )
     for r in rows:
         tag = f"host_tier[n={r.get('n', '?')}]"
-        need = ("exact_recall_at_1", "host_recall_at_1",
-                "host_device_parity", "qps_ratio")
+        need = ("exact_recall_at_1", "host_recall_at_1", "disk_recall_at_1",
+                "host_device_parity", "disk_device_parity", "qps_ratio",
+                "device_bytes_per_query", "host_bytes_per_query",
+                "disk_bytes_per_query")
         vals = {}
         for key in need:
             v = _metric(r, key, "fresh", None, tag, violations)
@@ -141,27 +159,116 @@ def check_host_tier(rows: list[dict], *, min_rows: int,
             vals[key] = v
         if len(vals) < len(need):
             continue
-        out(f"[perf-guard] {tag}: host recall {vals['host_recall_at_1']} "
+        out(f"[perf-guard] {tag}: recall host={vals['host_recall_at_1']} "
+            f"disk={vals['disk_recall_at_1']} "
             f"(exact {vals['exact_recall_at_1']}), parity "
-            f"{vals['host_device_parity']}, qps ratio {vals['qps_ratio']}")
+            f"host={vals['host_device_parity']} "
+            f"disk={vals['disk_device_parity']}, qps ratio "
+            f"{vals['qps_ratio']}, bytes/q "
+            f"{vals['device_bytes_per_query']}/"
+            f"{vals['host_bytes_per_query']}/{vals['disk_bytes_per_query']}")
         floor = HOST_TIER_MIN_RECALL_FRAC * vals["exact_recall_at_1"]
-        if vals["host_recall_at_1"] < floor:
-            violations.append(
-                f"{tag}: host_recall_at_1 {vals['host_recall_at_1']} < "
-                f"{HOST_TIER_MIN_RECALL_FRAC} * exact "
-                f"({vals['exact_recall_at_1']})"
-            )
-        if vals["host_device_parity"] < HOST_TIER_MIN_PARITY:
-            violations.append(
-                f"{tag}: host_device_parity {vals['host_device_parity']} < "
-                f"{HOST_TIER_MIN_PARITY} (placements must return the same "
-                f"survivors)"
-            )
+        for tier in ("host", "disk"):
+            if vals[f"{tier}_recall_at_1"] < floor:
+                violations.append(
+                    f"{tag}: {tier}_recall_at_1 "
+                    f"{vals[f'{tier}_recall_at_1']} < "
+                    f"{HOST_TIER_MIN_RECALL_FRAC} * exact "
+                    f"({vals['exact_recall_at_1']})"
+                )
+            if vals[f"{tier}_device_parity"] < HOST_TIER_MIN_PARITY:
+                violations.append(
+                    f"{tag}: {tier}_device_parity "
+                    f"{vals[f'{tier}_device_parity']} < "
+                    f"{HOST_TIER_MIN_PARITY} (placements must return the "
+                    f"same survivors)"
+                )
         if vals["qps_ratio"] < HOST_TIER_MIN_QPS_RATIO:
             violations.append(
                 f"{tag}: qps_ratio {vals['qps_ratio']} < "
                 f"{HOST_TIER_MIN_QPS_RATIO} (host gather tail too expensive)"
             )
+        if vals["device_bytes_per_query"] != vals["host_bytes_per_query"]:
+            violations.append(
+                f"{tag}: device_bytes_per_query "
+                f"{vals['device_bytes_per_query']} != host_bytes_per_query "
+                f"{vals['host_bytes_per_query']} (same f32 rows billed on "
+                f"both tiers — the accounting diverged)"
+            )
+        if vals["disk_bytes_per_query"] <= 0:
+            violations.append(
+                f"{tag}: disk_bytes_per_query "
+                f"{vals['disk_bytes_per_query']} <= 0 (the disk tier must "
+                f"bill the 4 KiB pages its rerank actually read)"
+            )
+    return violations
+
+
+def check_pq_ladder(rows: list[dict], *, out=print) -> list[str]:
+    """Baseline-independent invariants of the quantization ladder (§15):
+    scored bytes strictly monotone exact > sq8 > pq on every row, sq8
+    recall inside the [min, max] envelope of pq and exact (within the
+    slack — either neighbor can lead: exact rerank over a lossy-scored
+    pool sometimes beats exact traversal), and the OPQ
+    twin closing >= OPQ_MIN_GAP_CLOSED of the exact-pq recall gap on the
+    high-d rows where that gap is meaningful."""
+    violations = []
+    for r in rows:
+        tag = f"pq_sweep[d={r.get('d', '?')},M={r.get('pq_m', '?')}]"
+        need = ("exact_recall_at_1", "sq8_recall_at_1", "pq_recall_at_1",
+                "opq_recall_at_1", "exact_bytes_per_query",
+                "sq8_bytes_per_query", "pq_bytes_per_query")
+        vals = {}
+        for key in need:
+            v = _metric(r, key, "fresh", None, tag, violations)
+            if v is None:
+                break
+            vals[key] = v
+        if len(vals) < len(need):
+            continue
+        out(f"[perf-guard] {tag} ladder: recall "
+            f"exact={vals['exact_recall_at_1']} "
+            f"sq8={vals['sq8_recall_at_1']} pq={vals['pq_recall_at_1']} "
+            f"opq={vals['opq_recall_at_1']}, bytes/q "
+            f"{vals['exact_bytes_per_query']}>"
+            f"{vals['sq8_bytes_per_query']}>{vals['pq_bytes_per_query']}")
+        if not (vals["exact_bytes_per_query"] > vals["sq8_bytes_per_query"]
+                > vals["pq_bytes_per_query"] > 0):
+            violations.append(
+                f"{tag}: bytes_per_query not strictly monotone exact "
+                f"({vals['exact_bytes_per_query']}) > sq8 "
+                f"({vals['sq8_bytes_per_query']}) > pq "
+                f"({vals['pq_bytes_per_query']}) > 0"
+            )
+        # the sq8 floor is min(pq, exact), not pq: a PQ traversal with exact
+        # rerank explores a DIFFERENT pool than exact traversal and can
+        # legitimately land above it (seen at low d where M=d/2 PQ is nearly
+        # lossless) — sq8 only has to keep up with the weaker of the two
+        floor = min(vals["pq_recall_at_1"], vals["exact_recall_at_1"])
+        if vals["sq8_recall_at_1"] < floor - PQ_LADDER_RECALL_SLACK:
+            violations.append(
+                f"{tag}: sq8_recall_at_1 {vals['sq8_recall_at_1']} < "
+                f"min(pq, exact) {floor} - {PQ_LADDER_RECALL_SLACK} (the "
+                f"4x rung must not rank worse than both neighbors)"
+            )
+        ceil = max(vals["pq_recall_at_1"], vals["exact_recall_at_1"])
+        if vals["sq8_recall_at_1"] > ceil + PQ_LADDER_RECALL_SLACK:
+            violations.append(
+                f"{tag}: sq8_recall_at_1 {vals['sq8_recall_at_1']} > "
+                f"max(pq, exact) {ceil} + {PQ_LADDER_RECALL_SLACK} (the "
+                f"middle rung clearing both neighbors by more than the "
+                f"slack means the recall harness broke)"
+            )
+        gap = vals["exact_recall_at_1"] - vals["pq_recall_at_1"]
+        if r.get("regime") == "high_d" and gap >= OPQ_MIN_MEANINGFUL_GAP:
+            closed = (vals["opq_recall_at_1"] - vals["pq_recall_at_1"]) / gap
+            if closed < OPQ_MIN_GAP_CLOSED:
+                violations.append(
+                    f"{tag}: opq closes only {closed:.2f} of the exact-pq "
+                    f"recall gap ({gap:.4f}); required >= "
+                    f"{OPQ_MIN_GAP_CLOSED} on high-d rows — the learned "
+                    f"rotation stopped earning its keep"
+                )
     return violations
 
 
@@ -442,9 +549,12 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
                 f"{tag}: comps_per_query {b_cmp} -> {f_cmp} "
                 f"(allowed <= {b_cmp * max_comps_ratio:.1f})"
             )
+    # quantization-ladder internal invariants on every fresh pq_sweep row
+    # (bytes monotone, sq8 recall sandwich, opq gap-closure on high-d rows)
+    violations += check_pq_ladder(fresh.get("pq_sweep", []), out=out)
     # pq sweep rows (matched by (d, pq_m)): recall and comps guarded per
-    # scorer with the strategy policy; wall stays informational (the sweep
-    # worlds are tiny, pq_beam_wall_ms above is the timed gate)
+    # ladder rung with the strategy policy; wall stays informational (the
+    # sweep worlds are tiny, pq_beam_wall_ms above is the timed gate)
     fresh_rows = {(r.get("d"), r.get("pq_m")): r
                   for r in fresh.get("pq_sweep", [])}
     for b in baseline.get("pq_sweep", []):
@@ -453,7 +563,7 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
         if f is None:
             violations.append(f"{tag} missing from fresh report")
             continue
-        for sc in ("exact", "pq"):
+        for sc in ("exact", "sq8", "pq", "opq"):
             b_rec, f_rec = _pair(b, f, f"{sc}_recall_at_1", tag, violations)
             b_cmp, f_cmp = _pair(b, f, f"{sc}_comps_per_query", tag,
                                  violations)
@@ -573,7 +683,7 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
                 f"column must be bit-stable"
             )
 
-    # host-tier sweep: internal invariants on every fresh row (large-n
+    # three-tier sweep: internal invariants on every fresh row (large-n
     # nightly rows have no baseline twin), plus recall drop vs the baseline
     # rows that do exist (matched by n)
     violations += check_host_tier(
@@ -588,7 +698,7 @@ def compare(baseline: dict, fresh: dict, *, max_wall_ratio: float,
             violations.append(f"{tag} missing from fresh report")
             continue
         for key in ("exact_recall_at_1", "device_recall_at_1",
-                    "host_recall_at_1"):
+                    "host_recall_at_1", "disk_recall_at_1"):
             b_rec, f_rec = _pair(b, f, key, tag, violations)
             if b_rec is not None and f_rec < b_rec - max_recall_drop:
                 violations.append(

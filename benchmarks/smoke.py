@@ -34,12 +34,16 @@ except ImportError:  # run as a plain script: python benchmarks/smoke.py
 # (no NN-Descent) so the sweep adds seconds, not minutes, to CI.
 STREAM_SWEEP = [(256, 3000, 16), (384, 2000, 32), (512, 1500, 24)]
 
-# Scorer sweep dimensions: (d, pq_M). Memory ratio of the scored base is
-# 4d/M — the curse-of-dimensionality axis the compressed traversal attacks.
+# Quantization-ladder sweep dimensions: (d, pq_M). Memory ratio of the
+# scored base is 4d/M for pq and 4x for sq8 — the curse-of-dimensionality
+# axis the compressed traversal attacks. The world is ANISOTROPIC (decaying
+# per-dim variance under a random rotation): uniform cubes give OPQ's
+# learned rotation nothing to recover, real embedding spectra do.
 PQ_SWEEP = [(16, 8), (64, 8), (128, 16)]
 
-# Tiered-base sweep (DESIGN.md §9): fixed (d, M), n grows past what a
-# device-resident float base would allow. PR CI runs the main-world n only;
+# Three-tier base sweep (DESIGN.md §9, §15): fixed (d, M), n grows past what
+# a device-resident float base would allow; every n runs the SAME pq spec
+# with the base on device, host and disk. PR CI runs the main-world n only;
 # the nightly job passes --host-tier-ns 6000,60000,200000.
 HOST_TIER_D = 16
 HOST_TIER_M = 8
@@ -114,10 +118,12 @@ def _build_graph(base, key):
 
 
 def _host_tier_sweep(key, ns, q, ef, out, main_world=None) -> list[dict]:
-    """device-vs-host base placement at growing n (same graph, same PQ, same
-    seeds): recall must be bit-parity (identical survivors -> identical
-    rerank), qps loss bounded by the host-gather tail, and the device-side
-    float footprint replaced by M·n codes + adjacency.
+    """device/host/disk base placement at growing n (same graph, same PQ,
+    same seeds): recall must be bit-parity across all three tiers (identical
+    survivors -> identical rerank), qps loss bounded by the gather tail, and
+    ``*_bytes_per_query`` (§15) records what each tier actually touches —
+    identical scored+rerank bytes for device/host (same f32 rows, different
+    residency), unique 4 KiB pages for disk.
 
     ``main_world`` is the already-built (n, searcher, queries, gt) of the
     main report: a sweep point at that n reuses it (per-push CI runs the
@@ -144,17 +150,21 @@ def _host_tier_sweep(key, ns, q, ef, out, main_world=None) -> list[dict]:
         spec_dev = SearchSpec(ef=ef, k=1, entry="random", scorer="pq",
                               pq_m=HOST_TIER_M)
         spec_host = spec_dev._replace(base_placement="host")
-        # one seed draw shared by all three runs: the device-vs-host contrast
-        # must be pure placement, and exact-vs-pq pure scorer
+        spec_disk = spec_dev._replace(base_placement="disk")
+        # one seed draw shared by all four runs: the tier contrast must be
+        # pure placement, and exact-vs-pq pure scorer
         ent, extra = s.seed(queries, spec_dev)
         s.pq_index(spec_dev)        # code table trained off the timer
         s.base_store("host")        # host mirror materialized off the timer
+        disk_store = s.base_store("disk")   # shards spilled off the timer
         run = lambda sp: s.search(queries, sp, entries=ent, entry_comps=extra)
         _, res_ex = timeit(run, spec_ex, iters=1)
         wall_dev, res_dev = timeit(run, spec_dev, iters=2)
         wall_host, res_host = timeit(run, spec_host, iters=2)
+        wall_disk, res_disk = timeit(run, spec_disk, iters=2)
 
         parity = float((res_dev.ids[:, 0] == res_host.ids[:, 0]).mean())
+        parity_disk = float((res_dev.ids[:, 0] == res_disk.ids[:, 0]).mean())
         row = {
             "n": n, "d": HOST_TIER_D, "pq_m": HOST_TIER_M,
             "exact_recall_at_1": round(
@@ -163,25 +173,45 @@ def _host_tier_sweep(key, ns, q, ef, out, main_world=None) -> list[dict]:
                 float((res_dev.ids[:, 0] == gt[:, 0]).mean()), 4),
             "host_recall_at_1": round(
                 float((res_host.ids[:, 0] == gt[:, 0]).mean()), 4),
+            "disk_recall_at_1": round(
+                float((res_disk.ids[:, 0] == gt[:, 0]).mean()), 4),
             "host_device_parity": round(parity, 4),
+            "disk_device_parity": round(parity_disk, 4),
             "device_wall_ms": round(wall_dev * 1e3, 2),
             "host_wall_ms": round(wall_host * 1e3, 2),
+            "disk_wall_ms": round(wall_disk * 1e3, 2),
             "device_qps": round(q / wall_dev, 1),
             "host_qps": round(q / wall_host, 1),
+            "disk_qps": round(q / wall_disk, 1),
             "qps_ratio": round(wall_dev / wall_host, 4),
-            "host_kib_per_query": round(
-                float(res_host.host_bytes.mean()) / 1024, 2),
+            "disk_qps_ratio": round(wall_dev / wall_disk, 4),
+            "exact_bytes_per_query": round(
+                float(res_ex.bytes_touched.mean()), 1),
+            "device_bytes_per_query": round(
+                float(res_dev.bytes_touched.mean()), 1),
+            "host_bytes_per_query": round(
+                float(res_host.bytes_touched.mean()), 1),
+            "disk_bytes_per_query": round(
+                float(res_disk.bytes_touched.mean()), 1),
             "device_float_mb": round(n * HOST_TIER_D * 4 / 2**20, 2),
             "device_resident_mb": round(
                 (n * HOST_TIER_M + neighbors.size * 4) / 2**20, 2),
         }
         rows.append(row)
+        # drop the spilled shard tmpdir once the row is measured (the
+        # nightly 200k world would otherwise hold its shards until exit)
+        s._stores.pop(("disk", "f32"), None)
+        disk_store.close()
         out(f"smoke/host_tier n={n}: recall exact={row['exact_recall_at_1']:.3f} "
             f"dev={row['device_recall_at_1']:.3f} "
-            f"host={row['host_recall_at_1']:.3f} parity={parity:.3f} "
-            f"qps {row['device_qps']:.0f}->{row['host_qps']:.0f} "
-            f"({row['qps_ratio']:.2f}x), "
-            f"{row['host_kib_per_query']:.1f} KiB host/query, "
+            f"host={row['host_recall_at_1']:.3f} "
+            f"disk={row['disk_recall_at_1']:.3f} "
+            f"parity host={parity:.3f} disk={parity_disk:.3f}, "
+            f"qps {row['device_qps']:.0f}->{row['host_qps']:.0f}->"
+            f"{row['disk_qps']:.0f}, bytes/q "
+            f"{row['device_bytes_per_query']:.0f}/"
+            f"{row['host_bytes_per_query']:.0f}/"
+            f"{row['disk_bytes_per_query']:.0f}, "
             f"device {row['device_float_mb']:.1f}->"
             f"{row['device_resident_mb']:.1f} MB")
     return rows
@@ -370,25 +400,53 @@ def _entry_term_sweep(searcher, queries, gt_k, ef: int, out) -> list[dict]:
 
 
 def _pq_sweep(key, n: int, q: int, ef: int, out) -> list[dict]:
-    """exact-vs-pq recall/comps/memory across d (DESIGN.md §8), same n as the
-    main world so the committed rows stay comparable with the perf guard."""
+    """Quantization-ladder recall/comps/bytes across d (DESIGN.md §8, §15),
+    same n as the main world so the committed rows stay comparable with the
+    perf guard. Every row runs exact / sq8 / pq through the same graph and
+    seeds, records ``*_bytes_per_query`` (the §15 bandwidth column — the
+    ladder must be monotone exact > sq8 > pq), then an OPQ twin: a second
+    engine over the SAME graph with an OPQ-trained table attached, so the
+    opq-vs-pq contrast is purely the learned rotation. d >= 64 rows are
+    labeled ``regime="high_d"``: that is where the pq recall gap opens and
+    where OPQ must close at least half of it (the §15 acceptance bar).
+
+    The sweep draws its own query pool of at least 240 regardless of the
+    main world's ``q``: recall@1 granularity is 1/q, and the gap-closed
+    gate divides two recall deltas — at q=80 the d=128 gap is ~4 queries
+    and the quotient is sampling noise (observed 0.00 and 0.78 across
+    seeds for the same tables)."""
+    import jax.numpy as jnp
+
+    from repro.baselines.pq import build_opq, derive_opq_key
     from repro.core import bruteforce as bf
 
+    q = max(q, 240)
     rows = []
     for i, (sd, M) in enumerate(PQ_SWEEP):
         kw = jax.random.fold_in(key, 200 + i)
-        sbase = jax.random.uniform(kw, (n, sd))
-        squeries = jax.random.uniform(jax.random.fold_in(kw, 1), (q, sd))
+        # anisotropic world: decaying per-dim scales under a random rotation
+        # (QR of a gaussian) — the axis-aligned subspace split that plain PQ
+        # uses is deliberately misaligned with the data's true axes
+        scales = 1.0 / jnp.sqrt(1.0 + jnp.arange(sd, dtype=jnp.float32))
+        rot = jnp.linalg.qr(
+            jax.random.normal(jax.random.fold_in(kw, 7), (sd, sd))
+        )[0]
+        sbase = (jax.random.normal(kw, (n, sd)) * scales) @ rot
+        squeries = (jax.random.normal(jax.random.fold_in(kw, 1), (q, sd))
+                    * scales) @ rot
         g = bf.exact_knn_graph(sbase, 16)
         gd = diversify.build_gd_graph(sbase, g)
         s = Searcher.from_graph(sbase, gd, key=kw)
         gt = bf.ground_truth(squeries, sbase, 1)
         row = {"n": n, "d": sd, "pq_m": M,
-               "bytes_per_vec_exact": 4 * sd, "bytes_per_vec_pq": M,
-               "mem_ratio": round(4 * sd / M, 1)}
-        for scorer in ("exact", "pq"):
+               "regime": "high_d" if sd >= 64 else "low_d",
+               "bytes_per_vec_exact": 4 * sd, "bytes_per_vec_sq8": sd,
+               "bytes_per_vec_pq": M,
+               "mem_ratio_pq": round(4 * sd / M, 1)}
+        spec = None
+        for scorer in ("exact", "sq8", "pq"):
             # random entries: comps then measure pure traversal work, so the
-            # exact-vs-pq comparison-count contrast is not drowned by the
+            # scorer comparison-count contrast is not drowned by the
             # projection seeder's O(n*m/d) scan charge
             spec = SearchSpec(ef=ef, k=1, entry="random", scorer=scorer,
                               pq_m=M)
@@ -400,12 +458,38 @@ def _pq_sweep(key, n: int, q: int, ef: int, out) -> list[dict]:
                 float(res.n_comps.mean()), 1
             )
             row[f"{scorer}_wall_ms"] = round(wall * 1e3, 2)
+            row[f"{scorer}_bytes_per_query"] = round(
+                float(res.bytes_touched.mean()), 1
+            )
+        # the OPQ twin: same base, same graph, same seeds — only the code
+        # table differs (rotation learned by alternating PQ / Procrustes)
+        s_opq = Searcher.from_graph(
+            sbase, gd, key=kw,
+            pq=build_opq(sbase, M=M, key=derive_opq_key(kw)),
+        )
+        wall, res = timeit(lambda: s_opq.search(squeries, spec), iters=3)
+        row["opq_recall_at_1"] = round(
+            float((res.ids[:, 0] == gt[:, 0]).mean()), 4)
+        row["opq_comps_per_query"] = round(float(res.n_comps.mean()), 1)
+        row["opq_wall_ms"] = round(wall * 1e3, 2)
+        gap = row["exact_recall_at_1"] - row["pq_recall_at_1"]
+        row["pq_recall_gap"] = round(gap, 4)
+        row["opq_gap_closed"] = (
+            round((row["opq_recall_at_1"] - row["pq_recall_at_1"])
+                  / gap, 4) if gap > 1e-9 else None
+        )
         rows.append(row)
-        out(f"smoke/pq d={sd} M={M} mem {row['mem_ratio']}x: "
-            f"exact recall={row['exact_recall_at_1']:.3f}/"
-            f"{row['exact_comps_per_query']:.0f} comps, "
-            f"pq recall={row['pq_recall_at_1']:.3f}/"
-            f"{row['pq_comps_per_query']:.0f} comps")
+        out(f"smoke/pq d={sd} M={M} [{row['regime']}] "
+            f"mem {row['mem_ratio_pq']}x: recall "
+            f"exact={row['exact_recall_at_1']:.3f} "
+            f"sq8={row['sq8_recall_at_1']:.3f} "
+            f"pq={row['pq_recall_at_1']:.3f} "
+            f"opq={row['opq_recall_at_1']:.3f} "
+            f"(gap {row['pq_recall_gap']:.3f}, "
+            f"opq closes {row['opq_gap_closed']}), bytes/q "
+            f"{row['exact_bytes_per_query']:.0f}>"
+            f"{row['sq8_bytes_per_query']:.0f}>"
+            f"{row['pq_bytes_per_query']:.0f}")
     return rows
 
 
@@ -570,8 +654,8 @@ def run(n: int = 8000, d: int = 16, q: int = 100, ef: int = 48,
     # insert/delete/compact lifecycle per insert_ef — DESIGN.md §13
     report["mutation_sweep"] = _mutation_sweep(key, q, ef, out)
 
-    # device-vs-host base placement at growing n — DESIGN.md §9; a sweep
-    # point at the main n reuses the world built above
+    # device/host/disk base placement at growing n — DESIGN.md §9, §15; a
+    # sweep point at the main n reuses the world built above
     report["host_tier_sweep"] = _host_tier_sweep(
         key, host_tier_ns or [n], q, ef, out,
         main_world=(n, searcher, queries, gt),

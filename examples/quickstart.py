@@ -6,11 +6,14 @@ per-query adaptive termination (DESIGN.md §3, §10, §12).
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --serve
+    PYTHONPATH=src python examples/quickstart.py --ladder
 
 ``--serve`` runs the continuous-batching server (DESIGN.md §11) instead of
 closed batches: ragged requests arrive open-loop on a Poisson schedule,
 pad into bucketed compiled cores, and every answer still bit-matches
-direct search.
+direct search. ``--ladder`` walks the quantization ladder
+(exact / sq8 / pq bytes-per-vertex) and reranks from an mmap'd sharded
+artifact — the disk tier (DESIGN.md §15).
 """
 import argparse
 import os
@@ -66,10 +69,55 @@ def serve_demo(searcher, queries, metric):
     print("served answers bit-match direct Searcher.search: True")
 
 
+def ladder_demo(searcher, base, queries, metric):
+    """The quantization ladder and the disk tier (DESIGN.md §15): three
+    scored representations at 4d / d / M bytes per visited vertex, then a
+    sharded bf16 artifact reranked from mmap'd shards — bit-identical to
+    device."""
+    from repro.core.base_store import BaseStore
+
+    gt = bruteforce.ground_truth(queries, base, 1, metric)
+    ladder = SearchSpec(ef=48, k=1, metric=metric, entry="projection")
+    for scorer in ("exact", "sq8", "pq"):
+        res = searcher.search(queries, ladder._replace(scorer=scorer))
+        recall = float((res.ids[:, 0] == gt[:, 0]).mean())
+        bpq = float(res.bytes_touched.mean())
+        print(f"scorer {scorer:5s}: recall@1={recall:.3f}  "
+              f"scored+rerank bytes/query={bpq:,.0f}")
+
+    # persist with a sharded bf16 base, mmap the shards back, and rerank the
+    # sq8 traversal from disk — ids must match the device run exactly
+    with tempfile.TemporaryDirectory() as td:
+        path = index_io.save_index(
+            os.path.join(td, "ladder_index"),
+            index_io.IndexArtifact.from_searcher(searcher),
+            shard_rows=4096, shard_dtype="bf16",
+        )
+        s2 = index_io.load_index(path).to_searcher()
+        shards, dt = index_io.open_base_shards(path)
+        s2.attach_store(BaseStore.from_shards(shards, dt))
+        dspec = ladder._replace(scorer="sq8", base_placement="disk",
+                                store_dtype=dt)
+        dev = s2.search(queries, dspec._replace(base_placement="device",
+                                                store_dtype="f32"))
+        dsk = s2.search(queries, dspec)
+        # the §15 contract, asserted: same store dtype -> host and disk
+        # rerank the same survivors through the same formula, bit for bit
+        hst = s2.search(queries, dspec._replace(base_placement="host"))
+        assert bool((hst.ids == dsk.ids).all())
+        assert bool((hst.dists == dsk.dists).all())
+        print(f"disk tier ({len(shards)} bf16 shards): "
+              f"bit-identical to host rerank=True, ids match f32 device="
+              f"{bool((dev.ids == dsk.ids).all())}  "
+              f"bytes/query={float(dsk.bytes_touched.mean()):,.0f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--serve", action="store_true",
                     help="open-loop continuous-batching serving demo (§11)")
+    ap.add_argument("--ladder", action="store_true",
+                    help="quantization ladder + disk tier demo (§15)")
     ap.add_argument("--scale", type=float, default=0.02,
                     help="fraction of SIFT1M to synthesize (CI uses 0.005)")
     args = ap.parse_args()
@@ -102,6 +150,9 @@ def main():
     searcher = Searcher.from_build(base, result, key=key)
     if args.serve:
         serve_demo(searcher, queries, metric)
+        return
+    if args.ladder:
+        ladder_demo(searcher, base, queries, metric)
         return
     gt = bruteforce.ground_truth(queries, base, 1, metric)
     for entry in ("random", "projection", "hubs"):

@@ -22,6 +22,12 @@ class PQIndex(NamedTuple):
     codes: jax.Array      # (n, M) uint8
     M: int
     K: int
+    # OPQ rotation (d, d), orthogonal, or None for plain PQ: codebooks/codes
+    # quantize ``base @ rotation``, and queries must be rotated before LUT
+    # construction (the engine's ``scorer_state`` does). l2/ip/cos are
+    # rotation-invariant, so ADC scores in the rotated space rank exactly
+    # like the unrotated metric — only the quantization error shrinks.
+    rotation: jax.Array | None = None
 
 
 def _kmeans(key, x, k, iters=15):
@@ -103,6 +109,54 @@ def build_pq(
     codebooks = _train(key, base, M, K, iters)
     codes = _encode(base, codebooks)
     return PQIndex(codebooks=codebooks, codes=codes, M=M, K=K)
+
+
+def derive_opq_key(key: jax.Array) -> jax.Array:
+    """The one key derivation for build-time OPQ tables (``compress='opq'``
+    in ``core.build``) — distinct from ``derive_pq_key`` so a build that
+    switches compress stages never aliases codebook trajectories."""
+    import zlib
+
+    return jax.random.fold_in(key, zlib.crc32(b"scorer:opq") & 0x7FFFFFFF)
+
+
+def reconstruct(index: PQIndex) -> jax.Array:
+    """Decode codes back to vectors, (n, M*dsub) float32 — in the ROTATED
+    space when ``index.rotation`` is set (right-multiply by rotation.T to
+    return to the input space)."""
+    M = index.codebooks.shape[0]
+    rows = index.codebooks[jnp.arange(M)[None, :],
+                           index.codes.astype(jnp.int32)]   # (n, M, dsub)
+    return rows.reshape(rows.shape[0], -1).astype(jnp.float32)
+
+
+def build_opq(
+    base: jax.Array, M: int = 8, K: int = 256, iters: int = 15,
+    key: jax.Array | None = None, opq_iters: int = 6,
+) -> PQIndex:
+    """Optimized Product Quantization [Ge CVPR'13]: learn an orthogonal
+    rotation R jointly with the codebooks so the sub-quantizers see balanced,
+    decorrelated sub-spaces — closing the d>=64 recall gap plain axis-aligned
+    PQ shows in ``pq_sweep`` on anisotropic bases.
+
+    Alternating minimization: train PQ on ``base @ R``, then solve the
+    orthogonal Procrustes problem ``min_R ||base @ R - recon||_F`` in closed
+    form (SVD of ``base.T @ recon``). Deterministic for a fixed ``key`` —
+    every PQ retrain walks the same k-means trajectory, so build-time OPQ
+    tables round-trip artifacts bit-exactly."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    b = jnp.asarray(base, jnp.float32)
+    d = b.shape[1]
+    assert d % M == 0, "d must divide into M sub-vectors"
+    R = jnp.eye(d, dtype=jnp.float32)
+    for _ in range(opq_iters):
+        idx = build_pq(b @ R, M=M, K=K, iters=iters, key=key)
+        recon = reconstruct(idx)                       # rotated space
+        u, _, vt = jnp.linalg.svd(b.T @ recon, full_matrices=False)
+        R = u @ vt
+    idx = build_pq(b @ R, M=M, K=K, iters=iters, key=key)
+    return idx._replace(rotation=R)
 
 
 @functools.partial(jax.jit, static_argnames=("metric",))

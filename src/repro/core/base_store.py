@@ -1,4 +1,4 @@
-"""Tiered base storage: where the float base lives (DESIGN.md §9).
+"""Tiered base storage: where the float base lives (DESIGN.md §9, §15).
 
 PR 3's scorer axis shrank the *scored* working set to M bytes/vertex — the
 hot loop streams the (n, M) uint8 code table, never the float base. What
@@ -13,26 +13,61 @@ first-class axis:
   asynchronously). Device HBM holds only the PQ code table + the graph
   adjacency, so per-query device footprint drops from 4·d·n bytes to
   M·n + adjacency — the first ``n ≫ HBM`` configuration.
+* ``disk``   — the base lives in memory-mapped row-sharded ``.npy`` files
+  (an artifact's sibling shards via :func:`from_shards`, or an in-memory
+  base spilled to a temp directory). Host RAM holds only the mmap page
+  cache; the rerank gather touches just the survivor rows' pages. The
+  ``n ≫ RAM`` configuration — traversal stays on device-resident codes
+  (``beam_traverse`` is base-free), so the disk only ever sees top-``rerank``
+  row reads.
 
-The host path's only device traffic is the rerank gather:
+The non-device paths' only device traffic is the rerank gather:
 :meth:`BaseStore.gather` slices the top-``rerank`` survivor rows on the host
 and issues one batched async ``jax.device_put`` per query batch — the copy
 overlaps the next tile's LUT build in ``Searcher.search_stream``'s pipeline.
-Host traffic is charged alongside the paper's comparison currency:
-``SearchResult.host_bytes`` reports bytes fetched from host per query, and
-the store keeps running totals for serving stats.
+Tier traffic is charged alongside the paper's comparison currency:
+``SearchResult.bytes_touched`` totals bytes of base representation fetched
+per query (scored codes + rerank rows), and the store keeps running totals
+for serving stats. Host rows bill ``row_bytes`` each; disk rows bill in
+whole 4096-byte pages (the I/O quantum an mmap fault actually moves),
+deduplicated per query — two survivors on one page cost one page.
+
+Residuals can be stored at half width (``dtype='bf16'``): the rerank
+dequantizes bf16 rows to float32 on device, halving tier bandwidth and
+footprint for ~3 decimal digits of mantissa. Opt-in, because float32 is
+what keeps host/disk reranks bit-identical to the device path.
 """
 from __future__ import annotations
 
 import functools
+import os
+import shutil
+import tempfile
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
 import numpy as np
 
 from .topk import topk_smallest
 
-PLACEMENTS = ("device", "host")
+PLACEMENTS = ("device", "host", "disk")
+
+# storage dtype -> (numpy dtype, bytes/element)
+DTYPES = {
+    "f32": (np.dtype(np.float32), 4),
+    "bf16": (np.dtype(ml_dtypes.bfloat16), 2),
+}
+
+# The disk tier's billing quantum: an mmap fault moves whole pages, so two
+# survivor rows on one page cost one page. 4 KiB is the Linux default; the
+# shard files are written row-contiguous so a row spans
+# ceil(row_bytes / 4096) + 0/1 pages.
+PAGE_BYTES = 4096
+
+# Default rows per spilled shard (256 MB of f32 at d=1024; small worlds get
+# one shard). Artifact sharding picks its own size via save_index.
+DEFAULT_SHARD_ROWS = 1 << 16
 
 
 def check_placement(placement: str) -> str:
@@ -43,6 +78,14 @@ def check_placement(placement: str) -> str:
     return placement
 
 
+def check_dtype(dtype: str) -> str:
+    if dtype not in DTYPES:
+        raise ValueError(
+            f"unknown store_dtype {dtype!r}; one of {tuple(DTYPES)}"
+        )
+    return dtype
+
+
 class BaseStore:
     """The float base matrix behind one placement policy.
 
@@ -50,76 +93,194 @@ class BaseStore:
     indexing (the rerank inside ``beam_search`` never sees this object —
     the device path is byte-for-byte the pre-tiering code).
 
-    ``host``: wraps a host-resident float32 numpy array. :meth:`gather`
+    ``host``: wraps a host-resident numpy array. :meth:`gather`
     returns rows already on their way to the device (``device_put`` is
     async — callers that interleave other work before touching the result
-    overlap the copy), plus per-query host-traffic bytes.
+    overlap the copy), plus per-query tier-traffic bytes.
+
+    ``disk``: wraps a list of row-sharded memory-mapped ``.npy`` files.
+    Constructing from an in-memory base spills it to a temp directory
+    (removed by :meth:`close`); :meth:`from_shards` adopts an artifact's
+    existing shard files without copying.
     """
 
-    def __init__(self, base, placement: str = "device"):
+    def __init__(self, base, placement: str = "device", dtype: str = "f32",
+                 shard_rows: int = 0):
         self.placement = check_placement(placement)
-        if placement == "host":
-            # float32, C-contiguous: row slices are single memcpy spans, and
-            # the dtype matches what the device-side rerank math expects.
-            self._host = np.ascontiguousarray(np.asarray(base, np.float32))
-            self._dev = None
+        self.dtype = check_dtype(dtype)
+        np_dtype, elem = DTYPES[dtype]
+        self._dev = None
+        self._host = None
+        self._shards: list[np.ndarray] | None = None
+        self._spill_dir: str | None = None
+        if placement == "disk":
+            base_np = np.ascontiguousarray(np.asarray(base).astype(np_dtype))
+            self.n, self.d = base_np.shape
+            self._spill(base_np, shard_rows or DEFAULT_SHARD_ROWS)
+        elif placement == "host":
+            # C-contiguous: row slices are single memcpy spans; dtype is the
+            # storage width (f32 matches the device rerank bit-for-bit).
+            self._host = np.ascontiguousarray(np.asarray(base).astype(np_dtype))
+            self.n, self.d = self._host.shape
         else:
-            self._dev = jnp.asarray(base)
-            self._host = None
-        arr = self._host if self._host is not None else self._dev
-        self.n, self.d = arr.shape
-        self.row_bytes = self.d * 4
+            arr = jnp.asarray(base)
+            self._dev = arr if dtype == "f32" else arr.astype(jnp.bfloat16)
+            self.n, self.d = self._dev.shape
+        self.row_bytes = self.d * elem
         # running totals (serving stats; per-query accounting rides the
         # SearchResult)
         self.gathered_rows = 0
         self.gathered_bytes = 0
 
     @classmethod
-    def wrap(cls, base, placement: str = "device") -> "BaseStore":
+    def from_shards(cls, shards, dtype: str = "f32") -> "BaseStore":
+        """Adopt pre-opened memory-mapped shard arrays (row-partitioned,
+        equal d) as a ``disk`` store without copying — the artifact path
+        (``io.open_base_shards``)."""
+        self = cls.__new__(cls)
+        self.placement = "disk"
+        self.dtype = check_dtype(dtype)
+        np_dtype, elem = DTYPES[dtype]
+        shards = list(shards)
+        if not shards:
+            raise ValueError("from_shards needs at least one shard")
+        self._dev = None
+        self._host = None
+        self._spill_dir = None
+        self._shards = [s.view(np_dtype) if s.dtype != np_dtype else s
+                        for s in shards]
+        self.d = int(self._shards[0].shape[1])
+        rows = [int(s.shape[0]) for s in self._shards]
+        self.n = sum(rows)
+        self._starts = np.cumsum([0] + rows[:-1])
+        self.row_bytes = self.d * elem
+        self.gathered_rows = 0
+        self.gathered_bytes = 0
+        return self
+
+    def _spill(self, base_np: np.ndarray, shard_rows: int) -> None:
+        self._spill_dir = tempfile.mkdtemp(prefix="repro-basestore-")
+        paths = []
+        for i, start in enumerate(range(0, self.n, shard_rows)):
+            p = os.path.join(self._spill_dir, f"base_shard_{i:05d}.npy")
+            np.save(p, base_np[start:start + shard_rows])
+            paths.append(p)
+        np_dtype, _ = DTYPES[self.dtype]
+        self._shards = [np.load(p, mmap_mode="r").view(np_dtype)
+                        for p in paths]
+        rows = [int(s.shape[0]) for s in self._shards]
+        self._starts = np.cumsum([0] + rows[:-1])
+
+    def close(self) -> None:
+        """Drop shard mmaps and remove a spilled temp directory (no-op for
+        device/host stores and adopted artifact shards)."""
+        self._shards = None
+        if self._spill_dir is not None:
+            shutil.rmtree(self._spill_dir, ignore_errors=True)
+            self._spill_dir = None
+
+    @classmethod
+    def wrap(cls, base, placement: str = "device",
+             dtype: str = "f32") -> "BaseStore":
         if isinstance(base, BaseStore):
             if base.placement != placement:
                 raise ValueError(
                     f"BaseStore placement {base.placement!r} != requested "
                     f"{placement!r}"
                 )
+            if base.dtype != dtype:
+                raise ValueError(
+                    f"BaseStore dtype {base.dtype!r} != requested {dtype!r}"
+                )
             return base
-        return cls(base, placement)
+        return cls(base, placement, dtype=dtype)
 
     @property
     def nbytes(self) -> int:
         return self.n * self.row_bytes
 
+    @property
+    def shards(self) -> list | None:
+        """The mmap'd shard arrays of a ``disk`` store (None otherwise)."""
+        return self._shards
+
+    @property
+    def spill_dir(self) -> str | None:
+        """Temp directory holding spilled shards (None when the store wraps
+        an artifact's shards or is not disk-placed)."""
+        return self._spill_dir
+
     def device_view(self) -> jax.Array:
         """The full base as a device array — only valid under ``device``
-        placement (uploading a host-tier base wholesale would defeat it)."""
+        placement (uploading a host- or disk-tier base wholesale would
+        defeat it)."""
         if self._dev is None:
             raise ValueError(
-                "base_placement='host': the float base is host-resident; "
-                "use gather(ids) for the rerank rows instead of device_view()"
+                f"base_placement={self.placement!r}: the float base is not "
+                "device-resident; use gather(ids) for the rerank rows "
+                "instead of device_view()"
             )
         return self._dev
 
-    def gather(self, ids) -> tuple[jax.Array, jax.Array]:
-        """ids (Q, R) int32 (INVALID < 0 allowed) -> (rows (Q, R, d) float32
-        on device, host_bytes (Q,) int32).
+    def _gather_disk(self, safe: np.ndarray) -> np.ndarray:
+        """Row gather across shards; returns (Q, R, d) in the storage
+        dtype. Reads fault in only the touched pages of each shard."""
+        shard_idx = np.searchsorted(self._starts, safe, side="right") - 1
+        local = safe - self._starts[shard_idx]
+        np_dtype, _ = DTYPES[self.dtype]
+        rows = np.empty(safe.shape + (self.d,), np_dtype)
+        for si, shard in enumerate(self._shards):
+            m = shard_idx == si
+            if m.any():
+                rows[m] = shard[local[m]]
+        return rows
 
-        Host placement: the row slice happens on the host (ids are synced —
-        they are the traversal's output and already need materializing) and
-        the result is enqueued with one async ``device_put``; INVALID ids
-        fetch row 0 and must be masked by the caller's id validity (the
-        rerank scores them +inf). Device placement: in-HBM gather, zero host
-        traffic.
+    def _disk_bytes(self, ids_np: np.ndarray) -> np.ndarray:
+        """Per-query bytes billed in whole pages: the unique (shard, page)
+        set each query's valid survivor rows touch, ×PAGE_BYTES."""
+        safe = np.maximum(ids_np, 0).astype(np.int64)
+        shard_idx = np.searchsorted(self._starts, safe, side="right") - 1
+        local = safe - self._starts[shard_idx]
+        first = local * self.row_bytes // PAGE_BYTES
+        last = ((local + 1) * self.row_bytes - 1) // PAGE_BYTES
+        span = int((last - first).max()) + 1 if ids_np.size else 1
+        # (Q, R, span) page grid, invalid rows/overhang masked out
+        grid = first[..., None] + np.arange(span)[None, None, :]
+        ok = (grid <= last[..., None]) & (ids_np >= 0)[..., None]
+        # encode (shard, page) into one key; npages per shard bounds page ids
+        key = shard_idx[..., None].astype(np.int64) << 40 | grid
+        out = np.zeros(ids_np.shape[0], np.int64)
+        for q in range(ids_np.shape[0]):
+            out[q] = np.unique(key[q][ok[q]]).size * PAGE_BYTES
+        return out
+
+    def gather(self, ids) -> tuple[jax.Array, jax.Array]:
+        """ids (Q, R) int32 (INVALID < 0 allowed) -> (rows (Q, R, d) on
+        device, bytes_touched (Q,) int32).
+
+        Host/disk placement: the row slice happens on the host (ids are
+        synced — they are the traversal's output and already need
+        materializing) and the result is enqueued with one async
+        ``device_put``; INVALID ids fetch row 0 and must be masked by the
+        caller's id validity (the rerank scores them +inf). Device
+        placement: in-HBM gather, zero tier traffic.
         """
         if self._dev is not None:
             rows = self._dev[jnp.maximum(ids, 0)]
             return rows, jnp.zeros(ids.shape[:1], jnp.int32)
         ids_np = np.asarray(ids)
-        rows_np = np.take(self._host, np.maximum(ids_np, 0), axis=0)
+        safe = np.maximum(ids_np, 0)
         valid = (ids_np >= 0).sum(axis=1, dtype=np.int64)
+        if self._shards is not None:
+            rows_np = self._gather_disk(safe)
+            bts = self._disk_bytes(ids_np)
+        else:
+            rows_np = np.take(self._host, safe, axis=0)
+            bts = valid * self.row_bytes
         self.gathered_rows += int(valid.sum())
-        self.gathered_bytes += int(valid.sum()) * self.row_bytes
+        self.gathered_bytes += int(bts.sum())
         rows = jax.device_put(rows_np)  # async: overlaps the caller's work
-        return rows, jnp.asarray((valid * self.row_bytes).astype(np.int32))
+        return rows, jnp.asarray(bts.astype(np.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
@@ -135,7 +296,9 @@ def rerank_gathered(queries, cand, rows, k: int, metric: str = "l2"):
     kernel backends (native/interpret) the device rerank computes l2 in
     the kernel's expanded-norm MXU form, so distances may differ in the
     low float32 bits (~1e-6 relative); survivor ids only move on exact
-    ties. INVALID (< 0) candidates score +inf and never win."""
+    ties. bf16 rows are dequantized to float32 before the distance — the
+    half-width residual tier reranks at full precision on-device. INVALID
+    (< 0) candidates score +inf and never win."""
     from repro.kernels.ref import _distances_from_rows
 
     exact = _distances_from_rows(queries, cand, rows, metric)

@@ -44,9 +44,18 @@ class SearchResult(NamedTuple):
     dists: jax.Array      # (Q, k)
     n_comps: jax.Array    # (Q,) distance computations (paper's cost currency)
     n_steps: jax.Array    # () loop iterations executed
-    # bytes fetched from host memory per query (tiered rerank under
-    # base_placement='host', DESIGN.md §9); 0 for device-resident runs
-    host_bytes: jax.Array | int = 0
+    # bytes of base representation fetched per query (DESIGN.md §15): the
+    # scorer's scored bytes (4d exact / d sq8 / M pq per vertex) plus the
+    # rerank tail's row fetches, billed at the backing tier's granularity
+    # (row_bytes on device/host, whole deduplicated 4 KiB pages on disk) —
+    # the ladder's memory-traffic currency, comparable across placements
+    bytes_touched: jax.Array | int = 0
+
+    @property
+    def host_bytes(self):
+        """Pre-§15 name for :attr:`bytes_touched` (tier traffic was billed
+        only for the host placement then); kept for older callers."""
+        return self.bytes_touched
 
 
 class TraverseResult(NamedTuple):
@@ -368,12 +377,14 @@ def _finalize(state: _State, queries, base, k, metric, r_tile,
     convert the scored-id count into the paper's comparison currency —
     M/d per ADC score plus one full comparison per reranked candidate."""
     sc = get_scorer(scorer)
+    d_dim = base.shape[1]
     if not sc.needs_rerank:
         return SearchResult(
             ids=state.cand_ids[:, :k],
             dists=state.cand_dists[:, :k],
             n_comps=state.n_comps,
             n_steps=state.step,
+            bytes_touched=sc.scored_bytes(scorer_state, state.n_comps, d_dim),
         )
     from repro.kernels import ops
 
@@ -384,11 +395,17 @@ def _finalize(state: _State, queries, base, k, metric, r_tile,
                                 r_tile=r_tile)  # INVALID -> +inf
     dd, sel = topk_smallest(exact, k)
     n_comps = sc.scale_comps(scorer_state, state.n_comps, base.shape[1])
+    n_cand = (cand >= 0).sum(axis=1, dtype=jnp.int32)
+    # scored codes during traversal + float rows the in-HBM rerank gathered
+    # (the tiered path replaces the row term with the store's own billing)
+    bytes_touched = (sc.scored_bytes(scorer_state, state.n_comps, d_dim)
+                     + n_cand * (4 * d_dim))
     return SearchResult(
         ids=jnp.take_along_axis(cand, sel, axis=1),
         dists=dd,
-        n_comps=n_comps + (cand >= 0).sum(axis=1, dtype=jnp.int32),
+        n_comps=n_comps + n_cand,
         n_steps=state.step,
+        bytes_touched=bytes_touched,
     )
 
 
@@ -503,8 +520,8 @@ def beam_traverse(
     if getattr(sc, "needs_base", True):
         raise ValueError(
             f"beam_traverse needs a base-free scorer (got {scorer!r}): the "
-            "float base is not an operand here — use beam_search, or "
-            "scorer='pq'"
+            "float base is not an operand here — use beam_search, or a "
+            "base-free scorer ('pq', 'sq8')"
         )
     check_termination(term, restarts, restart_keys)
     if max_steps is None:

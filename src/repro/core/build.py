@@ -15,7 +15,9 @@ search side's entry-strategy/scorer registries (DESIGN.md §3, §8):
 * **compress** — build-time vector compression backing the ``pq`` scorer:
   ``none`` | ``pq`` (codebooks trained and codes encoded AT BUILD TIME with
   the same key derivation the engine's lazy path uses, so an attached table
-  is bit-identical to a lazily trained one).
+  is bit-identical to a lazily trained one) | ``opq`` (PQ behind a learned
+  orthogonal rotation [Ge CVPR'13] — same artifact slot, closes the d>=64
+  recall gap plain PQ shows; DESIGN.md §15).
 
 ``GraphBuilder(spec).build(base, key)`` composes the three stages and emits a
 :class:`BuildReport` (rounds, update curve, realized degree distribution,
@@ -74,6 +76,7 @@ class BuildSpec(NamedTuple):
     pq_m: int = 8                  # PQ sub-vectors (bytes/vector of the codes)
     pq_k: int = 256                # PQ codewords per sub-quantizer
     pq_iters: int = 15             # k-means iterations at PQ train time
+    opq_iters: int = 6             # rotation/codebook alternations (opq only)
     # report knobs
     proxy_sample: int = 256        # vertices sampled for the graph-recall
                                    # proxy (0 disables the check)
@@ -332,6 +335,19 @@ def _compress_pq(base, spec: BuildSpec, key):
                     key=derive_pq_key(key))
 
 
+@register_compressor("opq")
+def _compress_opq(base, spec: BuildSpec, key):
+    """OPQ: alternate codebook training with a closed-form orthogonal
+    Procrustes rotation (DESIGN.md §15). The rotation rides the artifact
+    (``pq_rotation``) and the engine rotates queries in ``scorer_state``;
+    ``derive_opq_key`` keeps the trajectory deterministic and distinct from
+    the plain-pq derivation."""
+    from repro.baselines.pq import build_opq, derive_opq_key
+
+    return build_opq(base, M=spec.pq_m, K=spec.pq_k, iters=spec.pq_iters,
+                     key=derive_opq_key(key), opq_iters=spec.opq_iters)
+
+
 # -- report -------------------------------------------------------------------
 
 
@@ -448,10 +464,10 @@ class GraphBuilder:
         spec = self.spec
         if key is None:
             key = jax.random.PRNGKey(0)
-        if spec.compress == "pq" and base.shape[1] % spec.pq_m:
+        if spec.compress in ("pq", "opq") and base.shape[1] % spec.pq_m:
             raise ValueError(
-                f"compress='pq' needs d % pq_m == 0 (d={base.shape[1]}, "
-                f"pq_m={spec.pq_m})"
+                f"compress={spec.compress!r} needs d % pq_m == 0 "
+                f"(d={base.shape[1]}, pq_m={spec.pq_m})"
             )
 
         t0 = time.perf_counter()

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import functools
 import zlib
+from collections import OrderedDict
 from typing import NamedTuple, Protocol
 
 import jax
@@ -91,10 +92,17 @@ class SearchSpec(NamedTuple):
     pq_m: int = 8               # PQ sub-vectors (bytes/vector of the codes)
     pq_k: int = 256             # PQ codewords per sub-quantizer
     pq_iters: int = 15          # k-means iterations at PQ train time
-    base_placement: str = "device"  # where the float base lives (§9):
+    base_placement: str = "device"  # where the float base lives (§9, §15):
                                 # "device" = HBM-resident (status quo);
                                 # "host" = host-resident, device keeps only
-                                # codes + adjacency, rerank gathers from host
+                                # codes + adjacency, rerank gathers from host;
+                                # "disk" = mmap'd row shards, rerank reads
+                                # only the survivors' pages
+    store_dtype: str = "f32"    # rerank-tier residual width (§15): "f32"
+                                # keeps host/disk bit-identical to device;
+                                # "bf16" halves tier bandwidth + footprint
+                                # (device placement ignores this — the beam
+                                # reranks the f32 base in-HBM)
     hub_count: int = 32         # hubs scanned per query by the hubs seeder
     term: str = "fixed"         # beam termination (§12): "fixed" = classic
                                 # rule only; "stable" adds the per-query
@@ -127,7 +135,7 @@ class _HostPending(NamedTuple):
     trav: TraverseResult
     cand: jax.Array        # (Q, r) survivor slice the rerank scores
     rows: jax.Array        # (Q, r, d) gathered float rows (possibly in flight)
-    host_bytes: jax.Array  # (Q,) host traffic this query paid
+    tier_bytes: jax.Array  # (Q,) rerank-tier traffic this query paid
     scorer_state: object
     entry_comps: jax.Array | None
     d: int
@@ -384,9 +392,15 @@ class Searcher:
         # a dict of (n,) arrays ("tenant", "tag", "timestamp", ...). None is
         # fine until a filter that reads a column arrives.
         self.metadata = metadata
-        # CompiledFilter cache, keyed by FilterSpec (hashable): each filter
-        # value is evaluated against the metadata exactly once per index.
-        self._filters: dict[FilterSpec, CompiledFilter] = {}
+        # CompiledFilter LRU, keyed by FilterSpec (hashable): each LIVE
+        # filter value is evaluated against the metadata once per index, and
+        # the cache is bounded — a multi-tenant server cycling through
+        # thousands of namespace filters no longer grows (n/8 + n/32)-byte
+        # bitmap pairs without limit. Recency-evicted filters recompile on
+        # return (filter_compiles counts compiles, for tests/ops).
+        self._filters: OrderedDict[FilterSpec, CompiledFilter] = OrderedDict()
+        self.filter_cache_size = 64
+        self.filter_compiles = 0
         self._aux: dict[tuple, object] = {}
         # PQ code tables backing the "pq" scorer: ``pq`` is an externally
         # trained index attached at engine build time (served for any spec
@@ -394,13 +408,18 @@ class Searcher:
         # lazily trained tables are cached per (M, K, iters).
         self._pq_attached = pq
         self._pq: dict[tuple, object] = {}
+        # the sq8 scorer's scalar-quantized table (deterministic min/max
+        # affine over the base — no PRNG, so no key-derivation parity to
+        # keep; quantized once on first use)
+        self._sq8 = None
         # provenance of the build that produced this index (set by
         # from_build; None for hand-assembled engines)
         self.build_report = None
-        # BaseStore per placement (the "host" store is a one-time host copy
-        # of the base; under a true n >> HBM deployment, construct the
-        # Searcher from a host numpy base and the copy is free)
-        self._stores: dict[str, BaseStore] = {}
+        # BaseStore per (placement, dtype) (the "host" store is a one-time
+        # host copy of the base, "disk" a one-time spill to mmap'd temp
+        # shards; under a true n >> HBM deployment, construct the Searcher
+        # from a host numpy base / an artifact's shards and the copy is free)
+        self._stores: dict[tuple, BaseStore] = {}
 
     # -- constructors ---------------------------------------------------------
 
@@ -555,33 +574,59 @@ class Searcher:
             )
         return self._pq[cache_key]
 
+    def sq8_index(self):
+        """The (codes, scale, mn) scalar-quantized base backing the ``sq8``
+        scorer, quantized once per index (deterministic — a rebuilt or
+        reloaded engine reproduces the identical table)."""
+        if self._sq8 is None:
+            from .scorers import build_sq8
+
+            self._sq8 = build_sq8(self.base)
+        return self._sq8
+
     def scorer_state(self, queries, spec: SearchSpec):
         """Per-batch operand pytree for ``spec.scorer`` (None for exact):
-        the pq scorer pairs the code table with per-query ADC LUTs."""
+        the pq scorer pairs the code table with per-query ADC LUTs (queries
+        rotated first when the table is OPQ-trained — the rotation is
+        orthogonal, so rotated-space ADC ranks exactly like the unrotated
+        metric); sq8 ships its quantized table + dequant params."""
         get_scorer(spec.scorer)  # unknown names fail loudly, pre-trace
+        if spec.scorer == "sq8":
+            idx = self.sq8_index()
+            return (idx.codes, idx.scale, idx.mn)
         if spec.scorer != "pq":
             return None
         from repro.baselines.pq import build_adc_luts
 
         idx = self.pq_index(spec)
-        luts = build_adc_luts(queries, idx.codebooks, spec.metric)
+        q = queries if idx.rotation is None else queries @ idx.rotation
+        luts = build_adc_luts(q, idx.codebooks, spec.metric)
         return (idx.codes, luts)
 
     # -- filtering & namespaces (DESIGN.md §14) -------------------------------
 
     def compiled_filter(self, fspec: FilterSpec) -> CompiledFilter:
         """``fspec`` evaluated against this index's metadata, cached per
-        filter value. Tombstoned rows are ANDed out of the allowed set at
-        compile time, so the seed-redraw map and the exact-scan fallback
-        never name a dead id (the deny bitmap still ORs with tombstones at
-        ``_init_state`` — idempotent). MutableIndex rebuilds its Searcher on
-        every mutation, so cached filters never go stale."""
-        if fspec not in self._filters:
-            self._filters[fspec] = compile_filter(
-                fspec, self.metadata, self.neighbors.shape[0],
-                dead=self.tombstones,
-            )
-        return self._filters[fspec]
+        filter value in a ``filter_cache_size``-bounded LRU (default 64 —
+        eviction costs a recompile on return, never correctness). Tombstoned
+        rows are ANDed out of the allowed set at compile time, so the
+        seed-redraw map and the exact-scan fallback never name a dead id
+        (the deny bitmap still ORs with tombstones at ``_init_state`` —
+        idempotent). MutableIndex rebuilds its Searcher on every mutation,
+        so cached filters never go stale."""
+        cached = self._filters.get(fspec)
+        if cached is not None:
+            self._filters.move_to_end(fspec)  # LRU: recent stays resident
+            return cached
+        cf = compile_filter(
+            fspec, self.metadata, self.neighbors.shape[0],
+            dead=self.tombstones,
+        )
+        self.filter_compiles += 1
+        self._filters[fspec] = cf
+        while len(self._filters) > self.filter_cache_size:
+            self._filters.popitem(last=False)
+        return cf
 
     def _filtered_brute(self, queries, cf: CompiledFilter, spec: SearchSpec,
                         *, q_valid: jax.Array | None = None) -> SearchResult:
@@ -615,7 +660,10 @@ class Searcher:
             dd = jnp.where(q_valid[:, None], dd, jnp.inf)
             comps = jnp.where(q_valid, comps, 0)
         return SearchResult(ids=out, dists=dd, n_comps=comps,
-                            n_steps=jnp.int32(0), host_bytes=0)
+                            n_steps=jnp.int32(0),
+                            # exact scan of the device float base: 4d bytes
+                            # per comparison, same currency as _finalize
+                            bytes_touched=comps * (4 * queries.shape[1]))
 
     def _filter_plan(self, spec: SearchSpec):
         """(CompiledFilter | None, route-to-brute bool) for ``spec``."""
@@ -637,12 +685,26 @@ class Searcher:
 
     # -- tiered base (DESIGN.md §9) -------------------------------------------
 
-    def base_store(self, placement: str = "device") -> BaseStore:
-        """The float base behind ``placement``, built once and cached."""
+    def base_store(self, placement: str = "device",
+                   dtype: str = "f32") -> BaseStore:
+        """The base behind (``placement``, ``dtype``), built once and cached
+        (a disk store spills the base to mmap'd temp shards on first use;
+        under a true n >> RAM deployment construct the store from an
+        artifact's shards via ``BaseStore.from_shards`` instead)."""
         check_placement(placement)
-        if placement not in self._stores:
-            self._stores[placement] = BaseStore(self.base, placement)
-        return self._stores[placement]
+        ck = (placement, dtype)
+        if ck not in self._stores:
+            self._stores[ck] = BaseStore(self.base, placement, dtype=dtype)
+        return self._stores[ck]
+
+    def attach_store(self, store: BaseStore) -> BaseStore:
+        """Adopt a pre-built tier store as this searcher's
+        (placement, dtype) tier — the zero-copy path from a sharded
+        artifact: ``attach_store(BaseStore.from_shards(*open_base_shards(
+        path)))`` reranks straight off the mmap'd shard files instead of
+        spilling the in-memory base (DESIGN.md §15)."""
+        self._stores[(store.placement, store.dtype)] = store
+        return store
 
     def _check_tier(self, spec: SearchSpec) -> None:
         check_placement(spec.base_placement)
@@ -651,10 +713,10 @@ class Searcher:
         sc = get_scorer(spec.scorer)
         if getattr(sc, "needs_base", True) or not sc.needs_rerank:
             raise ValueError(
-                f"base_placement='host' traverses device-resident compressed "
-                f"state and reranks from the host base; scorer="
-                f"{spec.scorer!r} reads the float base per hop — use "
-                f"scorer='pq'"
+                f"base_placement={spec.base_placement!r} traverses "
+                "device-resident compressed state and reranks from the "
+                f"backing tier; scorer={spec.scorer!r} reads the float base "
+                "per hop — use a base-free scorer ('pq', 'sq8')"
             )
 
     def _host_start(self, queries, spec: SearchSpec,
@@ -670,7 +732,7 @@ class Searcher:
         and traversal overlap the transfer (``search_stream``)."""
         self._check_metric(spec)
         self._check_tier(spec)
-        store = self.base_store(spec.base_placement)
+        store = self.base_store(spec.base_placement, spec.store_dtype)
         if entries is None:
             entries, entry_comps = self.seed(queries, spec, key)
         entries = self._remap_entries(entries, cf, key)
@@ -689,16 +751,20 @@ class Searcher:
             deny=None if cf is None else cf.deny,
         )
         cand = trav.cand_ids[:, :rerank_slice(spec.ef, spec.k, spec.rerank)]
-        rows, host_bytes = store.gather(cand)
+        rows, tier_bytes = store.gather(cand)
         return _HostPending(spec=spec, queries=queries, trav=trav, cand=cand,
-                            rows=rows, host_bytes=host_bytes,
+                            rows=rows, tier_bytes=tier_bytes,
                             scorer_state=state, entry_comps=entry_comps,
                             d=store.d)
 
     def _host_finish(self, p: "_HostPending") -> SearchResult:
-        """Exact rerank over the gathered host rows — same survivor slice,
+        """Exact rerank over the gathered tier rows — same survivor slice,
         same distance formula, same comps bill as the device ``_finalize``,
-        so both placements return identical answers."""
+        so every placement returns identical answers (f32 stores; bf16
+        residuals trade the bit-parity for half the tier traffic).
+        ``bytes_touched`` = the scorer's scored bytes (same as device) plus
+        the tier's own billing for the rerank rows (row_bytes each on host,
+        deduplicated 4 KiB pages on disk)."""
         dd, ids = rerank_gathered(p.queries, p.cand, p.rows, k=p.spec.k,
                                   metric=p.spec.metric)
         sc = get_scorer(p.spec.scorer)
@@ -706,8 +772,13 @@ class Searcher:
         n_comps = n_comps + (p.cand >= 0).sum(axis=1, dtype=jnp.int32)
         if p.entry_comps is not None:
             n_comps = n_comps + p.entry_comps
+        bytes_touched = (
+            sc.scored_bytes(p.scorer_state, p.trav.n_comps, p.d)
+            + p.tier_bytes
+        )
         return SearchResult(ids=ids, dists=dd, n_comps=n_comps,
-                            n_steps=p.trav.n_steps, host_bytes=p.host_bytes)
+                            n_steps=p.trav.n_steps,
+                            bytes_touched=bytes_touched)
 
     # -- search ---------------------------------------------------------------
 
@@ -790,11 +861,13 @@ class Searcher:
         self.prepare(spec)  # strategy state built once, outside the loop
         if spec.scorer == "pq":
             self.pq_index(spec)  # code table trained once, outside the loop
+        elif spec.scorer == "sq8":
+            self.sq8_index()     # table quantized once, outside the loop
         cf, brute = self._filter_plan(spec)  # compiled once, every tile
         # a brute-routed filter ignores placement — tiles go through
         # self.search's fallback, not the host pipeline
         tiered = spec.base_placement != "device" and not brute
-        ids, dists, comps, hbytes = [], [], [], []
+        ids, dists, comps, tbytes = [], [], [], []
         n_steps = jnp.int32(0)
         pending: tuple[_HostPending, int] | None = None
 
@@ -804,7 +877,7 @@ class Searcher:
             ids.append(res.ids[:take])
             dists.append(res.dists[:take])
             comps.append(res.n_comps[:take])
-            hbytes.append(res.host_bytes[:take])
+            tbytes.append(res.bytes_touched[:take])
             n_steps = n_steps + res.n_steps
 
         for i, lo in enumerate(range(0, Q, tile_q)):
@@ -830,6 +903,7 @@ class Searcher:
             ids.append(res.ids[:take])
             dists.append(res.dists[:take])
             comps.append(res.n_comps[:take])
+            tbytes.append(res.bytes_touched[:take])
             n_steps = n_steps + res.n_steps
         if pending is not None:
             finish(*pending)
@@ -838,7 +912,7 @@ class Searcher:
             dists=jnp.concatenate(dists),
             n_comps=jnp.concatenate(comps),
             n_steps=n_steps,
-            host_bytes=jnp.concatenate(hbytes) if tiered else 0,
+            bytes_touched=jnp.concatenate(tbytes),
         )
 
     def search_with_trace(self, queries, spec: SearchSpec,

@@ -15,6 +15,20 @@ artifacts written by a NEWER schema, and cross-checks manifest shapes
 against the arrays so a truncated file fails loudly. Pre-manifest flat
 ``.npz`` files (the old serve format) still load, as a version-0 artifact.
 
+v4 optionally SHARDS the base (``save_index(..., shard_rows=K)``): the
+base matrix moves out of the ``.npz`` into row-partitioned sibling
+``<stem>.shard###.npy`` files the manifest names and sizes
+(``manifest["shards"] = {"files", "rows", "dtype"}``). That is the disk
+tier's on-disk layout (DESIGN.md §15): :func:`open_base_shards` memory-maps
+the shards for ``BaseStore.from_shards`` so serving reranks from
+page-aligned reads without ever materializing the base, while
+:func:`load_index` still concatenates them for callers that want the
+in-memory artifact. Every shard is validated against the manifest (missing,
+truncated, or shape-mismatched shards raise
+:class:`CorruptArtifactError`), and each shard write is atomic
+(temp + fsync + rename) with the ``.npz`` — whose manifest makes the shard
+set live — written last.
+
 Round-trip contract (locked by tests/test_io.py): a saved-then-loaded
 artifact yields bit-identical search results (ids/dists/n_comps) to the
 in-memory build for flat, diversified, hierarchical, and PQ-compressed
@@ -58,7 +72,12 @@ FORMAT_MAGIC = "repro/index-artifact"
 # v3: + optional metadata columns for filtered / multi-tenant search
 # (DESIGN.md §14): ``meta_<name>`` arrays with the name list in
 # ``manifest["metadata"]``. Pre-v3 artifacts load with metadata=None.
-ARTIFACT_VERSION = 3
+# v4: + optional base sharding (``manifest["shards"]`` naming sibling
+# ``.npy`` files — the disk tier's mmap substrate, DESIGN.md §15) and the
+# OPQ rotation (``pq_rotation`` array when ``manifest["pq"]["rotation"]``).
+# Pre-v4 artifacts load unchanged: no shards key means the base is in the
+# npz, no rotation flag means plain PQ.
+ARTIFACT_VERSION = 4
 
 
 @dataclasses.dataclass
@@ -152,13 +171,69 @@ def normalize_path(path: str) -> str:
     return path if path.endswith(".npz") else path + ".npz"
 
 
-def save_index(path: str, artifact: IndexArtifact) -> str:
-    """Write one .npz (manifest + arrays); returns the normalized path."""
+def _atomic_write_npy(path: str, arr: np.ndarray) -> None:
+    """np.save via temp file + fsync + rename — same crash-safety contract
+    as the .npz itself: readers see the old complete shard or the new one."""
+    dirname = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=dirname,
+                               prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def shard_file_names(path: str, count: int) -> list[str]:
+    """The sibling shard basenames ``save_index(shard_rows=...)`` writes for
+    an artifact at ``path`` — ``<stem>.shard###.npy``."""
+    stem = os.path.basename(normalize_path(path))[: -len(".npz")]
+    return [f"{stem}.shard{i:03d}.npy" for i in range(count)]
+
+
+def save_index(path: str, artifact: IndexArtifact, *,
+               shard_rows: int = 0, shard_dtype: str = "f32") -> str:
+    """Write one .npz (manifest + arrays); returns the normalized path.
+
+    ``shard_rows > 0`` moves the base out of the npz into row-partitioned
+    sibling ``.npy`` shards of at most that many rows each (the disk tier's
+    layout); ``shard_dtype`` picks their storage width (``f32`` | ``bf16``
+    half-width residuals). Shards are written first, each atomically; the
+    npz whose manifest makes them live is written (atomically) last.
+    """
+    from .base_store import DTYPES as STORE_DTYPES
+
     path = normalize_path(path)
+    if shard_dtype not in STORE_DTYPES:
+        raise ValueError(
+            f"unknown shard_dtype {shard_dtype!r}; one of "
+            f"{tuple(STORE_DTYPES)}"
+        )
+    base_np = np.asarray(artifact.base, np.float32)
     arrays: dict[str, np.ndarray] = {
-        "base": np.asarray(artifact.base, np.float32),
         "neighbors": np.asarray(artifact.neighbors, np.int32),
     }
+    shards_entry = None
+    if shard_rows > 0:
+        np_dtype, _ = STORE_DTYPES[shard_dtype]
+        starts = list(range(0, base_np.shape[0], shard_rows))
+        files = shard_file_names(path, len(starts))
+        rows = []
+        dirname = os.path.dirname(os.path.abspath(path)) or "."
+        for fname, start in zip(files, starts):
+            chunk = np.ascontiguousarray(
+                base_np[start:start + shard_rows].astype(np_dtype))
+            _atomic_write_npy(os.path.join(dirname, fname), chunk)
+            rows.append(int(chunk.shape[0]))
+        shards_entry = {"files": files, "rows": rows, "dtype": shard_dtype}
+    else:
+        arrays["base"] = base_np
     # every v2 artifact carries its hub shortlist: derive it here when the
     # artifact was assembled without one (deterministic from the adjacency)
     hubs = artifact.hubs
@@ -173,8 +248,8 @@ def save_index(path: str, artifact: IndexArtifact) -> str:
         "format": FORMAT_MAGIC,
         "version": ARTIFACT_VERSION,
         "metric": artifact.metric,
-        "n": int(arrays["base"].shape[0]),
-        "d": int(arrays["base"].shape[1]),
+        "n": int(base_np.shape[0]),
+        "d": int(base_np.shape[1]),
         "degree": int(arrays["neighbors"].shape[1]),
         "n_hubs": int(arrays["hubs"].shape[0]),
         "degree_stats": degree_stats,
@@ -182,10 +257,11 @@ def save_index(path: str, artifact: IndexArtifact) -> str:
         "pq": None,
         "key_impl": None,
         "metadata": [],
+        "shards": shards_entry,
         "provenance": artifact.provenance,
     }
     if artifact.metadata:
-        n = int(arrays["base"].shape[0])
+        n = int(base_np.shape[0])
         for name in sorted(artifact.metadata):
             col = np.asarray(artifact.metadata[name])
             if col.ndim != 1 or col.shape[0] != n:
@@ -212,9 +288,13 @@ def save_index(path: str, artifact: IndexArtifact) -> str:
             arrays[f"hier{i}_slot"] = np.asarray(hier.layers_slot[i],
                                                  np.int32)
     if artifact.pq is not None:
-        manifest["pq"] = {"m": int(artifact.pq.M), "k": int(artifact.pq.K)}
+        rotation = getattr(artifact.pq, "rotation", None)
+        manifest["pq"] = {"m": int(artifact.pq.M), "k": int(artifact.pq.K),
+                          "rotation": rotation is not None}
         arrays["pq_codebooks"] = np.asarray(artifact.pq.codebooks, np.float32)
         arrays["pq_codes"] = np.asarray(artifact.pq.codes, np.uint8)
+        if rotation is not None:
+            arrays["pq_rotation"] = np.asarray(rotation, np.float32)
     # Crash-safe write: a crash mid-np.savez used to leave a truncated .npz
     # at the FINAL path, which a reloading/hot-swapping server would then
     # load. Write to a temp file in the same directory (same filesystem, so
@@ -293,6 +373,72 @@ def load_index(path: str) -> IndexArtifact:
         ) from e
 
 
+def _open_shards(path: str, m: dict, mmap: bool) -> list[np.ndarray]:
+    """Open and validate every base shard the manifest names. Missing,
+    unreadable, truncated, or shape-mismatched shards raise
+    :class:`CorruptArtifactError` — the same loud-failure contract the npz
+    members have."""
+    from .base_store import DTYPES as STORE_DTYPES
+
+    sh = m["shards"]
+    np_dtype, _ = STORE_DTYPES[sh.get("dtype", "f32")]
+    dirname = os.path.dirname(os.path.abspath(path)) or "."
+    if len(sh["files"]) != len(sh["rows"]) or not sh["files"]:
+        raise CorruptArtifactError(
+            f"{path}: manifest shard table is malformed "
+            f"({len(sh['files'])} files vs {len(sh['rows'])} row counts)"
+        )
+    if sum(sh["rows"]) != m["n"]:
+        raise CorruptArtifactError(
+            f"{path}: manifest shard rows sum to {sum(sh['rows'])} but "
+            f"n={m['n']} — truncated or corrupted artifact"
+        )
+    shards = []
+    for fname, rows in zip(sh["files"], sh["rows"]):
+        p = os.path.join(dirname, fname)
+        try:
+            arr = np.load(p, mmap_mode="r" if mmap else None,
+                          allow_pickle=False)
+            if arr.dtype != np_dtype:
+                arr = arr.view(np_dtype)  # bf16 round-trips as void16
+        except FileNotFoundError as e:
+            raise CorruptArtifactError(
+                f"{path}: base shard {fname!r} is missing — the shard set "
+                "is incomplete (partial copy?)"
+            ) from e
+        except (ValueError, OSError, zipfile.BadZipFile, EOFError) as e:
+            raise CorruptArtifactError(
+                f"{path}: base shard {fname!r} is unreadable ({e}) — "
+                "truncated or corrupted write"
+            ) from e
+        if arr.ndim != 2 or arr.shape != (rows, m["d"]):
+            raise CorruptArtifactError(
+                f"{path}: base shard {fname!r} shape {arr.shape} disagrees "
+                f"with manifest ({rows}, {m['d']}) — truncated or corrupted "
+                "artifact"
+            )
+        shards.append(arr)
+    return shards
+
+
+def open_base_shards(path: str) -> tuple[list[np.ndarray], str]:
+    """Memory-map a sharded v4 artifact's base shards for the disk tier:
+    returns (shard arrays, storage dtype name) ready for
+    ``BaseStore.from_shards``. Raises ValueError if the artifact is not
+    sharded, :class:`CorruptArtifactError` if any shard is damaged."""
+    path = normalize_path(path)
+    blob = np.load(path, allow_pickle=False)
+    if "manifest" not in blob.files:
+        raise ValueError(f"{path}: legacy artifact has no shard table")
+    m = json.loads(str(blob["manifest"][()]))
+    if not m.get("shards"):
+        raise ValueError(
+            f"{path}: artifact is not sharded — the base lives in the npz; "
+            "re-save with save_index(..., shard_rows=...) for the disk tier"
+        )
+    return _open_shards(path, m, mmap=True), m["shards"].get("dtype", "f32")
+
+
 def _decode_artifact(blob, path: str) -> IndexArtifact:
     if "manifest" not in blob.files:
         return _load_legacy(blob, path)
@@ -307,7 +453,15 @@ def _decode_artifact(blob, path: str) -> IndexArtifact:
             f"build supports (v{ARTIFACT_VERSION}) — upgrade, or rebuild "
             f"the index with this version"
         )
-    base = blob["base"]
+    if m.get("shards"):
+        # v4 sharded: the base lives in validated sibling files; concatenate
+        # for the in-memory artifact (the disk tier mmaps via
+        # open_base_shards instead and never lands here)
+        base = np.concatenate(
+            [np.asarray(s) for s in _open_shards(path, m, mmap=False)]
+        ).astype(np.float32)
+    else:
+        base = blob["base"]
     neighbors = blob["neighbors"]
     want = (m["n"], m["d"], m["degree"])
     got = (*base.shape, neighbors.shape[1])
@@ -341,10 +495,14 @@ def _decode_artifact(blob, path: str) -> IndexArtifact:
     if m.get("pq") is not None:
         from repro.baselines.pq import PQIndex
 
+        rotation = None
+        if m["pq"].get("rotation"):
+            rotation = jnp.asarray(blob["pq_rotation"])
         pq = PQIndex(
             codebooks=jnp.asarray(blob["pq_codebooks"]),
             codes=jnp.asarray(blob["pq_codes"]),
             M=int(m["pq"]["m"]), K=int(m["pq"]["k"]),
+            rotation=rotation,
         )
 
     if m["version"] >= 2:

@@ -11,6 +11,12 @@ Orthogonal to the entry-strategy axis: any seeder composes with any scorer.
 
 * ``exact`` — the fused float gather (``ops.gather_distance_masked``);
   4d bytes fetched and d MACs per scored vertex. No rerank needed.
+* ``sq8``   — scalar quantization (``ops.gather_sq8_masked``): the base as
+  an (n, d) uint8 table with per-dimension affine dequant params, d bytes
+  fetched per scored vertex — the 4x middle rung between exact and pq
+  (DESIGN.md §15). Full-rank geometry (no subspace factorization), so its
+  recall sits between the two at every d; finishes with the same exact
+  rerank as pq, comps charged at 1/4 per dequantized score.
 * ``pq``    — PQ asymmetric distances (``ops.gather_adc_masked``): M bytes
   fetched per vertex, scored against a per-query (M, K) LUT built once per
   batch. Traversal distances are approximations of the metric on code
@@ -29,7 +35,33 @@ rerank tail gathers the survivors (DESIGN.md §9).
 """
 from __future__ import annotations
 
-from typing import Protocol
+from typing import NamedTuple, Protocol
+
+import jax
+import jax.numpy as jnp
+
+
+class Sq8Index(NamedTuple):
+    """Scalar-quantized base: per-dimension affine uint8 codes.
+
+    ``codes * scale + mn`` reconstructs the base to ~1/255 of each
+    dimension's range — 4x smaller than float32 at full rank. Deterministic
+    (min/max over the base, no PRNG), so a rebuilt or reloaded engine
+    reproduces the identical table."""
+
+    codes: jax.Array   # (n, d) uint8
+    scale: jax.Array   # (d,) float32 — (max - min) / 255, zero-range -> 1
+    mn: jax.Array      # (d,) float32 — per-dimension minimum
+
+
+def build_sq8(base) -> Sq8Index:
+    """Quantize an (n, d) float base to the sq8 scorer's state."""
+    b = jnp.asarray(base, jnp.float32)
+    mn = b.min(axis=0)
+    rng = b.max(axis=0) - mn
+    scale = jnp.where(rng > 0, rng / 255.0, 1.0)
+    codes = jnp.clip(jnp.round((b - mn) / scale), 0, 255).astype(jnp.uint8)
+    return Sq8Index(codes=codes, scale=scale, mn=mn)
 
 
 class Scorer(Protocol):
@@ -48,6 +80,13 @@ class Scorer(Protocol):
     def scale_comps(self, state, n_comps, d: int):
         """Convert the loop's scored-id count into the paper's full-d
         comparison currency."""
+        ...
+
+    def scored_bytes(self, state, n_raw, d: int):
+        """Convert the loop's RAW scored-id count into bytes of base
+        representation fetched — the ladder's memory-traffic currency
+        (``SearchResult.bytes_touched``, DESIGN.md §15): 4d per vertex for
+        exact, d for sq8, M for pq."""
         ...
 
 
@@ -87,6 +126,35 @@ class _ExactScorer:
     def scale_comps(self, state, n_comps, d):
         return n_comps
 
+    def scored_bytes(self, state, n_raw, d):
+        return n_raw * (4 * d)
+
+
+@register_scorer
+class _Sq8Scorer:
+    name = "sq8"
+    needs_rerank = True
+    needs_base = False  # scores the uint8 table from scorer_state
+
+    def score(self, state, queries, base, ids, visited, *, metric, r_tile):
+        from repro.kernels import ops
+
+        if state is None:
+            raise ValueError(
+                "scorer='sq8' needs a (codes, scale, mn) scorer_state — "
+                "build it via Searcher.scorer_state / core.scorers.build_sq8"
+            )
+        codes, scale, mn = state
+        return ops.gather_sq8_masked(queries, ids, codes, scale, mn, visited,
+                                     metric=metric, r_tile=r_tile)
+
+    def scale_comps(self, state, n_comps, d):
+        # d uint8 bytes fetched per scored vertex vs 4d float bytes exact
+        return n_comps // 4
+
+    def scored_bytes(self, state, n_raw, d):
+        return n_raw * d
+
 
 @register_scorer
 class _PQScorer:
@@ -109,3 +177,7 @@ class _PQScorer:
     def scale_comps(self, state, n_comps, d):
         codes, _ = state
         return (n_comps * codes.shape[1]) // d
+
+    def scored_bytes(self, state, n_raw, d):
+        codes, _ = state
+        return n_raw * codes.shape[1]

@@ -149,7 +149,7 @@ def shard_pq(base_shards: jax.Array, M: int = 8, K: int = 256,
 def distributed_search(
     queries: jax.Array,       # (Q, d) replicated
     base_shards: jax.Array,   # (P, n/P, d) sharded on axis 0 (device tier);
-                              # ignored under base_placement="host"
+                              # ignored under host/disk placements
     nbr_shards: jax.Array,    # (P, n/P, R) sharded on axis 0
     entry_ids: jax.Array,     # (P, Q, E) local entries per shard
     live_mask: jax.Array,     # (P,) bool — False = failed/straggler shard
@@ -183,7 +183,9 @@ def distributed_search(
     exact rerank + merge runs HERE, outside shard_map, against the one
     host-resident ``host_base`` — the merge currency is still exact
     distances, now paid for with host-gather bytes instead of per-shard HBM
-    residency."""
+    residency. base_placement="disk" (§15) is the same pipeline with the
+    global base behind mmap'd shards (pass a ``BaseStore`` built via
+    ``BaseStore.from_shards`` as ``host_base``, or an array to spill)."""
     if base_placement == "device":
         return _distributed_search_device(
             queries, base_shards, nbr_shards, entry_ids, live_mask,
@@ -193,13 +195,14 @@ def distributed_search(
         )
     check_placement(base_placement)
     if pq_codebooks is None or pq_codes is None:
-        raise ValueError("base_placement='host' traverses per-shard code "
-                         "tables: pass scorer='pq' with pq_codebooks/"
-                         "pq_codes (see shard_pq)")
+        raise ValueError(f"base_placement={base_placement!r} traverses "
+                         "per-shard code tables: pass scorer='pq' with "
+                         "pq_codebooks/pq_codes (see shard_pq)")
     if host_base is None:
-        raise ValueError("base_placement='host' needs host_base= (the "
-                         "global float base, host-resident)")
-    store = BaseStore.wrap(host_base, "host")
+        raise ValueError(f"base_placement={base_placement!r} needs "
+                         "host_base= (the global float base: a host array, "
+                         "or a BaseStore over mmap'd shards)")
+    store = BaseStore.wrap(host_base, base_placement)
     spec = SearchSpec(ef=ef, k=k, metric=metric, expand_width=expand_width,
                       r_tile=r_tile, scorer=scorer, rerank=rerank,
                       base_placement=base_placement)

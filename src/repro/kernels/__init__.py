@@ -1,6 +1,7 @@
 from . import ops, ref  # noqa: F401
 from .distance_matrix import distance_matrix  # noqa: F401
 from .gather_adc import gather_adc_masked  # noqa: F401
+from .gather_sq8 import gather_sq8_masked  # noqa: F401
 from .gather_distance import gather_distance, gather_distance_masked  # noqa: F401
 from .pq_adc import pq_adc  # noqa: F401
 from .flash_attention import flash_attention  # noqa: F401

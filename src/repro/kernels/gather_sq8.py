@@ -1,0 +1,125 @@
+"""Fused gather + scalar-quantized distance Pallas kernel (DESIGN.md §15).
+
+The 4x middle rung of the quantization ladder: the base is stored as an
+(n, d) uint8 table with per-dimension affine dequantization params
+(``scale``/``mn``, each (d,)), so a scored vertex costs d bytes of HBM
+traffic instead of 4d (exact) while keeping full-rank geometry — unlike PQ
+there is no subspace factorization, so recall sits between exact and pq at
+every d (the property ``pq_sweep`` tracks).
+
+Layout is the exact kernel's (``gather_distance``): grid = (Q, R/R_tile),
+the uint8 table stays in HBM (``pl.ANY``), each grid step issues R_tile row
+DMAs into a double-buffered (2, R_tile, d) VMEM scratch, dequantizes the
+tile on the VPU (one fused multiply-add against the VMEM-resident (1, d)
+scale/min rows), and reduces against the query with the same MXU
+contraction + metric epilogue as the float kernel.
+
+The mask epilogue is shared verbatim: padding ids (< 0) and bitmap-visited
+ids come back as (+inf, INVALID), so ``beam_search._step`` consumes
+(dists, masked ids) directly regardless of the scorer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .gather_distance import (
+    DEFAULT_R_TILE,
+    _pad_ids,
+    _tile_distances,
+    fetch_rows_double_buffered,
+    mask_epilogue,
+)
+
+
+def _gs_tiled_kernel(
+    # scalar prefetch
+    ids_sref,
+    # inputs
+    idv_ref,
+    q_ref,
+    sc_ref,
+    mn_ref,
+    vis_ref,
+    codes_ref,
+    # outputs
+    d_ref,
+    oid_ref,
+    # scratch
+    rows,
+    sems,
+    *,
+    metric: str,
+    r_tile: int,
+):
+    slot = fetch_rows_double_buffered(ids_sref, codes_ref, rows, sems, r_tile)
+    q = q_ref[...].astype(jnp.float32)                     # (1, d)
+    tile = rows[pl.ds(slot, 1)][0].astype(jnp.float32)     # (R_tile, d)
+    tile = tile * sc_ref[...] + mn_ref[...]                # dequant, VPU FMA
+    d = _tile_distances(q, tile, metric)                   # (1, R_tile)
+    mask_epilogue(idv_ref[...], d, d_ref, oid_ref, vis_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "r_tile", "interpret")
+)
+def gather_sq8_masked(
+    queries: jax.Array,
+    ids: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    mn: jax.Array,
+    visited: jax.Array,
+    metric: str = "l2",
+    r_tile: int = DEFAULT_R_TILE,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused uint8 row gather + dequantized distance + visited/validity mask.
+
+    ids (Q, R) into codes (n, d) uint8 with dequant params scale/mn (d,),
+    visited the beam's (Q, ceil(n/32)) uint32 bitmap. Returns
+    (dists (Q, R), masked ids (Q, R)): padding (< 0) or already-visited
+    entries come back as (+inf, INVALID).
+    """
+    Q, d = queries.shape
+    R = ids.shape[1]
+    rt = max(1, min(r_tile, R))
+    ids_p, Rp = _pad_ids(ids, rt)
+    sc2 = jnp.asarray(scale, jnp.float32).reshape(1, d)
+    mn2 = jnp.asarray(mn, jnp.float32).reshape(1, d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, Rp // rt),
+        in_specs=[
+            pl.BlockSpec((1, rt), lambda q, t, ids: (q, t)),   # ids tile
+            pl.BlockSpec((1, d), lambda q, t, ids: (q, 0)),    # query row
+            pl.BlockSpec((1, d), lambda q, t, ids: (0, 0)),    # dequant scale
+            pl.BlockSpec((1, d), lambda q, t, ids: (0, 0)),    # dequant min
+            pl.BlockSpec(
+                (1, visited.shape[1]), lambda q, t, ids: (q, 0)
+            ),                                                 # visited row
+            pl.BlockSpec(memory_space=pltpu.ANY),              # codes, HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rt), lambda q, t, ids: (q, t)),
+            pl.BlockSpec((1, rt), lambda q, t, ids: (q, t)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, rt, d), codes.dtype),
+            pltpu.SemaphoreType.DMA((2, rt)),
+        ],
+    )
+    dists, oids = pl.pallas_call(
+        functools.partial(_gs_tiled_kernel, metric=metric, r_tile=rt),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, Rp), jnp.float32),
+            jax.ShapeDtypeStruct((Q, Rp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids_p, ids_p, queries, sc2, mn2, visited, codes)
+    return dists[:, :R], oids[:, :R]

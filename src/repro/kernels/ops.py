@@ -23,6 +23,7 @@ from .gather_distance import DEFAULT_R_TILE
 from .gather_adc import gather_adc_masked as _gam_pallas
 from .gather_distance import gather_distance as _gd_pallas
 from .gather_distance import gather_distance_masked as _gdm_pallas
+from .gather_sq8 import gather_sq8_masked as _gsm_pallas
 from .pq_adc import pq_adc as _adc_pallas
 
 # Bases at or below this row count take the one-hot-matmul gather: the
@@ -102,6 +103,25 @@ def gather_adc_masked(ids, codes, luts, visited, r_tile: int = 0):
         return ref.gather_adc_masked_ref(ids, codes, luts, visited)
     return _gam_pallas(
         ids, codes, luts, visited,
+        r_tile=(r_tile or DEFAULT_R_TILE), interpret=(mode == "interpret"),
+    )
+
+
+def gather_sq8_masked(queries, ids, codes, scale, mn, visited,
+                      metric: str = "l2", r_tile: int = 0):
+    """Fused uint8 gather + dequantized distance + visited/validity mask.
+
+    The scalar-quantized rung of the ladder (DESIGN.md §15): ids (Q, R) are
+    scored against the (n, d) uint8 table dequantized per-dimension with
+    scale/mn (d,) — d bytes fetched per vertex, full-rank geometry. Same
+    (+inf, INVALID) contract as ``gather_distance_masked``.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return ref.gather_sq8_masked_ref(queries, ids, codes, scale, mn,
+                                         visited, metric)
+    return _gsm_pallas(
+        queries, ids, codes, scale, mn, visited, metric=metric,
         r_tile=(r_tile or DEFAULT_R_TILE), interpret=(mode == "interpret"),
     )
 

@@ -114,6 +114,42 @@ def gather_adc_masked_ref(
     return gather_adc_ref(masked, codes, luts), masked
 
 
+def gather_sq8_ref(
+    queries: jax.Array,
+    ids: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    mn: jax.Array,
+    metric: str = "l2",
+) -> jax.Array:
+    """ids (Q, R) into an (n, d) uint8 scalar-quantized table with per-dim
+    affine params scale/mn (d,) -> (Q, R) distances on the dequantized rows
+    ``codes * scale + mn``.
+
+    The 4x middle rung of the quantization ladder: d bytes fetched per
+    scored vertex (vs 4d exact, M for PQ), full-rank geometry retained.
+    Padding ids (< 0) produce +inf.
+    """
+    rows = codes[jnp.maximum(ids, 0)].astype(jnp.float32)       # (Q, R, d)
+    rows = rows * scale.astype(jnp.float32) + mn.astype(jnp.float32)
+    return _distances_from_rows(queries, ids, rows, metric)
+
+
+def gather_sq8_masked_ref(
+    queries: jax.Array,
+    ids: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    mn: jax.Array,
+    visited: jax.Array,
+    metric: str = "l2",
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused sq8 kernel: (dists, masked ids) where padding
+    and bitmap-visited entries come back as (+inf, -1)."""
+    masked = visited_mask_ref(ids, visited)
+    return gather_sq8_ref(queries, masked, codes, scale, mn, metric), masked
+
+
 def pq_adc_ref(codes: jax.Array, lut: jax.Array) -> jax.Array:
     """codes (n, M) uint8/int32, lut (M, K) f32 -> (n,) ADC scores.
 

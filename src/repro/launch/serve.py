@@ -208,17 +208,20 @@ def serve_ann(args) -> None:
                       entry=args.entry, r_tile=args.r_tile,
                       scorer=args.scorer, pq_m=args.pq_m, rerank=args.rerank,
                       base_placement=args.base_placement,
+                      store_dtype=args.store_dtype,
                       term=args.term, stable_steps=args.stable_steps,
                       restarts=args.restarts)
-    if args.base_placement == "host" and args.scorer != "pq":
-        raise SystemExit("--base-placement host traverses device-resident "
-                         "PQ codes; add --scorer pq")
-    if args.base_placement == "host":
-        # the float base moves to host up front; from here the device only
-        # ever sees the code table, the adjacency, and per-batch rerank rows
-        store = searcher.base_store("host")
-        print(f"[serve-ann] base host-resident: {store.nbytes / 2**20:.1f} "
-              f"MiB off-device; device keeps codes + adjacency")
+    if args.base_placement != "device" and args.scorer == "exact":
+        raise SystemExit(f"--base-placement {args.base_placement} traverses "
+                         "device-resident compressed codes; add --scorer pq "
+                         "or --scorer sq8")
+    if args.base_placement != "device":
+        # the float base moves off-device up front; from here the device
+        # only ever sees the code table, adjacency, and per-batch rerank rows
+        store = searcher.base_store(args.base_placement, args.store_dtype)
+        print(f"[serve-ann] base {args.base_placement}-resident "
+              f"({args.store_dtype}): {store.nbytes / 2**20:.1f} MiB "
+              f"off-device; device keeps codes + adjacency")
     if args.scorer == "pq":
         t0 = time.time()
         attached = searcher.pq
@@ -278,11 +281,11 @@ def serve_ann(args) -> None:
           f"mode={mode}: {served} queries in {dt*1e3:.0f} ms "
           f"({served/dt:.0f} qps), recall@1={recall:.3f}, "
           f"comps/query={comps:.0f}")
-    if args.base_placement == "host":
-        store = searcher.base_store("host")
-        print(f"[serve-ann] host tier: "
+    if args.base_placement != "device":
+        store = searcher.base_store(args.base_placement, args.store_dtype)
+        print(f"[serve-ann] {args.base_placement} tier: "
               f"{store.gathered_bytes / max(served, 1) / 1024:.1f} KiB "
-              f"host-gathered/query ({store.gathered_rows} rerank rows "
+              f"gathered/query ({store.gathered_rows} rerank rows "
               f"total) vs {store.nbytes / 2**20:.1f} MiB base kept "
               f"off-device")
 
@@ -336,8 +339,8 @@ def main() -> None:
     ap.add_argument("--r-tile", type=int, default=0,
                     help="[ann] gather-kernel neighbor tile (0 = default)")
     ap.add_argument("--scorer", default="exact",
-                    help="[ann] per-hop scorer: exact|pq (pq = compressed "
-                         "ADC traversal + exact rerank)")
+                    help="[ann] per-hop scorer: exact|sq8|pq (sq8/pq = "
+                         "compressed traversal + exact rerank)")
     ap.add_argument("--pq-m", type=int, default=8,
                     help="[ann] PQ sub-vectors = code bytes/vector")
     ap.add_argument("--rerank", type=int, default=0,
@@ -347,10 +350,14 @@ def main() -> None:
                     help="[ann] split batches into this many queries per "
                          "streamed tile (0 = one monolithic search per batch)")
     ap.add_argument("--base-placement", default="device",
-                    choices=["device", "host"],
-                    help="[ann] where the float base lives (DESIGN.md §9): "
-                         "host keeps only PQ codes + adjacency on device and "
-                         "gathers rerank rows from host (needs --scorer pq)")
+                    choices=["device", "host", "disk"],
+                    help="[ann] where the float base lives (DESIGN.md §9/§15)"
+                         ": host/disk keep only compressed codes + adjacency "
+                         "on device and gather rerank rows from the tier "
+                         "(needs --scorer pq or sq8)")
+    ap.add_argument("--store-dtype", default="f32", choices=["f32", "bf16"],
+                    help="[ann] residual storage dtype for host/disk tiers "
+                         "(bf16 = half the rerank bandwidth, DESIGN.md §15)")
     ap.add_argument("--serve", action="store_true",
                     help="[ann] open-loop serving mode (DESIGN.md §11): "
                          "ragged Poisson request traffic through the "

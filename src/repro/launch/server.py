@@ -98,7 +98,7 @@ class Request:
     ids: np.ndarray | None = None       # (q, k) answers, real rows only
     dists: np.ndarray | None = None     # (q, k)
     n_comps: np.ndarray | None = None   # (q,)
-    host_bytes: np.ndarray | None = None
+    bytes_touched: np.ndarray | None = None  # (q,) scored + rerank bytes (§15)
 
     @property
     def latency_s(self) -> float:
@@ -169,8 +169,10 @@ class AnnServer:
         searcher.prepare(spec)
         if spec.scorer == "pq":
             searcher.pq_index(spec)
-        if spec.base_placement == "host":
-            searcher.base_store("host")
+        elif spec.scorer == "sq8":
+            searcher.sq8_index()
+        if spec.base_placement != "device":
+            searcher.base_store(spec.base_placement, spec.store_dtype)
 
     # -- bucketing ------------------------------------------------------------
 
@@ -392,8 +394,8 @@ class AnnServer:
         req.ids = np.asarray(res.ids)[:qn]
         req.dists = np.asarray(res.dists)[:qn]
         req.n_comps = np.asarray(res.n_comps)[:qn]
-        hb = np.asarray(res.host_bytes)
-        req.host_bytes = hb[:qn] if hb.ndim else None
+        bt = np.asarray(res.bytes_touched)
+        req.bytes_touched = bt[:qn] if bt.ndim else None
         self.completed.append(req)
 
     # -- rollups --------------------------------------------------------------

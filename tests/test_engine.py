@@ -317,6 +317,78 @@ def test_search_stream_matches_monolithic_pq(world):
                                   np.asarray(stream.n_comps))
 
 
+# -- sq8: the scalar-quantized middle rung of the ladder (DESIGN.md §15) ------
+
+
+def test_sq8_recall_sandwich(world):
+    """The ladder's ordering at equal ef and shared seeds: sq8 traversal
+    (full-rank geometry, d bytes/vertex) recalls at least as well as pq
+    (M bytes/vertex) within slack and at most exact, while its scored-base
+    traffic sits ~4x below the exact scorer's 4d bytes/vertex."""
+    base, queries, gd, idx, gt = world
+    searcher = Searcher.from_hnsw(base, idx)
+    spec = SearchSpec(ef=48, k=1, entry="projection")
+    ent, extra = searcher.seed(queries, spec)
+    specs = {
+        "exact": spec,
+        "sq8": spec._replace(scorer="sq8"),
+        "pq": spec._replace(**PQ_TEST_SPEC),
+    }
+    runs = {
+        sc: searcher.search(queries, s, entries=ent, entry_comps=extra)
+        for sc, s in specs.items()
+    }
+    rec = {sc: float((r.ids[:, 0] == gt[:, 0]).mean())
+           for sc, r in runs.items()}
+    assert rec["pq"] - 0.02 <= rec["sq8"] <= rec["exact"] + 0.02, rec
+    # scored share: sq8 bills d bytes/vertex vs exact's 4d. Back the rerank
+    # rows (all ef survivors at 4d each, rerank=0) out of the sq8 bill; the
+    # traversals differ slightly so gate the 4x at a 3x floor on means.
+    d = base.shape[1]
+    sq8_scored = np.asarray(runs["sq8"].bytes_touched) - 48 * d * 4
+    assert (sq8_scored > 0).all()
+    assert sq8_scored.mean() * 3.0 < np.asarray(
+        runs["exact"].bytes_touched).mean()
+    # rerank restored exact distances
+    nn = np.asarray(base)[np.asarray(runs["sq8"].ids[:, 0])]
+    d0 = ((np.asarray(queries) - nn) ** 2).sum(-1)
+    np.testing.assert_allclose(np.asarray(runs["sq8"].dists[:, 0]), d0,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_search_stream_matches_monolithic_sq8(world):
+    """Streaming under scorer='sq8' bit-matches the monolithic batch — the
+    shared uint8 table and per-dim dequant params are deterministic, so
+    tiling stays a throughput choice on the middle rung too."""
+    base, queries, gd, idx, _ = world
+    searcher = Searcher.from_graph(base, gd)
+    spec = SearchSpec(ef=32, k=2, entry="projection", scorer="sq8")
+    mono = searcher.search(queries, spec)
+    stream = searcher.search_stream(queries, spec, tile_q=10)
+    np.testing.assert_array_equal(np.asarray(mono.ids),
+                                  np.asarray(stream.ids))
+    np.testing.assert_array_equal(np.asarray(mono.dists),
+                                  np.asarray(stream.dists))
+    np.testing.assert_array_equal(np.asarray(mono.n_comps),
+                                  np.asarray(stream.n_comps))
+    np.testing.assert_array_equal(np.asarray(mono.bytes_touched),
+                                  np.asarray(stream.bytes_touched))
+
+
+def test_sq8_index_is_lazy_and_cached(world):
+    """The uint8 table trains once per searcher (deterministic min/max scan)
+    and is reused across searches — same object, same results."""
+    base, queries, gd, idx, _ = world
+    searcher = Searcher.from_graph(base, gd, key=jax.random.PRNGKey(7))
+    spec = SearchSpec(ef=32, k=2, entry="projection", scorer="sq8")
+    a = searcher.search(queries, spec)
+    first = searcher.sq8_index()
+    b = searcher.search(queries, spec)
+    assert searcher.sq8_index() is first
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+
+
 def test_pq_search_matches_golden(world):
     """Determinism lock: a freshly trained PQ engine (k-means re-seeding
     folds the iteration index) reproduces the committed pq_* outputs

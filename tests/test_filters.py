@@ -288,6 +288,42 @@ def test_filter_values_do_not_recompile(world):
     assert len(searcher._filters) >= 6
 
 
+def test_filter_cache_lru_eviction_and_recompile(world):
+    """The compiled-filter cache is a bounded LRU (filter_cache_size,
+    default 64): distinct filter values evict oldest-first past the bound,
+    touching a resident entry refreshes it, and an evicted filter costs
+    exactly one recompile when it returns — operand memory stays O(bound),
+    not O(distinct filters ever seen)."""
+    searcher, _, queries, _ = world
+    spec = _spec(searcher)
+    key = jax.random.PRNGKey(33)
+    q = jnp.asarray(queries[:4])
+    old_cap = searcher.filter_cache_size
+    searcher._filters.clear()
+    searcher.filter_cache_size = 4
+    try:
+        filters = [FilterSpec(tenant=t % N_TENANTS, tags_any=(t,))
+                   for t in range(6)]
+        base_compiles = searcher.filter_compiles
+        for f in filters:
+            searcher.search(q, spec._replace(filter=f), key)
+        assert searcher.filter_compiles == base_compiles + 6
+        assert list(searcher._filters) == filters[2:]  # oldest two evicted
+        # resident hit: no recompile, entry moves to most-recent
+        searcher.search(q, spec._replace(filter=filters[2]), key)
+        assert searcher.filter_compiles == base_compiles + 6
+        assert next(iter(reversed(searcher._filters))) == filters[2]
+        # an evicted filter recompiles once and displaces the current LRU
+        searcher.search(q, spec._replace(filter=filters[0]), key)
+        assert searcher.filter_compiles == base_compiles + 7
+        assert len(searcher._filters) == 4
+        assert filters[3] not in searcher._filters
+        assert filters[0] in searcher._filters
+    finally:
+        searcher.filter_cache_size = old_cap
+        searcher._filters.clear()
+
+
 # -- served parity -----------------------------------------------------------
 
 

@@ -342,3 +342,181 @@ def test_save_replaces_existing_artifact_atomically(world, built, tmp_path):
     assert not np.array_equal(np.asarray(first.neighbors),
                               np.asarray(second.neighbors))
     assert [p for p in os.listdir(tmp_path) if p.endswith(".tmp")] == []
+
+
+# -- v4: sharded base + disk tier substrate + OPQ rotation (DESIGN.md §15) ----
+
+
+def test_sharded_artifact_roundtrip_bit_identical(world, built, tmp_path):
+    """shard_rows moves the base into sibling .npy files the manifest names;
+    the loaded artifact searches bit-identically to the unsharded build."""
+    base, queries = world
+    res = built["pq_device"]
+    spec = SearchSpec(ef=32, k=2, entry="projection", **PQ_SEARCH)
+    want = Searcher.from_build(base, res,
+                               key=jax.random.PRNGKey(23)).search(queries,
+                                                                  spec)
+    path = rio.save_index(
+        os.path.join(tmp_path, "sharded"),
+        rio.IndexArtifact.from_build(base, res, metric="l2",
+                                     key=jax.random.PRNGKey(23)),
+        shard_rows=300,
+    )
+    names = rio.shard_file_names(path, 3)          # 800 rows -> 300/300/200
+    assert all(os.path.exists(os.path.join(tmp_path, f)) for f in names)
+    blob = np.load(path, allow_pickle=False)
+    assert "base" not in blob.files                # base left the npz
+    m = json.loads(str(blob["manifest"][()]))
+    assert m["shards"] == {"files": names, "rows": [300, 300, 200],
+                           "dtype": "f32"}
+    got = rio.load_index(path).to_searcher().search(queries, spec)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(want.dists),
+                                  np.asarray(got.dists))
+    np.testing.assert_array_equal(np.asarray(want.n_comps),
+                                  np.asarray(got.n_comps))
+
+
+def test_open_base_shards_feeds_disk_store(world, built, tmp_path):
+    """The serving path: open_base_shards mmaps the shard set and
+    BaseStore.from_shards adopts it without copying — gathers across shard
+    boundaries reproduce the original rows."""
+    from repro.core.base_store import BaseStore
+
+    base, _ = world
+    path = rio.save_index(
+        os.path.join(tmp_path, "mm"),
+        rio.IndexArtifact.from_build(base, built["flat"], metric="l2"),
+        shard_rows=300,
+    )
+    shards, dt = rio.open_base_shards(path)
+    assert dt == "f32" and len(shards) == 3
+    store = BaseStore.from_shards(shards, dt)
+    assert (store.n, store.d) == (800, 16)
+    ids = jnp.asarray([[0, 299, 300, 799]], jnp.int32)
+    rows, nbytes = store.gather(ids)
+    np.testing.assert_allclose(np.asarray(rows)[0],
+                               np.asarray(base)[[0, 299, 300, 799]],
+                               rtol=1e-6)
+    assert int(np.asarray(nbytes)[0]) > 0
+    # unsharded artifacts refuse the mmap path with a pointed message
+    flat = rio.save_index(os.path.join(tmp_path, "nosh"),
+                          rio.IndexArtifact.from_build(base, built["flat"],
+                                                       metric="l2"))
+    with pytest.raises(ValueError, match="not sharded"):
+        rio.open_base_shards(flat)
+
+
+def test_bf16_shards_halve_disk_bytes(world, built, tmp_path):
+    """shard_dtype='bf16' stores half-width residuals: shard files shrink,
+    from_shards serves 2d-byte rows, and load_index dequantizes to f32
+    within bf16 rounding."""
+    from repro.core.base_store import BaseStore
+
+    base, _ = world
+    art = rio.IndexArtifact.from_build(base, built["flat"], metric="l2")
+    p32 = rio.save_index(os.path.join(tmp_path, "w32"), art, shard_rows=400)
+    p16 = rio.save_index(os.path.join(tmp_path, "w16"), art, shard_rows=400,
+                         shard_dtype="bf16")
+    s32 = os.path.getsize(os.path.join(tmp_path,
+                                       rio.shard_file_names(p32, 2)[0]))
+    s16 = os.path.getsize(os.path.join(tmp_path,
+                                       rio.shard_file_names(p16, 2)[0]))
+    assert s16 < s32  # 400*16 rows at 2 vs 4 bytes/elem (+ equal headers)
+    shards, dt = rio.open_base_shards(p16)
+    assert dt == "bf16"
+    assert BaseStore.from_shards(shards, dt).row_bytes == 16 * 2
+    loaded = rio.load_index(p16)
+    assert loaded.base.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(loaded.base), np.asarray(base),
+                               atol=0.5 / 128)  # bf16: 8-bit mantissa
+
+
+def test_corrupt_shards_raise_named_error(world, built, tmp_path):
+    """A damaged shard set — truncated, missing, or shape-mismatched shard —
+    fails as CorruptArtifactError on BOTH the in-memory and mmap loaders,
+    never a raw numpy traceback."""
+    base, _ = world
+    art = rio.IndexArtifact.from_build(base, built["flat"], metric="l2")
+
+    def fresh(tag):
+        d = tmp_path / tag
+        d.mkdir()
+        p = rio.save_index(os.path.join(d, "a"), art, shard_rows=300)
+        return p, [os.path.join(d, f) for f in rio.shard_file_names(p, 3)]
+
+    path, shards = fresh("trunc")
+    blob = open(shards[1], "rb").read()
+    with open(shards[1], "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    for loader in (rio.load_index, rio.open_base_shards):
+        with pytest.raises(rio.CorruptArtifactError):
+            loader(path)
+
+    path, shards = fresh("missing")
+    os.unlink(shards[2])
+    for loader in (rio.load_index, rio.open_base_shards):
+        with pytest.raises(rio.CorruptArtifactError, match="missing"):
+            loader(path)
+
+    path, shards = fresh("shape")
+    np.save(shards[0], np.zeros((5, 16), np.float32))
+    for loader in (rio.load_index, rio.open_base_shards):
+        with pytest.raises(rio.CorruptArtifactError, match="disagrees"):
+            loader(path)
+
+
+def test_v3_artifact_loads_unchanged(world, built, tmp_path):
+    """Pre-shard artifacts (schema v3: base inside the npz, pq manifest
+    without a rotation flag) load bit-identically under the v4 loader."""
+    base, queries = world
+    res = built["pq_device"]
+    spec = SearchSpec(ef=32, k=2, entry="projection", **PQ_SEARCH)
+    want = Searcher.from_build(base, res,
+                               key=jax.random.PRNGKey(23)).search(queries,
+                                                                  spec)
+    path = rio.save_index(
+        os.path.join(tmp_path, "v3"),
+        rio.IndexArtifact.from_build(base, res, metric="l2",
+                                     key=jax.random.PRNGKey(23)),
+    )
+    blob = dict(np.load(path, allow_pickle=False))
+    m = json.loads(str(blob.pop("manifest")[()]))
+    m["version"] = 3
+    del m["shards"]            # v3 manifests predate the shard table...
+    del m["pq"]["rotation"]    # ...and the OPQ rotation flag
+    np.savez(path, manifest=np.array(json.dumps(m)), **blob)
+    art = rio.load_index(path)
+    assert art.version == 3 and art.pq.rotation is None
+    got = art.to_searcher().search(queries, spec)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(want.dists),
+                                  np.asarray(got.dists))
+    np.testing.assert_array_equal(np.asarray(want.n_comps),
+                                  np.asarray(got.n_comps))
+
+
+def test_opq_rotation_roundtrip(world, built, tmp_path):
+    """An attached OPQ table persists its learned rotation: the array
+    round-trips bit-exactly and rotated-query search replays unchanged."""
+    from repro.baselines.pq import build_opq, derive_opq_key
+
+    base, queries = world
+    key = jax.random.PRNGKey(23)
+    opq = build_opq(base, M=8, K=32, key=derive_opq_key(key))
+    s = Searcher.from_graph(base, built["gd"].graph, key=key, pq=opq)
+    spec = SearchSpec(ef=32, k=2, entry="projection", **PQ_SEARCH)
+    want = s.search(queries, spec)
+    path = rio.save_index(os.path.join(tmp_path, "opq"),
+                          rio.IndexArtifact.from_searcher(s))
+    m = json.loads(str(np.load(path)["manifest"][()]))
+    assert m["pq"] == {"m": 8, "k": 32, "rotation": True}
+    art = rio.load_index(path)
+    np.testing.assert_array_equal(np.asarray(art.pq.rotation),
+                                  np.asarray(opq.rotation))
+    got = art.to_searcher().search(queries, spec)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(want.dists),
+                                  np.asarray(got.dists))
+    np.testing.assert_array_equal(np.asarray(want.n_comps),
+                                  np.asarray(got.n_comps))

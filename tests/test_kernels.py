@@ -198,6 +198,106 @@ def test_ops_gather_adc_dispatch(monkeypatch):
     np.testing.assert_array_equal(np.asarray(pi), np.asarray(wi))
 
 
+# -- fused sq8 gather kernel: the scalar-quantized rung of the ladder --------
+
+
+def _sq8_world(Q, R, n, d, seed=0):
+    """queries/ids/visited plus a REAL scalar-quantized table (built from a
+    uniform base via core.scorers.build_sq8) — the exact state the engine
+    hands the kernel."""
+    from repro.core.scorers import build_sq8
+
+    k = jax.random.PRNGKey(seed + Q * R + d)
+    kq, kb, ki, kv = jax.random.split(k, 4)
+    base = jax.random.uniform(kb, (n, d), minval=-2.0, maxval=3.0)
+    queries = jax.random.normal(kq, (Q, d))
+    idx = build_sq8(base)
+    ids = jax.random.randint(ki, (Q, R), -1, n)
+    ids = ids.at[0].set(-1)  # one all-INVALID row (fully padded gather)
+    visited = jax.random.bits(kv, (Q, (n + 31) // 32), dtype=jnp.uint32)
+    return queries, ids, idx, visited
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize(
+    "Q,R,n,d,r_tile",
+    [
+        (4, 8, 64, 16, 3),      # R % r_tile != 0 (ragged last tile)
+        (5, 33, 256, 60, 8),    # R and d both off-tile
+        (2, 5, 300, 130, 16),   # r_tile > R (clamped to one tile)
+        (3, 24, 128, 200, 8),   # d not a multiple of 128
+    ],
+)
+def test_gather_sq8_masked_kernel(metric, Q, R, n, d, r_tile):
+    """Interpret-mode parity of the fused uint8-gather + dequant + distance +
+    mask kernel vs the jnp oracle — the same ragged/all-INVALID matrix the
+    exact and ADC gathers lock down."""
+    from repro.kernels import gather_sq8_masked
+
+    queries, ids, idx, visited = _sq8_world(Q, R, n, d)
+    gd, gi = gather_sq8_masked(queries, ids, idx.codes, idx.scale, idx.mn,
+                               visited, metric=metric, r_tile=r_tile,
+                               interpret=True)
+    wd, wi = ref.gather_sq8_masked_ref(queries, ids, idx.codes, idx.scale,
+                                       idx.mn, visited, metric)
+    np.testing.assert_allclose(gd, wd, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_gather_sq8_all_visited():
+    """A fully-visited bitmap drops every entry: (+inf, INVALID) across the
+    board — same stop-expanding contract as the exact and ADC kernels."""
+    from repro.kernels import gather_sq8_masked
+
+    queries, ids, idx, _ = _sq8_world(3, 9, 64, 16, seed=2)
+    visited = jnp.full((3, 2), jnp.uint32(0xFFFFFFFF))
+    gd, gi = gather_sq8_masked(queries, ids, idx.codes, idx.scale, idx.mn,
+                               visited, r_tile=4, interpret=True)
+    assert np.isinf(np.asarray(gd)).all()
+    assert (np.asarray(gi) == -1).all()
+
+
+def test_gather_sq8_dequant_error_bounded():
+    """The quantized distances track the exact ones to within the lattice
+    step: u8 rounding perturbs each coordinate by <= scale/2, so l2 dists on
+    a [min,max]-ranged base stay within a d-scaled bound of exact."""
+    from repro.core.scorers import build_sq8
+    from repro.kernels import gather_sq8_masked
+
+    k = jax.random.PRNGKey(7)
+    base = jax.random.uniform(k, (128, 32))
+    queries = jax.random.normal(jax.random.fold_in(k, 1), (4, 32))
+    idx = build_sq8(base)
+    ids = jnp.tile(jnp.arange(16, dtype=jnp.int32)[None], (4, 1))
+    visited = jnp.zeros((4, 4), jnp.uint32)
+    gd, _ = gather_sq8_masked(queries, ids, idx.codes, idx.scale, idx.mn,
+                              visited, interpret=True)
+    want = ref.gather_distance_ref(queries, ids, base, "l2")
+    # worst-case per-dim dequant error is scale/2 ~= 1/510 on uniform [0,1)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(want), atol=0.05)
+
+
+def test_ops_gather_sq8_dispatch(monkeypatch):
+    """ops.gather_sq8_masked serves the ref oracle in ref mode and the Pallas
+    body under REPRO_PALLAS=interpret, matching to float tolerance."""
+    from repro.kernels import ops
+
+    queries, ids, idx, visited = _sq8_world(4, 6, 100, 8, seed=3)
+    monkeypatch.setenv("REPRO_PALLAS", "ref")
+    rd, ri = ops.gather_sq8_masked(queries, ids, idx.codes, idx.scale,
+                                   idx.mn, visited)
+    wd, wi = ref.gather_sq8_masked_ref(queries, ids, idx.codes, idx.scale,
+                                       idx.mn, visited, "l2")
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(wi))
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    pd, pi = ops.gather_sq8_masked(queries, ids, idx.codes, idx.scale,
+                                   idx.mn, visited)
+    np.testing.assert_allclose(np.asarray(pd), np.asarray(wd), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(wi))
+
+
 @pytest.mark.parametrize("n,M,K", [(64, 8, 256), (1000, 16, 256), (7, 4, 16)])
 def test_pq_adc(n, M, K):
     k = jax.random.PRNGKey(n)

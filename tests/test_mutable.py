@@ -124,16 +124,17 @@ def test_compact_bit_matches_fresh_build_of_survivors(points, built):
     assert cres.report.inserts == 40 and cres.report.staleness > 0
 
 
-SCORER_PLACEMENTS = [("exact", "device"), ("pq", "device"), ("pq", "host")]
+SCORER_PLACEMENTS = [("exact", "device"), ("pq", "device"), ("pq", "host"),
+                     ("pq", "disk"), ("sq8", "disk")]
 
 
 @pytest.mark.parametrize("scorer,placement", SCORER_PLACEMENTS,
                          ids=[f"{s}-{p}" for s, p in SCORER_PLACEMENTS])
 def test_tombstoned_ids_never_served(points, mutated, scorer, placement):
     """No answer may name a deleted vertex — under the exact scorer AND the
-    compressed-traversal scorer on both base placements (the tombstone
-    bitmap rides the mask epilogue of gather_distance_masked and
-    gather_adc_masked alike)."""
+    compressed-traversal scorers on every base placement (the tombstone
+    bitmap rides the mask epilogue of gather_distance_masked,
+    gather_adc_masked, and gather_sq8_masked alike)."""
     base, key = points
     midx, _spec, dead, _ = mutated
     queries = jnp.asarray(np.asarray(
@@ -143,14 +144,47 @@ def test_tombstoned_ids_never_served(points, mutated, scorer, placement):
     searcher = midx.searcher()
     if scorer == "pq":
         searcher.pq_index(sspec)
-    if placement == "host":
-        searcher.base_store("host")
+    if placement != "device":
+        searcher.base_store(placement)
     res = searcher.search(queries, sspec, jax.random.fold_in(key, 4))
     ids = np.asarray(res.ids)
     assert (ids != INVALID).any(), "searches returned nothing at all"
     assert not np.isin(ids[ids != INVALID], dead).any()
     # unallocated capacity slots are tombstoned too
     assert ids.max() < midx.n_alloc
+
+
+def test_disk_tier_full_mutable_lifecycle(points, built):
+    """§15 acceptance: the disk-backed rerank tier serves BIT-identical
+    ids/dists/n_comps to device through a full insert -> delete -> compact
+    lifecycle (the spilled shard set tracks every base the mutable index
+    serves, and tombstones deny on disk exactly as on device)."""
+    base, key = points
+    midx, spec, dead, _ = _mutate(points, built)
+    queries = jnp.asarray(np.asarray(
+        jax.random.uniform(jax.random.fold_in(key, 21), (12, D)), np.float32))
+    sspec = SearchSpec(ef=32, k=4, entry="random", scorer="pq",
+                       pq_m=4, pq_k=16)
+
+    def disk_matches_device(s):
+        skey = jax.random.fold_in(key, 22)
+        dev = s.search(queries, sspec, skey)
+        dsk = s.search(queries, sspec._replace(base_placement="disk"), skey)
+        np.testing.assert_array_equal(np.asarray(dev.ids),
+                                      np.asarray(dsk.ids))
+        np.testing.assert_array_equal(np.asarray(dev.dists),
+                                      np.asarray(dsk.dists))
+        np.testing.assert_array_equal(np.asarray(dev.n_comps),
+                                      np.asarray(dsk.n_comps))
+        assert (np.asarray(dsk.bytes_touched) > 0).all()
+        s.base_store("disk").close()  # free the spilled shard dir
+        return np.asarray(dsk.ids)
+
+    ids = disk_matches_device(midx.searcher())
+    # tombstones deny on the disk tier too (ids are pre-compact numbering)
+    assert not np.isin(ids[ids != INVALID], dead).any()
+    midx.compact(spec, jax.random.fold_in(key, 23))
+    disk_matches_device(midx.searcher())
 
 
 def test_all_zero_tombstone_bitmap_is_identity(points):
